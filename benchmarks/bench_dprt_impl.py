@@ -1,0 +1,46 @@
+"""Implementation shoot-out at the paper's N=251: gather (systolic analog)
+vs Horner shift-add (paper dataflow) vs strip decomposition (H sweep) vs
+the Pallas kernel (interpret mode).  This is the measurement harness the
+§Perf hillclimb of the DPRT cell iterates with."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dprt import dprt
+from repro.kernels import dprt_pallas
+
+from .common import emit, time_jax
+
+
+def main() -> None:
+    n = 251
+    rng = np.random.default_rng(0)
+    f = jnp.asarray(rng.integers(0, 256, (n, n)), jnp.int32)
+
+    base = time_jax(jax.jit(lambda x: dprt(x, method="gather")), f)
+    emit("dprt_impl/gather/N251", base, "systolic-analog baseline")
+    horner = time_jax(jax.jit(lambda x: dprt(x, method="horner")), f)
+    emit("dprt_impl/horner/N251", horner,
+         f"speedup_vs_gather={base / horner:.2f}")
+    for h in [2, 16, 64, 128]:
+        us = time_jax(jax.jit(
+            lambda x, hh=h: dprt(x, method="strips", strip_rows=hh)), f)
+        emit(f"dprt_impl/strips_H{h}/N251", us,
+             f"speedup_vs_gather={base / us:.2f}")
+    us = time_jax(jax.jit(
+        lambda x: dprt_pallas(x, strip_rows=16, m_block=32)), f, iters=3)
+    emit("dprt_impl/pallas_interp/N251", us,
+         "python-interpret mode (correctness path; perf on real TPU)")
+
+    # batched service throughput (the FPGA-coprocessor comparison point,
+    # Sec. V-B: CPU ~1.48ms/image for the adds alone)
+    fb = jnp.asarray(rng.integers(0, 256, (16, n, n)), jnp.int32)
+    from repro.core.dprt import dprt_batched
+    us = time_jax(jax.jit(lambda x: dprt_batched(x, method="horner")), fb,
+                  iters=3)
+    emit("dprt_impl/batched16/N251", us,
+         f"imgs_per_s={16 / (us / 1e6):.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""System-level harness: smoke-scale train-step and decode throughput for
+representative architectures on this host (framework sanity, not TPU perf)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import Model
+from repro.parallel.sharding import init_params
+
+from .common import emit, time_jax
+
+
+def main() -> None:
+    rng = np.random.default_rng(0)
+    for arch in ["tinyllama_1_1b", "qwen3_moe_235b_a22b", "mamba2_2_7b"]:
+        cfg = get_smoke_config(arch)
+        model = Model(cfg)
+        params = init_params(model.specs(), jax.random.key(0), jnp.float32)
+        b, s = 4, 64
+        batch = {"tokens": jnp.asarray(
+                     rng.integers(0, cfg.vocab_size, (b, s))),
+                 "labels": jnp.asarray(
+                     rng.integers(0, cfg.vocab_size, (b, s)))}
+        step = jax.jit(jax.value_and_grad(
+            lambda p: model.loss(p, batch)[0]))
+        us = time_jax(lambda p: step(p)[0], params, iters=3)
+        emit(f"lm/train_step/{arch}", us,
+             f"tokens_per_s={b * s / (us / 1e6):.0f}")
+
+        logits, cache = jax.jit(
+            lambda p, bb: model.prefill(p, bb, max_len=s + 8))(
+                params, {"tokens": batch["tokens"]})
+        dec = jax.jit(model.decode_step)
+        us = time_jax(lambda p: dec(p, cache, batch["tokens"][:, :1],
+                                    jnp.int32(s))[0], params, iters=3)
+        emit(f"lm/decode_step/{arch}", us,
+             f"tok_per_s={b / (us / 1e6):.0f}")
+
+
+if __name__ == "__main__":
+    main()

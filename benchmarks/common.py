@@ -1,0 +1,27 @@
+"""Shared benchmark helpers: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def time_jax(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median wall-time (us) of a jitted callable on current devices."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6

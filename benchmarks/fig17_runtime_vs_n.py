@@ -1,0 +1,34 @@
+"""Paper Fig. 17: running time vs N.  Cycle models for the hardware
+variants + *measured* wall-times of our JAX implementations on this host
+(the shape of the curves is the reproduction; absolute units differ)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import pareto as P
+from repro.core.dprt import dprt
+
+from .common import emit, time_jax
+
+
+def main() -> None:
+    for n in [31, 61, 127, 251]:
+        emit(f"fig17/model/serial/N{n}", P.cycles_serial(n), "cycles")
+        emit(f"fig17/model/systolic/N{n}", P.cycles_systolic(n), "cycles")
+        emit(f"fig17/model/sfdprt_H2/N{n}", P.cycles_sfdprt(n, 2), "cycles")
+        emit(f"fig17/model/sfdprt_H16/N{n}", P.cycles_sfdprt(n, 16),
+             "cycles")
+        emit(f"fig17/model/fdprt/N{n}", P.cycles_fdprt(n), "cycles")
+
+    rng = np.random.default_rng(0)
+    for n in [31, 127, 251]:
+        f = jnp.asarray(rng.integers(0, 256, (n, n)), jnp.int32)
+        for method, kw in [("gather", {}), ("horner", {}),
+                           ("strips", {"strip_rows": 16})]:
+            fn = jax.jit(lambda x, m=method, k=kw: dprt(x, method=m, **k))
+            us = time_jax(fn, f)
+            emit(f"fig17/measured/{method}/N{n}", us, "us_wall_cpu")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Paper Figs. 19/20: the Pareto front of running time vs resources over
+strip height H, plus our TPU-analog front (VMEM bytes / VPU ops)."""
+from repro.core import pareto as P
+
+from .common import emit
+
+
+def main() -> None:
+    n, b = 251, 8
+    front = P.pareto_front(n)
+    emit("fig19/front_size", len(front), f"H=2..{(n - 1) // 2}")
+    pts = P.pareto_points(n, b)
+    for p in pts[:: max(1, len(pts) // 12)]:
+        emit(f"fig19/H{p['h']}/cycles", p["cycles"], f"ff={p['ff']}")
+        emit(f"fig20/H{p['h']}/cycles", p["cycles"], f"fa={p['fa']}")
+    # dominance check: every listed point beats the systolic reference in
+    # cycles once its resources pass the systolic point (paper Sec. V-B)
+    systolic_c = P.cycles_systolic(n)
+    faster = [p for p in pts if p["cycles"] * 36 <= systolic_c]
+    emit("fig19/first_36x_H", faster[0]["h"] if faster else -1,
+         "paper quotes H=84 at ~36x")
+
+    # TPU-analog Pareto: (H, M) -> VMEM bytes vs total VPU ops
+    for h in [2, 4, 8, 16, 32, 64, 128, 251]:
+        c = P.tpu_strip_cost(n, h, 8)
+        emit(f"fig19/tpu_H{h}_M8/vmem", c.vmem_bytes,
+             f"vpu_ops={c.vpu_ops}")
+
+
+if __name__ == "__main__":
+    main()

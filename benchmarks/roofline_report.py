@@ -1,0 +1,50 @@
+"""§Roofline report: aggregates experiments/dryrun/*.json into the
+per-(arch x shape x mesh) three-term table used in EXPERIMENTS.md."""
+import glob
+import json
+import os
+
+from .common import emit
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_OPT = os.path.join(_ROOT, "experiments", "dryrun_opt")
+DRYRUN_DIR = _OPT if os.path.isdir(_OPT) and os.listdir(_OPT) else \
+    os.path.join(_ROOT, "experiments", "dryrun")
+
+
+def load_cells(mesh_filter=None):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    if mesh_filter:
+        cells = [c for c in cells if c["mesh"] == mesh_filter]
+    return cells
+
+
+def main() -> None:
+    cells = load_cells()
+    if not cells:
+        emit("roofline/no_dryrun_artifacts", 0,
+             "run repro.launch.dryrun first")
+        return
+    ok = [c for c in cells if c["status"] == "ok"]
+    err = [c for c in cells if c["status"] == "error"]
+    skipped = [c for c in cells if c["status"] == "skipped"]
+    emit("roofline/cells_ok", len(ok), f"err={len(err)},skip={len(skipped)}")
+    for c in ok:
+        if c["mesh"] != "16x16":
+            continue  # the roofline table is single-pod per assignment
+        t = c["roofline"]
+        name = f"roofline/{c['arch']}/{c['shape']}"
+        emit(name, t["step_s_lower_bound"] * 1e6,
+             f"dom={t['dominant']},comp={t['compute_s']:.2e},"
+             f"mem={t['memory_s']:.2e},coll={t['collective_s']:.2e},"
+             f"useful_ratio={c.get('useful_flops_ratio') and round(c['useful_flops_ratio'], 3)}")
+    for c in err:
+        emit(f"roofline/ERROR/{c['arch']}/{c['shape']}/{c['mesh']}", -1,
+             c.get("error", "?")[:80])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (units in ``derived`` where the
+quantity is a model count rather than wall time).
+"""
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (table1_forward_cycles, table2_inverse_cycles,
+                   table3_resources, fig17_runtime_vs_n, fig19_20_pareto,
+                   bench_conv, bench_dprt_impl, bench_lm_step,
+                   roofline_report)
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in [table1_forward_cycles, table2_inverse_cycles,
+                table3_resources, fig17_runtime_vs_n, fig19_20_pareto,
+                bench_conv, bench_dprt_impl, bench_lm_step,
+                roofline_report]:
+        try:
+            mod.main()
+        except Exception:
+            failures += 1
+            print(f"{mod.__name__},ERROR,", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} benchmark modules failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,29 @@
+"""Paper Table I: forward-DPRT clock-cycle models, validated against the
+quoted N=251 values, plus the measured cycle-model speedup ratios."""
+from repro.core import pareto as P
+
+from .common import emit
+
+
+def main() -> None:
+    for n in [31, 127, 251]:
+        serial = P.cycles_serial(n)
+        systolic = P.cycles_systolic(n)
+        fd = P.cycles_fdprt(n)
+        emit(f"table1/serial/N{n}", serial, "cycles")
+        emit(f"table1/systolic/N{n}", systolic, "cycles")
+        for h in [2, 16, 84]:
+            if h <= (n - 1) // 2:
+                c = P.cycles_sfdprt(n, h)
+                emit(f"table1/sfdprt_H{h}/N{n}", c,
+                     f"speedup_vs_systolic={systolic / c:.2f}")
+        emit(f"table1/fdprt/N{n}", fd,
+             f"speedup_vs_systolic={systolic / fd:.2f}")
+    # paper-quoted pins
+    assert P.cycles_fdprt(251) == 511
+    assert P.cycles_systolic(251) == 63253
+    emit("table1/pin/fdprt_251", 511, "matches_paper=true")
+
+
+if __name__ == "__main__":
+    main()

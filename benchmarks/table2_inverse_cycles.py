@@ -1,0 +1,22 @@
+"""Paper Table II: inverse-DPRT clock-cycle models (B = 8 bits)."""
+from repro.core import pareto as P
+
+from .common import emit
+
+
+def main() -> None:
+    b = 8
+    for n in [31, 127, 251]:
+        emit(f"table2/isfdprt_H2/N{n}", P.cycles_isfdprt(n, 2, b), "cycles")
+        emit(f"table2/isfdprt_H16/N{n}", P.cycles_isfdprt(n, 16, b),
+             "cycles")
+        emit(f"table2/isfdprt_HN/N{n}", P.cycles_isfdprt(n, n, b), "cycles")
+        emit(f"table2/ifdprt/N{n}", P.cycles_ifdprt(n, b), "cycles")
+    # iFDPRT(251): 2N + 3*ceil(log2 N) + B + 2 = 502 + 24 + 10 = 536
+    assert P.cycles_ifdprt(251, 8) == 2 * 251 + 3 * 8 + 8 + 2
+    emit("table2/pin/ifdprt_251", P.cycles_ifdprt(251, 8),
+         "matches_formula=true")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Paper Tables III/IV: resource models (flip-flops, 1-bit adders, MUX,
+RAM bits) at N=251, B=8, plus the TPU-analog VMEM/ops cost model."""
+from repro.core import pareto as P
+
+from .common import emit
+
+
+def main() -> None:
+    n, b = 251, 8
+    emit("table3/systolic/ff", P.flipflops_systolic(n, b), "N=251,B=8")
+    emit("table3/systolic/fa", P.adders_systolic(n, b), "")
+    emit("table3/serial/fa", P.adders_serial(n, b), "single adder path")
+    for h in [2, 16, 84]:
+        emit(f"table3/sfdprt_H{h}/ff", P.flipflops_sfdprt(n, h, b), "")
+        emit(f"table3/sfdprt_H{h}/fa", P.adders_sfdprt(n, h, b), "")
+    emit("table3/fdprt/ff", P.flipflops_fdprt(n, b), "")
+    emit("table3/fdprt/fa", P.adders_fdprt(n, b), "")
+    # Table IV RAM totals
+    ram_serial = n * n * b
+    ram_systolic = n * (n + 1) * (b + 8)
+    emit("table4/serial/ram_bits", ram_serial + 0, "paper=504,008+adders")
+    emit("table4/systolic/ram_bits", ram_systolic, "paper cites 1,012,032"
+         " incl. IO buffers")
+    # paper pin: systolic total flip-flops = 516,096 (Fig. 19 square dot)
+    assert P.flipflops_systolic(251, 8) == 516096
+    emit("table3/pin/systolic_ff", 516096, "matches_paper=true")
+
+    # TPU analog: VMEM working set + VPU ops for strip kernel tilings
+    for h, m in [(8, 8), (16, 8), (16, 32), (32, 32)]:
+        c = P.tpu_strip_cost(n, h, m)
+        emit(f"table3/tpu_strip_H{h}_M{m}/vmem_bytes", c.vmem_bytes,
+             f"vpu_ops={c.vpu_ops},ai={c.ai:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Quickstart: the DPRT public API in ten lines each.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (circ_conv2d_dprt, dft2_reference, dft2_via_dprt,
+                        dprt, idprt, next_prime, pareto)
+from repro.kernels import dprt_pallas
+
+
+def main():
+    # 1. forward + exact inverse on a prime-sized integer image
+    rng = np.random.default_rng(0)
+    n = 31
+    img = jnp.asarray(rng.integers(0, 256, (n, n)), jnp.int32)
+    r = dprt(img)                          # (N+1, N), exact int32
+    back = idprt(r)
+    assert (back == img).all()
+    print(f"1. DPRT round-trip on {n}x{n}: bit-exact ✓ "
+          f"(projections sum to {int(r[0].sum())} = total pixel sum)")
+
+    # 2. the paper's scalable strip decomposition (choose H for your VMEM)
+    for h in [2, 8, n]:
+        assert (dprt(img, method="strips", strip_rows=h) == r).all()
+    print("2. strip decomposition H∈{2,8,N}: identical results ✓")
+
+    # 3. the Pallas TPU kernel (interpret mode on CPU)
+    rk = dprt_pallas(img, strip_rows=8, m_block=8)
+    assert (rk == r).all()
+    print("3. Pallas SFDPRT kernel == oracle ✓")
+
+    # 4. exact integer convolution through the transform domain
+    kernel = jnp.zeros((n, n), jnp.int32).at[:3, :3].set(1)
+    out = circ_conv2d_dprt(img, kernel)
+    print(f"4. exact 3x3 box filter via DPRT: sum={int(out.sum())} "
+          f"(= 9x image sum: {int(img.sum()) * 9}) ✓")
+
+    # 5. 2-D DFT by the discrete Fourier-slice theorem
+    err = float(jnp.max(jnp.abs(dft2_via_dprt(img) - dft2_reference(img))))
+    print(f"5. 2-D DFT via N+1 1-D FFTs: max err vs fft2 = {err:.2e} ✓")
+
+    # 6. the paper's Pareto front: pick H for your budget
+    front = pareto.pareto_front(251)
+    print(f"6. Pareto-optimal strip heights for N=251: {front[:8]}... "
+          f"({len(front)} points; H=84 runs "
+          f"{pareto.cycles_systolic(251) / pareto.cycles_sfdprt(251, 84):.0f}x "
+          "faster than the systolic baseline)")
+
+    # 7. prime padding beats power-of-two padding for linear convolution
+    print(f"7. linear conv 251+16-1=266 -> pad to prime {next_prime(266)} "
+          "(vs 512 for an FFT) ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""End-to-end driver (the paper's kind of workload): a batched image
+filtering service that runs entirely in the DPRT domain.
+
+Pipeline: phantom batch -> forward DPRT -> per-direction 1-D circular
+convolution with the filter's projections (the convolution theorem) ->
+exact inverse -> integer-identical to direct spatial filtering.
+
+Run:  PYTHONPATH=src python examples/radon_convolution.py [--n 251]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (circ_conv1d_exact, circ_conv2d_direct, dprt_batched,
+                        idprt_batched, dprt)
+from repro.data import radon_images
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=61, help="prime image size")
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+    n, b = args.n, args.batch
+
+    imgs = jnp.asarray(radon_images(n, b, kind="phantom"))
+    # separable smoothing kernel, integer taps
+    kern = jnp.zeros((n, n), jnp.int32)
+    kern = kern.at[:3, :3].set(jnp.asarray([[1, 2, 1], [2, 4, 2],
+                                            [1, 2, 1]], jnp.int32))
+
+    @jax.jit
+    def filter_in_radon_domain(batch_imgs):
+        rf = dprt_batched(batch_imgs)              # (B, N+1, N)
+        rk = dprt(kern)                            # (N+1, N)
+        rc = circ_conv1d_exact(rf, rk[None])       # conv theorem, per m
+        return idprt_batched(rc)
+
+    t0 = time.perf_counter()
+    out = filter_in_radon_domain(imgs)
+    out.block_until_ready()
+    dt = time.perf_counter() - t0
+
+    want = circ_conv2d_direct(imgs[0], kern)
+    exact = bool((out[0] == want).all())
+    print(f"[radon-conv] N={n} batch={b}: {dt * 1e3:.1f} ms "
+          f"({b / dt:.1f} img/s), exact vs direct spatial conv: {exact}")
+    assert exact
+    # every projection of the filtered image still sums to the same total
+    total = int(out[0].sum())
+    rr = dprt(out[0])
+    assert all(int(rr[m].sum()) == total for m in range(n + 1))
+    print(f"[radon-conv] invariant check: all {n + 1} projections sum to "
+          f"{total} ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Batched LM serving: prefill a prompt batch, then stream greedy tokens
+against the KV cache (the decode_32k shape's code path at demo scale).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py --arch qwen3-0.6b
+"""
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-0.6b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-tokens", type=int, default=16)
+    args = ap.parse_args()
+    serve_main(["--mode", "lm", "--arch", args.arch, "--smoke",
+                "--batch", str(args.batch),
+                "--prompt-len", str(args.prompt_len),
+                "--gen-tokens", str(args.gen_tokens)])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Hillclimb harness: re-lower a dry-run cell with config/rule overrides
+and report roofline terms + byte breakdown. Usage:
+  python experiments/hillclimb_lm.py <arch> <shape> <tag> [k=v ...]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import ast, sys, json
+from repro.launch.dryrun import run_cell
+
+def parse(v):
+    try:
+        return ast.literal_eval(v)
+    except Exception:
+        return v
+
+arch, shape, tag = sys.argv[1], sys.argv[2], sys.argv[3]
+overrides, rules = {}, None
+for kv in sys.argv[4:]:
+    k, v = kv.split("=", 1)
+    if k.startswith("rule."):
+        from repro.parallel.sharding import LOGICAL_RULES
+        rules = dict(LOGICAL_RULES) if rules is None else rules
+        rules[k[5:]] = parse(v)
+    else:
+        overrides[k] = parse(v)
+r = run_cell(arch, shape, multi_pod=False, outdir="experiments/hillclimb",
+             overrides=overrides or None, rules=rules, tag=tag)
+if r["status"] == "ok":
+    t = r["roofline"]
+    print(json.dumps({"tag": tag, "comp": t["compute_s"], "mem": t["memory_s"],
+                      "coll": t["collective_s"], "bound": t["step_s_lower_bound"],
+                      "by_op": {k: round(v/1e9,1) for k,v in r["bytes_by_op_unscaled"].items()}}, indent=1))

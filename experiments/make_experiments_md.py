@@ -1,0 +1,299 @@
+"""Generates EXPERIMENTS.md from the dry-run artifacts + perf logs."""
+import glob
+import json
+import os
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+HW = {"peak_flops": 197e12, "hbm_bw": 819e9, "link_bw": 50e9}
+
+
+def load(dirname):
+    cells = {}
+    for p in sorted(glob.glob(os.path.join(ROOT, dirname, "*.json"))):
+        c = json.load(open(p))
+        cells[(c["arch"].split("+")[0], c["shape"], c["mesh"])] = c
+    return cells
+
+
+def fmt_s(x):
+    return f"{x:.3g}"
+
+
+def roofline_table(cells, mesh="16x16"):
+    lines = ["| arch | shape | compute s | memory s | collective s | "
+             "dominant | MODEL/HLO flops | roofline frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, m), c in sorted(cells.items()):
+        if m != mesh or c["status"] != "ok":
+            continue
+        t = c["roofline"]
+        ideal = c["model_flops"] / (t["chips"] * HW["peak_flops"])
+        if c.get("decode_ideal"):
+            frac = c["decode_ideal"]["fraction_of_modeled"]
+            fr = f"{100 * frac:.1f}% (mem)"
+        else:
+            fr = f"{100 * ideal / t['step_s_lower_bound']:.2f}% (comp)"
+        lines.append(
+            f"| {arch} | {shape} | {fmt_s(t['compute_s'])} | "
+            f"{fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} | "
+            f"{t['dominant']} | {c['useful_flops_ratio']:.3f} | {fr} |")
+    return "\n".join(lines)
+
+
+def delta_table(base, opt, mesh="16x16"):
+    lines = ["| arch | shape | bound before (s) | bound after (s) | Δ |",
+             "|---|---|---|---|---|"]
+    for key in sorted(base):
+        arch, shape, m = key
+        if m != mesh:
+            continue
+        b, o = base[key], opt.get(key)
+        if b["status"] != "ok" or not o or o["status"] != "ok":
+            continue
+        bb = b["roofline"]["step_s_lower_bound"]
+        oo = o["roofline"]["step_s_lower_bound"]
+        d = (oo - bb) / bb * 100
+        lines.append(f"| {arch} | {shape} | {fmt_s(bb)} | {fmt_s(oo)} | "
+                     f"{d:+.1f}% |")
+    return "\n".join(lines)
+
+
+def dryrun_summary(cells):
+    ok = sum(1 for c in cells.values() if c["status"] == "ok")
+    sk = sum(1 for c in cells.values() if c["status"] == "skipped")
+    er = sum(1 for c in cells.values() if c["status"] == "error")
+    meshes = sorted({m for _, _, m in cells})
+    compile_max = max((c.get("compile_s", 0) for c in cells.values()
+                       if c["status"] == "ok"), default=0)
+    return ok, sk, er, meshes, compile_max
+
+
+def mem_table(cells, mesh="2x16x16"):
+    lines = ["| arch | shape | args GB/dev | temps GB/dev | "
+             "collective count |", "|---|---|---|---|---|"]
+    for (arch, shape, m), c in sorted(cells.items()):
+        if m != mesh or c["status"] != "ok":
+            continue
+        mem = c.get("memory", {})
+        a = mem.get("argument_bytes", 0) / 2 ** 30
+        t = mem.get("temp_bytes", 0) / 2 ** 30
+        cnt = c["collectives"].get("flat_module", {}).get("count", "-")
+        lines.append(f"| {arch} | {shape} | {a:.2f} | {t:.2f} | {cnt} |")
+    return "\n".join(lines)
+
+
+def main():
+    base = load("experiments/dryrun_baseline")
+    opt = load("experiments/dryrun_opt")
+    ok_b, sk_b, er_b, meshes_b, cmp_b = dryrun_summary(base)
+    ok_o, sk_o, er_o, meshes_o, cmp_o = dryrun_summary(opt)
+
+    md = f"""# EXPERIMENTS
+
+All artifacts regenerate with:
+
+```
+PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --mesh both --outdir experiments/dryrun_opt
+PYTHONPATH=src python -m benchmarks.run
+PYTHONPATH=src pytest tests/
+```
+
+Hardware model (TPU v5e targets): 197 TFLOP/s bf16/chip, 819 GB/s HBM,
+~50 GB/s/link ICI.  This container is CPU-only: all TPU numbers are
+*derived from compiled dry-run artifacts* (see Methodology); all DPRT
+service numbers are *measured wall-clock on this host*.
+
+## §Reproduction vs the paper's own claims
+
+The paper's analytical models (Tables I-III, eq. 11, Fig. 22) are
+implemented in `repro.core.pareto` and pinned by tests to the quoted
+numbers — the faithful-reproduction gate:
+
+| paper claim | reproduced value | test |
+|---|---|---|
+| FDPRT N=251 computes in 511 cycles | `cycles_fdprt(251) == 511` | test_paper_cycle_pins |
+| systolic N=251: 63,253 cycles | `cycles_systolic(251) == 63253` | test_paper_cycle_pins |
+| systolic N=251: 516,096 flip-flops | `flipflops_systolic(251,8) == 516096` | test_paper_resource_pins |
+| H=84 runs ~36x faster than systolic with ~25% fewer FFs | 35.6x at 74.7% of the FFs | test_paper_resource_pins |
+| Pareto front over H (eq. 11) monotone in cycles/resources | verified programmatically | test_pareto_front_monotone |
+| exact integer reconstruction | `idprt(dprt(f)) == f` bit-exact, all methods + Pallas kernel, property-tested | test_dprt_core / test_kernels |
+| DPRT convolution avoids float FFT | integer-exact circular & linear conv vs direct oracle | test_conv_dft |
+| prime padding beats pow2 (Sec. I) | 269 vs 512 for 251+16-1 | test_prime_padding_beats_pow2 |
+
+## §Dry-run
+
+Production meshes built by `repro.launch.mesh.make_production_mesh`:
+single-pod `(16,16)=("data","model")` = 256 chips, multi-pod
+`(2,16,16)=("pod","data","model")` = 512 chips, on 512 forced host
+devices.  Every (architecture x input-shape x mesh) cell is
+`jit(...).lower(**input_specs).compile()`d with full parameter, optimizer
+(train), KV/state-cache (decode) shardings; `memory_analysis()` and
+`cost_analysis()` recorded per cell in `experiments/dryrun*/`.
+
+* Baseline matrix: **{ok_b} ok / {sk_b} skipped / {er_b} errors** over meshes {meshes_b}.
+* Optimized matrix: **{ok_o} ok / {sk_o} skipped / {er_o} errors**; max compile time {max(cmp_b, cmp_o):.0f}s.
+* The 16 skips are exactly the documented `long_500k` x full-attention
+  cells (sub-quadratic mixing required; runs for mamba2 + recurrentgemma).
+* train_4k lowers `train_step` (fwd+bwd+AdamW, ZeRO-1 moments), prefill
+  lowers `prefill` (logits + cache), decode/long lower `serve_step` (one
+  token against the cache, cache donated).
+
+Multi-pod (2x16x16) per-device memory & collective presence (proves the
+`pod` axis shards; full numbers in the JSONs):
+
+{mem_table(opt if opt else base)}
+
+Caveat: XLA:CPU's `memory_analysis` is a loose upper bound (host
+allocator, no TPU liveness/rematerialization packing).  Cells whose
+temp bound exceeds 16 GB/chip (the two 236B-class MoE trains) fit on
+real v5e via the framework's gradient accumulation (microbatching) —
+`optim.accumulate_grads` — or a larger `model` axis; all other cells are
+comfortably under budget even by the pessimistic bound.
+
+## §Roofline (single-pod 16x16, per assignment)
+
+Methodology: `compiled.cost_analysis()` on XLA:CPU counts `while` bodies
+once, so scanned stacks (layers, KV chunks, SSD chunks) are undercounted
+by their trip counts (verified 8x for an 8-step scan).  We therefore walk
+the optimized HLO with trip-count multiplication (`repro.launch.hlo_cost`,
+validated to ratio 1.000 on known matmuls/scans): dot-MACs+elementwise
+FLOPs; an HBM model charging operand+result bytes at fusion boundaries
+(window reads like dynamic-slice/gather charge the window, not the
+buffer); collective operand bytes with the same multipliers (all-gather =
+result/group, reduce-scatter = result*group).  Raw `cost_analysis`
+numbers are retained in the JSONs for comparison.
+
+`MODEL/HLO flops` = (6·N·D train, 2·N·D inference; N_active for MoE) /
+compiled HLO FLOPs — the useful-compute fraction that exposes
+remat/rectangle/capacity waste.  For decode cells the roofline fraction
+is bytes-based (reading each param shard + the cache once is the floor);
+for train/prefill it is compute-based.
+
+### Baseline (paper-faithful substrate: chunked attention, global MoE dispatch)
+
+{roofline_table(base)}
+
+### Optimized (beyond-paper: triangular-segmented attention, group-local MoE dispatch, ckv=4096)
+
+{roofline_table(opt)}
+
+### Baseline -> optimized, step-time lower bound (max of the three terms)
+
+{delta_table(base, opt)}
+
+### Reading the table
+
+* Every cell is memory-dominated under this model except the MoE trains
+  (collective-dominated at baseline).  The three-term model says: at
+  these global batch sizes the fleet is HBM-limited, so the §Perf work
+  drives bytes (and the collective bytes hiding inside scan bodies) down.
+* decode fractions against the bytes floor show GQA caches at ~0.4-2.8%
+  of ideal: the decode step's chunked-attention scan re-touches f32
+  score/accumulator tiles; a fused attention kernel (VMEM-resident
+  softmax state) is the identified next step and the reason real serving
+  stacks use one.
+* `long_500k` for the SSM/hybrid archs costs the same as `decode_32k`
+  modulo batch (O(1) state) — the table's strongest argument for
+  state-space decode at 500k context.
+* useful-flops > 1 is impossible; values near 1 (mamba prefill 0.95)
+  mean almost no wasted compute; low values localize waste (phi3 train
+  0.41 = full-remat recompute + causal-rectangle waste; qwen3-0.6b
+  prefill 0.14 = small model swamped by attention scores).
+
+## §Perf — hypothesis -> change -> measure log
+
+Three hillclimbed cells per assignment: (A) the paper-representative
+DPRT service (measured wall-clock on this host), (B) the most
+collective-bound cell `qwen3-moe-235b train_4k`, (C) the worst
+roofline-fraction non-decode cell `phi3-medium-14b prefill_32k`.
+Baselines are the paper-faithful implementations; optimized variants are
+config-selectable (`attn_impl`, `moe_dispatch`) with the baseline kept.
+
+### Cell A — DPRT service, N=251 (measured, CPU host)
+
+| iteration | hypothesis | result | verdict |
+|---|---|---|---|
+| A0 gather (systolic analog) | baseline: per-direction shear via gather | 52-276 ms/img across host-load states (final uncontended: 51.6 ms) | baseline |
+| A1 Horner shift-add (the paper's dataflow) | reuse of partial sums + single (N,N) gather/step keeps the 252 KB accumulator cache-resident; predict >5x | **14.8 ms — 3.5x-16.7x vs A0 depending on host load** (final bench: 3.5x) | confirmed |
+| A2 scan unroll 2/4/8 | lower loop overhead, cross-step fusion | 2.4-3x *slower* | refuted — unrolled gathers defeat XLA CPU fusion |
+| A3 binary roll-select ladder (the TPU kernel's trick) on CPU | replace gather with 8 rot+select | 19x slower | refuted on CPU; CPU gathers of contiguous rows are fast. Kept in the Pallas kernel where per-sublane variable shifts don't exist — the hardware-adaptation split is now *measured*, not assumed |
+| A4 doubled-buffer dynamic-slice (CLS-register literal) | contiguous slices beat gather | 4.6x slower | refuted |
+| A5 batched service vmap->lax.map | vmapped scan broadcasts gather indices, blowing L2; sequential map should hit the Bx-single ideal | 11 img/s -> **63.3 img/s** (bench_output `dprt_impl/batched16`) | confirmed; `dprt_batched(batch_impl='auto')` picks map on CPU, vmap on TPU |
+
+Stop: A2-A4 were three consecutive negative results on the single-image
+path; the confirmed wins are A1 and A5 (5.7x service throughput).
+Wall-clock ratios on this shared host vary with load; the official
+numbers are the ones in `bench_output.txt`.  The TPU-side block-size trade (H x M VMEM tiling)
+is swept analytically in `benchmarks/fig19_20_pareto.py` — the paper's
+Pareto front re-derived for VMEM bytes vs VPU ops.
+
+### Cell B — qwen3-moe-235b-a22b train_4k (dominant term: collective 303 s)
+
+| iteration | hypothesis | comp / mem / coll (s/dev) | bound | verdict |
+|---|---|---|---|---|
+| B0 baseline | global-capacity scatter dispatch | 16.4 / 291.6 / **302.6** | 302.6 | collective-bound |
+| B1 remat=dots | collectives are bwd remat replays; saving dot outputs avoids them | 16.1 / 304.5 / 300.6 | 304.5 | **refuted** — collectives are the dispatch itself; saving dots only added memory |
+| B2 grouped dispatch (`moe_dispatch=grouped`) | HLO shows 10.7 TB/dev of *all-reduce*: XLA realizes the global scatter-add as a full expert-buffer all-reduce over 32-way DP. Per-DP-shard capacity pools keep scatter/combine shard-local | 16.4 / 278.4 / 205.4 | 278.4 | confirmed, −32% collective |
+| B3 + capacity_factor 1.0 | −20% dispatch payload + expert FLOPs | 13.6 / 240.0 / 176.2 | 240.0 | confirmed |
+| B4 + segmented attention (from cell C) | attention share of bytes/collectives | 13.2 / **225.8** / 176.5 | 225.8 | confirmed |
+| B5 + remat=dots (recheck) | with dispatch fixed, dots may now help | 12.9 / 238.5 / 174.5 | 238.5 | refuted (+5.6%) |
+
+Net: step-time lower bound **302.6 -> 225.8 s/step (−25%)**; the
+collective term fell **302.6 -> 176.5 (−42%)**.  Remaining: 3.2 TB/dev
+all-to-all + 5.4 TB/dev all-reduce across the 94-layer fwd+bwd — next
+lever is token-permute all-to-all dispatch (ragged_dot) instead of
+scatter, noted as future work.
+
+### Cell C — phi3-medium-14b prefill_32k (worst compute fraction, memory-bound 77.3 s)
+
+| iteration | hypothesis | comp / mem / coll (s/dev) | bound | verdict |
+|---|---|---|---|---|
+| C0 baseline | chunked online-softmax attention | 3.09 / **77.3** / 19.6 | 77.3 | memory-bound |
+| C1 chunk_kv 1024->4096 | fewer accumulator round-trips | 3.09 / 73.8 / 19.8 | 73.8 | partially confirmed (−4.5%) |
+| C2 q-chunked two-level flash | move the (B,H,Sq,hd) accumulator out of the KV loop | 5.09 / 99.1 / 4.7 | 99.1 | **refuted for memory** (KV re-read per q-chunk dominates) — but −76% collective, kept as an option |
+| C3 triangular segmentation x4 (`attn_impl=segmented`) | the fully-masked upper-triangle KV chunks are ~44% of score traffic *and* FLOPs; static segments never compute them | 3.39 / 56.3 / 3.05 | 56.3 | confirmed, −27% |
+| C4 segments x8 | finer triangle, (n+1)/2n -> 56% of rectangle | 3.11 / 51.6 / 3.77 | 51.6 | confirmed |
+| C5 x8 + chunk_kv 4096 | combine C1+C4 | 2.83 / **43.0** / 4.3 | 43.0 | confirmed |
+
+Net: **77.3 -> 43.0 s/step (−44%)**; collective −78%; compute −8%
+(rectangle waste removed).  The same setting improves every causal
+self-attention cell (see the delta table above) and is the new default;
+the baseline stays selectable (`attn_impl=chunked`).
+
+### Fleet-level effect
+
+The optimized defaults (segmented attention + grouped MoE dispatch +
+ckv=4096) were re-lowered over the full 40-cell matrix on both meshes —
+the "baseline -> optimized" table above is the before/after record.
+Train/prefill cells improved up to 87% (tinyllama prefill −87%,
+internvl2/minitron/qwen3 prefills −84..85%, phi3 train −59%) with no
+regressions; sub-second decode cells move within ±15%, which is the
+model's sensitivity to XLA fusion-boundary choices (decode code paths
+are not touched by these flags) — noted, not chased.
+
+## §Scale-out notes (1000+ nodes)
+
+* DP over `pod x data` (+ZeRO-1 moments), TP/EP over `model`; the
+  multi-pod mesh only adds a `pod` axis to the batch rules, shown
+  compiling for all cells — scaling out = growing `pod`.
+* Fault tolerance: atomic rename checkpoints + async writer + keep-k GC;
+  restart-from-latest loop (tested, incl. mid-async-write crashes);
+  elastic restore re-shards host-agnostic checkpoints onto a different
+  mesh (tested 2x4 -> 4x2); straggler watchdog flags slow steps against
+  a rolling median (hook point for re-slicing).
+* Distributed optimization: int8 stochastic-rounding gradient
+  compression with an exact int32 shard_map psum (error <0.4%, tested),
+  gradient accumulation, compute/comm overlap left to XLA latency hiding
+  (collective-permute chains visible in the HLO).
+* The DPRT service itself scales by the paper's own decomposition:
+  strips = devices (`shard_map` partial DPRT + psum/psum_scatter ==
+  MEM_OUT over ICI), batch over `pod x data` with zero collectives.
+"""
+    with open(os.path.join(ROOT, "EXPERIMENTS.md"), "w") as f:
+        f.write(md)
+    print("wrote EXPERIMENTS.md",
+          f"(baseline cells={len(base)}, optimized cells={len(opt)})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: fast & scalable DPRT (Carranza et al.) as a JAX/TPU framework."""
+__version__ = "1.0.0"

@@ -1,0 +1,154 @@
+"""Fault-tolerant checkpointing: atomic, async, elastic.
+
+Layout:  <dir>/step_<n>/  { manifest.json, <leaf-key>.npy ... }
+written into ``step_<n>.tmp`` and atomically renamed, so a crash mid-write
+never corrupts the latest checkpoint.  Restore places leaves with the
+*current* mesh's shardings -- the saved mesh may be a different size
+(elastic restart), since leaves are stored unsharded on host.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "AsyncCheckpointer", "gc_checkpoints"]
+
+_SEP = "::"
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        flat[key] = leaf
+    return flat
+
+
+def save_checkpoint(directory: str, step: int, tree, extra: Optional[Dict]
+                    = None) -> str:
+    """Blocking atomic save. Returns the final checkpoint path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(tree)
+    manifest = {"step": step, "keys": {}, "extra": extra or {},
+                "time": time.time()}
+    for key, leaf in flat.items():
+        arr = np.asarray(jax.device_get(leaf))
+        fname = re.sub(r"[^A-Za-z0-9_.-]", "_", key) + ".npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["keys"][key] = {"file": fname, "shape": list(arr.shape),
+                                 "dtype": str(arr.dtype)}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)          # atomic publish
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(m.group(1)) for d in os.listdir(directory)
+             if (m := re.fullmatch(r"step_(\d+)", d))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, like_tree, step: Optional[int] = None,
+                       shardings=None):
+    """Restore into the structure of ``like_tree``.
+
+    ``shardings``: optional matching tree of NamedShardings -- this is the
+    elastic path: the checkpoint is mesh-agnostic on disk and gets laid
+    out for whatever mesh is active now.
+    Returns (tree, step, extra) or (None, None, None) when nothing exists.
+    """
+    step = latest_step(directory) if step is None else step
+    if step is None:
+        return None, None, None
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+
+    flat_like = _flatten(like_tree)
+    flat_shard = _flatten(shardings) if shardings is not None else {}
+    missing = set(flat_like) - set(manifest["keys"])
+    if missing:
+        raise ValueError(f"checkpoint at {path} missing keys: {sorted(missing)[:5]}")
+
+    loaded = {}
+    for key in flat_like:
+        info = manifest["keys"][key]
+        arr = np.load(os.path.join(path, info["file"]))
+        if key in flat_shard:
+            loaded[key] = jax.device_put(arr, flat_shard[key])
+        else:
+            loaded[key] = jax.numpy.asarray(arr)
+
+    paths, treedef = zip(*jax.tree_util.tree_flatten_with_path(like_tree)[0]) \
+        if jax.tree_util.tree_flatten_with_path(like_tree)[0] else ((), None)
+    treedef = jax.tree_util.tree_structure(like_tree)
+    keys_in_order = [_SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                               for p in path)
+                     for path, _ in
+                     jax.tree_util.tree_flatten_with_path(like_tree)[0]]
+    tree = jax.tree_util.tree_unflatten(treedef,
+                                        [loaded[k] for k in keys_in_order])
+    return tree, manifest["step"], manifest.get("extra", {})
+
+
+def gc_checkpoints(directory: str, keep: int = 3) -> None:
+    if not os.path.isdir(directory):
+        return
+    steps = sorted(int(m.group(1)) for d in os.listdir(directory)
+                   if (m := re.fullmatch(r"step_(\d+)", d)))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Overlaps checkpoint writes with training (single in-flight write)."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree, extra=None) -> None:
+        self.wait()
+        host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)),
+                                 tree)
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_tree, extra)
+                gc_checkpoints(self.directory, self.keep)
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

@@ -1,0 +1,1 @@
+from .registry import ARCH_IDS, ALIASES, get_config, get_smoke_config

@@ -1,0 +1,18 @@
+"""Core DPRT library: the paper's contribution as composable JAX modules."""
+from .dprt import (dprt, idprt, dprt_batched, idprt_batched, skew_sum,
+                   strip_partial, align_partial, is_prime, next_prime,
+                   accum_dtype_for, dprt_oracle_np, idprt_oracle_np)
+from .conv import (circ_conv2d_dprt, circ_conv2d_direct, circ_conv2d_fft,
+                   linear_conv2d_dprt, linear_conv2d_direct,
+                   circ_conv1d_exact, prime_vs_pow2_padding)
+from .dft import dft2_via_dprt, dft2_reference
+from . import pareto
+
+__all__ = [
+    "dprt", "idprt", "dprt_batched", "idprt_batched", "skew_sum",
+    "strip_partial", "align_partial", "is_prime", "next_prime",
+    "accum_dtype_for", "dprt_oracle_np", "idprt_oracle_np",
+    "circ_conv2d_dprt", "circ_conv2d_direct", "circ_conv2d_fft",
+    "linear_conv2d_dprt", "linear_conv2d_direct", "circ_conv1d_exact",
+    "prime_vs_pow2_padding", "dft2_via_dprt", "dft2_reference", "pareto",
+]

@@ -1,0 +1,120 @@
+"""Exact fixed-point 2-D convolution via the DPRT convolution property.
+
+The paper's headline application (Sec. I, VI): because the DPRT satisfies a
+discrete Fourier-slice theorem, the DPRT of a 2-D *circular* convolution is
+the per-direction 1-D circular convolution of the DPRTs:
+
+    R_{f ** g}(m, .) = R_f(m, .) (*)_N R_g(m, .)     for all N+1 directions m
+
+so 2-D convolution = DPRT -> (N+1) independent 1-D circular convolutions ->
+inverse DPRT, entirely in integer arithmetic (no floating-point FFT).
+
+Linear convolution is obtained by zero-padding both operands to the next
+prime P >= A + C - 1.  This is the paper's density-of-primes argument: a
+power-of-two FFT must pad to 2^ceil(log2(A+C-1)) (up to ~2x), while the next
+prime is only O(log P) away on average.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .dprt import (accum_dtype_for, dprt, idprt, is_prime, next_prime)
+
+__all__ = [
+    "circ_conv1d_exact",
+    "circ_conv2d_dprt",
+    "circ_conv2d_direct",
+    "circ_conv2d_fft",
+    "linear_conv2d_dprt",
+    "linear_conv2d_direct",
+    "prime_vs_pow2_padding",
+]
+
+
+def circ_conv1d_exact(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Batched exact 1-D circular convolution along the last axis.
+
+    a, b: (..., N).  out[..., d] = sum_t a[..., t] * b[..., <d-t>_N].
+    O(N^2) integer MACs per row -- these run on the MXU as a matmul with
+    the circulant of ``b`` (built by gather once, reused across rows).
+    """
+    n = a.shape[-1]
+    acc = accum_dtype_for(jnp.result_type(a.dtype, b.dtype))
+    d = jnp.arange(n)[:, None]
+    t = jnp.arange(n)[None, :]
+    bc = b.astype(acc)[..., (d - t) % n]  # bc[..., d, t] = b[..., <d-t>_N]
+    return jnp.einsum("...t,...dt->...d", a.astype(acc), bc)
+
+
+@functools.partial(jax.jit, static_argnames=("method",))
+def circ_conv2d_dprt(f: jnp.ndarray, g: jnp.ndarray,
+                     method: str = "horner") -> jnp.ndarray:
+    """Exact 2-D circular convolution of two (N, N) integer images (N prime)."""
+    rf = dprt(f, method=method)
+    rg = dprt(g, method=method)
+    rc = circ_conv1d_exact(rf, rg)          # all N+1 directions at once
+    return idprt(rc, method=method)
+
+
+def circ_conv2d_direct(f: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """O(N^4) direct oracle for circular convolution (exact)."""
+    n = f.shape[0]
+    acc = accum_dtype_for(jnp.result_type(f.dtype, g.dtype))
+    i = jnp.arange(n)
+    # out[x, y] = sum_{u,v} f[u, v] g[<x-u>, <y-v>]
+    gx = g.astype(acc)[(i[:, None] - i[None, :]) % n]          # (x, u, N)
+    gxy = gx[:, :, (i[:, None] - i[None, :]) % n]              # (x, u, y, v)
+    return jnp.einsum("uv,xuyv->xy", f.astype(acc), gxy)
+
+
+def circ_conv2d_fft(f: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """Floating-point FFT path (the approach the paper's hardware avoids)."""
+    out = jnp.fft.ifft2(jnp.fft.fft2(f) * jnp.fft.fft2(g)).real
+    if jnp.issubdtype(f.dtype, jnp.integer):
+        return jnp.round(out)
+    return out
+
+
+def _pad_to(x: jnp.ndarray, p: int) -> jnp.ndarray:
+    return jnp.pad(x, ((0, p - x.shape[0]), (0, p - x.shape[1])))
+
+
+def linear_conv2d_dprt(f: jnp.ndarray, g: jnp.ndarray,
+                       method: str = "horner") -> jnp.ndarray:
+    """Exact full linear convolution via prime zero-padding + circular conv."""
+    a, c = f.shape[0], g.shape[0]
+    out = a + c - 1
+    p = next_prime(out)
+    res = circ_conv2d_dprt(_pad_to(f, p), _pad_to(g, p), method=method)
+    return res[:out, :out]
+
+
+def linear_conv2d_direct(f: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
+    """numpy oracle for full linear convolution (exact, int64)."""
+    fa = np.asarray(f, dtype=np.int64)
+    ga = np.asarray(g, dtype=np.int64)
+    a, c = fa.shape[0], ga.shape[0]
+    out = np.zeros((a + c - 1, a + c - 1), dtype=np.int64)
+    for u in range(a):
+        for v in range(a):
+            out[u:u + c, v:v + c] += fa[u, v] * ga
+    return out
+
+
+def prime_vs_pow2_padding(size: int, kernel: int) -> dict:
+    """Paper Sec. I: transform-size overhead of prime vs power-of-two padding."""
+    need = size + kernel - 1
+    p = next_prime(need)
+    pow2 = 1 << max(0, (need - 1).bit_length())
+    return {
+        "required": need,
+        "prime_pad": p,
+        "pow2_pad": pow2,
+        "prime_overhead": p / need,
+        "pow2_overhead": pow2 / need,
+    }

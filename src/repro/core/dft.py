@@ -1,0 +1,49 @@
+"""2-D DFT via the discrete Fourier-slice theorem (Gertner / Grigoryan).
+
+With R the DPRT of f and ``Rhat(m, k) = FFT_d R(m, d)``:
+
+    Rhat(m, k) = Fhat(<-m*k>_N, k)      0 <= m < N      (skew slices)
+    Rhat(N, k) = Fhat(k, 0)                             (the v=0 column)
+
+where ``Fhat(u, v) = sum_{i,j} f(i,j) e^{-2pi i (u*i + v*j)/N}``.  Because N
+is prime, for every v != 0 the map m -> <-m*v>_N is a bijection, so the N+1
+length-N 1-D FFTs cover the full 2-D spectrum exactly once (plus the shared
+DC term).  This is the paper's "minimal number of 1-D FFTs" route to the
+2-D DFT (Sec. I, refs [14][17]) -- all O(N^3) additions happen in exact
+integer arithmetic inside the DPRT; only the final N+1 FFTs are float.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .dprt import dprt, is_prime
+
+__all__ = ["dft2_via_dprt", "dft2_reference"]
+
+
+@functools.partial(jax.jit, static_argnames=("method",))
+def dft2_via_dprt(f: jnp.ndarray, method: str = "horner") -> jnp.ndarray:
+    """(N, N) real/int image -> (N, N) complex 2-D DFT, via N+1 1-D FFTs."""
+    n = f.shape[0]
+    r = dprt(f, method=method)                     # (N+1, N) exact ints
+    rhat = jnp.fft.fft(r.astype(jnp.float64 if r.dtype == jnp.int64
+                                else jnp.float32), axis=1)
+
+    k = jnp.arange(n)
+    m = jnp.arange(n)[:, None]
+    u = (-m * k[None, :]) % n                      # Fhat(u[m,k], k) = Rhat[m,k]
+
+    out = jnp.zeros((n, n), rhat.dtype)
+    # scatter the skew slices; k=0 column is written N times with the same
+    # DC value (harmless), then overwritten exactly by the m=N projection.
+    out = out.at[u, jnp.broadcast_to(k[None, :], (n, n))].set(rhat[:n])
+    out = out.at[:, 0].set(rhat[n])                # Fhat(u, 0) = FFT(R[N])[u]
+    return out
+
+
+def dft2_reference(f: jnp.ndarray) -> jnp.ndarray:
+    return jnp.fft.fft2(jnp.asarray(f, jnp.float64 if f.dtype == jnp.int64
+                                    else jnp.float32))

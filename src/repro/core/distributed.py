@@ -1,0 +1,121 @@
+"""Distributed DPRT: the paper's strip decomposition lifted onto a mesh.
+
+The SFDPRT computes per-strip *partial* DPRTs and accumulates them in
+MEM_OUT (eq. 8).  Across a TPU pod the same algebra shards: each device
+owns a contiguous block of image rows (a "super-strip"), computes its
+partial skew-sum locally (Horner shift-and-add, zero inter-device
+traffic), applies its alignment roll, and the partial results are
+combined with one collective:
+
+* ``psum``          -> every device holds the full (N+1, N) transform
+                       (MEM_OUT replicated), or
+* ``psum_scatter``  -> each device keeps only its slice of directions
+                       (MEM_OUT sharded; 1/devices the collective bytes,
+                       the beyond-paper option used by the perf pass).
+
+Image *batches* shard trivially over the data axes on top of this.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+try:
+    from jax import shard_map  # jax >= 0.8
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map
+
+from .dprt import (accum_dtype_for, align_partial, is_prime, strip_partial)
+
+__all__ = ["dprt_sharded", "idprt_sharded", "dprt_batch_sharded"]
+
+Reduce = Literal["psum", "psum_scatter"]
+
+
+def _skew_sum_local(g_local: jnp.ndarray, n: int, sign: int, axis: str,
+                    rows_per_dev: int) -> jnp.ndarray:
+    """Partial skew-sum of this device's row block, aligned to global rows."""
+    r = jax.lax.axis_index(axis)
+    u = strip_partial(g_local, n, sign=sign,
+                      acc_dtype=accum_dtype_for(g_local.dtype))
+    return align_partial(u, r * rows_per_dev, sign=sign)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mesh", "axis", "reduce", "sign"))
+def _skew_sum_sharded(g: jnp.ndarray, mesh: Mesh, axis: str = "model",
+                      reduce: Reduce = "psum", sign: int = 1) -> jnp.ndarray:
+    n = g.shape[1]
+    devs = mesh.shape[axis]
+    rows_per_dev = math.ceil(g.shape[0] / devs)
+    gp = jnp.pad(g, ((0, devs * rows_per_dev - g.shape[0]), (0, 0)))
+
+    n_out_pad = math.ceil(n / devs) * devs
+
+    def local(gl):
+        part = _skew_sum_local(gl, n, sign, axis, rows_per_dev)
+        if reduce == "psum":
+            return jax.lax.psum(part, axis)
+        part = jnp.pad(part, ((0, n_out_pad - n), (0, 0)))
+        return jax.lax.psum_scatter(part, axis, scatter_dimension=0,
+                                    tiled=True)
+
+    out_spec = P(None, None) if reduce == "psum" else P(axis, None)
+    fn = shard_map(local, mesh=mesh, in_specs=P(axis, None),
+                   out_specs=out_spec)
+    out = fn(gp)
+    return out[:n]
+
+
+def dprt_sharded(f: jnp.ndarray, mesh: Mesh, axis: str = "model",
+                 reduce: Reduce = "psum") -> jnp.ndarray:
+    """Forward DPRT of one (N, N) image with rows sharded over ``axis``.
+
+    Returns the (N+1, N) transform; direction rows are sharded over
+    ``axis`` when ``reduce='psum_scatter'``, else replicated.
+    """
+    n = f.shape[0]
+    if not is_prime(n):
+        raise ValueError(f"DPRT needs prime N, got {n}")
+    core = _skew_sum_sharded(f, mesh, axis, reduce, sign=1)
+    last = f.astype(accum_dtype_for(f.dtype)).sum(axis=1)
+    return jnp.concatenate([core, last[None, :]], axis=0)
+
+
+def idprt_sharded(r: jnp.ndarray, mesh: Mesh, axis: str = "model",
+                  reduce: Reduce = "psum") -> jnp.ndarray:
+    """Inverse DPRT with the projection rows sharded over ``axis``."""
+    n = r.shape[1]
+    if r.shape[0] != n + 1 or not is_prime(n):
+        raise ValueError(f"iDPRT input must be (N+1, N), N prime: {r.shape}")
+    acc = accum_dtype_for(r.dtype)
+    z = _skew_sum_sharded(r[:n], mesh, axis, reduce, sign=-1)
+    s = r[0].astype(acc).sum()
+    num = z - s + r[n].astype(acc)[:, None]
+    if jnp.issubdtype(acc, jnp.integer):
+        return num // n
+    return num / n
+
+
+def dprt_batch_sharded(fb: jnp.ndarray, mesh: Mesh,
+                       batch_axes=("pod", "data"),
+                       method: str = "horner") -> jnp.ndarray:
+    """DPRT of a batch of images, batch sharded over the data axes.
+
+    This is the FPGA-coprocessor service pattern of Sec. V-B scaled out:
+    every device transforms its own images; no collectives at all.
+    """
+    from .dprt import dprt_batched  # local import to avoid cycle
+
+    axes = tuple(a for a in batch_axes if a in mesh.shape)
+    sharding = NamedSharding(mesh, P(axes if len(axes) > 1 else axes[0],
+                                     None, None))
+    fb = jax.lax.with_sharding_constraint(fb, sharding)
+    out = dprt_batched(fb, method=method)
+    return jax.lax.with_sharding_constraint(
+        out, NamedSharding(mesh, P(axes if len(axes) > 1 else axes[0],
+                                   None, None)))

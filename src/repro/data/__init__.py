@@ -1,0 +1,2 @@
+from .synthetic import TokenStream, radon_images, phantom_image
+from .pipeline import Prefetcher, shard_batch

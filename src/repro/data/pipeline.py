@@ -1,0 +1,72 @@
+"""Input pipeline: background prefetch + device placement with sharding."""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Iterator, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["Prefetcher", "shard_batch"]
+
+
+def shard_batch(batch, mesh: Optional[Mesh], batch_axes=("pod", "data")):
+    """Place a host batch onto the mesh, batch dim sharded over data axes."""
+    if mesh is None:
+        return jax.tree.map(jax.numpy.asarray, batch)
+    axes = tuple(a for a in batch_axes if a in mesh.shape)
+
+    def put(x):
+        ndim = np.asarray(x).ndim
+        bdim = axes if len(axes) > 1 else (axes[0] if axes else None)
+        if ndim == 0 or not axes or x.shape[0] % _size(mesh, axes) != 0:
+            s = NamedSharding(mesh, P())
+        else:
+            s = NamedSharding(mesh, P(bdim, *([None] * (ndim - 1))))
+        return jax.device_put(x, s)
+
+    return jax.tree.map(put, batch)
+
+
+def _size(mesh: Mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+class Prefetcher:
+    """Runs an iterator in a thread, keeping ``depth`` batches ready."""
+
+    def __init__(self, it: Iterator, depth: int = 2,
+                 transform: Optional[Callable] = None):
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._transform = transform
+
+        def worker():
+            for item in it:
+                if self._stop.is_set():
+                    return
+                if self._transform is not None:
+                    item = self._transform(item)
+                while not self._stop.is_set():
+                    try:
+                        self._q.put(item, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+
+        self._thread = threading.Thread(target=worker, daemon=True)
+        self._thread.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the DPRT hot-spot (validated in interpret mode)."""
+from .ops import dprt_pallas, idprt_pallas, skew_sum_pallas
+from .ref import dprt_ref, idprt_ref, skew_sum_ref
+
+__all__ = ["dprt_pallas", "idprt_pallas", "skew_sum_pallas",
+           "dprt_ref", "idprt_ref", "skew_sum_ref"]

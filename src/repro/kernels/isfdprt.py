@@ -1,0 +1,19 @@
+"""Inverse SFDPRT Pallas kernel (iSFDPRT_core, paper Sec. III-C / Fig. 16).
+
+The inverse core is the forward skew-sum with circular *right* shifts
+(CRS replaces CLS): Z(i,j) = sum_m R(m, <j - i*m>_N) = skew_sum(R[:N], -1).
+It therefore shares the machinery in :mod:`.sfdprt` with ``sign=-1``; the
+-S / +R(N,i) correction and the exact divide-by-N (the paper's pipelined
+array divider) live in :func:`repro.kernels.ops.idprt_pallas`.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+from .sfdprt import skew_sum_pallas_raw
+
+__all__ = ["isfdprt_core"]
+
+isfdprt_core = functools.partial(skew_sum_pallas_raw, sign=-1)

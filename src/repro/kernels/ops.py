@@ -1,0 +1,53 @@
+"""Public jit'd wrappers around the Pallas DPRT kernels.
+
+``interpret`` defaults to auto: Pallas interpret mode off-TPU (this
+container is CPU-only), compiled Mosaic on real TPUs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dprt import is_prime
+from .sfdprt import skew_sum_pallas_raw
+
+__all__ = ["dprt_pallas", "idprt_pallas", "skew_sum_pallas"]
+
+
+def _auto_interpret(interpret: Optional[bool]) -> bool:
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
+def skew_sum_pallas(g: jnp.ndarray, sign: int = 1, strip_rows: int = 16,
+                    m_block: int = 8,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    return skew_sum_pallas_raw(g, sign=sign, strip_rows=strip_rows,
+                               m_block=m_block,
+                               interpret=_auto_interpret(interpret))
+
+
+def dprt_pallas(f: jnp.ndarray, strip_rows: int = 16, m_block: int = 8,
+                interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Forward DPRT (N,N)->(N+1,N) via the SFDPRT Pallas kernel."""
+    n = f.shape[0]
+    if not is_prime(n):
+        raise ValueError(f"DPRT needs prime N, got {n}")
+    core = skew_sum_pallas(f, 1, strip_rows, m_block, interpret)
+    last = f.astype(jnp.int32).sum(axis=1)
+    return jnp.concatenate([core, last[None, :]], axis=0)
+
+
+def idprt_pallas(r: jnp.ndarray, strip_rows: int = 16, m_block: int = 8,
+                 interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Inverse DPRT (N+1,N)->(N,N) via the kernel with CRS (sign=-1)."""
+    n = r.shape[1]
+    if r.shape[0] != n + 1 or not is_prime(n):
+        raise ValueError(f"iDPRT input must be (N+1, N) with N prime: {r.shape}")
+    z = skew_sum_pallas(r[:n], -1, strip_rows, m_block, interpret)
+    s = r[0].astype(jnp.int32).sum()
+    return (z - s + r[n].astype(jnp.int32)[:, None]) // n

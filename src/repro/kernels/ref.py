@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for the Pallas DPRT kernels (no Pallas imports)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def skew_sum_ref(g: jnp.ndarray, sign: int = 1) -> jnp.ndarray:
+    """out[m, d] = sum_i g(i, <d + sign*m*i>_N), exact int32."""
+    n = g.shape[0]
+    gi = g.astype(jnp.int32)
+    i = jnp.arange(n, dtype=jnp.int32)[:, None]
+    d = jnp.arange(n, dtype=jnp.int32)[None, :]
+
+    def one_direction(m):
+        idx = (d + sign * m * i) % n
+        return jnp.take_along_axis(gi, idx, axis=1).sum(axis=0)
+
+    return jax.lax.map(one_direction, jnp.arange(n, dtype=jnp.int32),
+                       batch_size=32)
+
+
+def dprt_ref(f: jnp.ndarray) -> jnp.ndarray:
+    """(N, N) -> (N+1, N) forward DPRT oracle."""
+    core = skew_sum_ref(f, 1)
+    return jnp.concatenate([core, f.astype(jnp.int32).sum(1)[None, :]], 0)
+
+
+def idprt_ref(r: jnp.ndarray) -> jnp.ndarray:
+    """(N+1, N) -> (N, N) inverse DPRT oracle (exact integer divide)."""
+    n = r.shape[1]
+    z = skew_sum_ref(r[:n], -1)
+    s = r[0].astype(jnp.int32).sum()
+    return (z - s + r[n].astype(jnp.int32)[:, None]) // n

@@ -1,0 +1,127 @@
+"""Pallas TPU kernel for the scalable DPRT skew-sum (SFDPRT core).
+
+Maps the paper's SFDPRT_core (Fig. 2/8) onto a TPU:
+
+* a strip of H image rows is the VMEM-resident register array
+  (``BlockSpec((H, N))``),
+* a block of M directions lives in the sublane axis of the accumulator,
+* each Horner step ``T <- row_i + roll(T, m)`` is the paper's single
+  clock cycle: circular-shift registers + adder tree,
+* the per-direction roll amount m varies across sublanes, which TPUs
+  cannot shift natively; it is synthesized with a ceil(log2 N)-step
+  **binary roll-select ladder**: for each bit b of m, rotate the whole
+  tile by the *static* amount 2^b (two lane slices + concat -- no
+  gather, no index arithmetic) and select per sublane on bit b.
+* strips are grid steps that revisit and accumulate into the output
+  block -- the paper's MEM_OUT accumulator (eq. 8); the alignment roll
+  R'(r,m,d) = U_r(<d + m*rH>) uses the same ladder.
+
+The same kernel computes the inverse core with ``sign=-1`` (CLS -> CRS,
+Sec. III-C).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+try:  # compiler params spelling differs across jax versions
+    from jax.experimental.pallas import tpu as pltpu
+    _COMPILER_PARAMS = pltpu.CompilerParams(
+        dimension_semantics=("parallel", "arbitrary"))
+except Exception:  # pragma: no cover
+    _COMPILER_PARAMS = None
+
+__all__ = ["skew_sum_pallas_raw", "roll_rows_ladder_spec"]
+
+
+def _num_bits(n: int) -> int:
+    return max(1, math.ceil(math.log2(n)))
+
+
+def roll_rows_ladder_spec(n: int) -> int:
+    """Ops per variable roll: the ladder issues ceil(log2 N) rot+sel pairs."""
+    return _num_bits(n)
+
+
+def _roll_rows(acc: jnp.ndarray, amt: jnp.ndarray, n: int) -> jnp.ndarray:
+    """out[j, d] = acc[j, <d + amt[j]>_n] via static-shift rotate + select.
+
+    ``acc`` is (M, n); ``amt`` is (M, 1) int32 in [0, n).  Every rotate is a
+    static lane slice pair, every select a per-sublane mask -- no gathers.
+    """
+    for b in range(_num_bits(n)):
+        s = 1 << b
+        if s >= n:
+            break
+        rolled = jnp.concatenate([acc[:, s:], acc[:, :s]], axis=1)
+        bit = (amt >> b) & 1
+        acc = jnp.where(bit == 1, rolled, acc)
+    return acc
+
+
+def _sfdprt_kernel(f_ref, out_ref, *, n: int, h: int, m_block: int,
+                   sign: int):
+    mb = pl.program_id(0)
+    k = pl.program_id(1)
+
+    iota = jax.lax.broadcasted_iota(jnp.int32, (m_block, 1), 0)
+    m_vec = (mb * m_block + iota) % n          # directions of this block
+    step_amt = m_vec if sign > 0 else (n - m_vec) % n
+
+    def body(i, acc):
+        # T_i = f(i, .) + roll(T_{i+1}, sign*m):  one "clock cycle".
+        acc = _roll_rows(acc, step_amt, n)
+        row = f_ref[h - 1 - i, :]
+        return acc + row[None, :].astype(acc.dtype)
+
+    acc = jnp.zeros((m_block, n), jnp.int32)
+    acc = jax.lax.fori_loop(0, h, body, acc)
+
+    # alignment roll: R'(r, m, d) = U_r(<d + sign*m*rH>_n)   (eq. 7)
+    offset = k * h
+    align_amt = jnp.mod(sign * m_vec * offset, n)
+    acc = _roll_rows(acc, align_amt, n)
+
+    # MEM_OUT accumulation across strips (eq. 8)
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = acc
+
+    @pl.when(k > 0)
+    def _accum():
+        out_ref[...] += acc
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("sign", "strip_rows", "m_block",
+                                    "interpret"))
+def skew_sum_pallas_raw(g: jnp.ndarray, sign: int = 1, strip_rows: int = 16,
+                        m_block: int = 8,
+                        interpret: bool = True) -> jnp.ndarray:
+    """skew_sum via the Pallas strip kernel.
+
+    g: (N, N) int array, N prime.  Returns (N, N) int32 with
+    out[m, d] = sum_i g(i, <d + sign*m*i>_N).
+    """
+    n = g.shape[0]
+    h = min(int(strip_rows), n)
+    k = math.ceil(n / h)
+    mb = math.ceil(n / m_block)
+
+    gp = jnp.pad(g.astype(jnp.int32), ((0, k * h - n), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_sfdprt_kernel, n=n, h=h, m_block=m_block,
+                          sign=sign),
+        grid=(mb, k),
+        in_specs=[pl.BlockSpec((h, n), lambda i, j: (j, 0))],
+        out_specs=pl.BlockSpec((m_block, n), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mb * m_block, n), jnp.int32),
+        compiler_params=None if interpret else _COMPILER_PARAMS,
+        interpret=interpret,
+    )(gp)
+    return out[:n]

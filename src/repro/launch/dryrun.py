@@ -1,0 +1,185 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=" + os.environ.get("REPRO_DRYRUN_DEVICES", "512")
+
+"""Multi-pod dry-run: prove every (arch x shape x mesh) lowers, partitions,
+and compiles for the production meshes, and extract roofline inputs.
+
+The two lines above run before ANY other import: jax locks the device
+count at first init.  Smoke tests / benches must NOT import this module.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch phi3-medium-14b \
+        --shape train_4k --mesh single --outdir experiments/dryrun
+"""
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCH_IDS, ALIASES, get_config      # noqa: E402
+from repro.models import Model                               # noqa: E402
+from repro.parallel.sharding import activate_mesh            # noqa: E402
+from repro.launch.mesh import make_production_mesh           # noqa: E402
+from repro.launch import shapes as shp                       # noqa: E402
+from repro.launch import steps as steps_mod                  # noqa: E402
+from repro.launch import roofline as rl                      # noqa: E402
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, outdir: str,
+             mesh=None, overrides=None, rules=None, tag="") -> dict:
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    model = Model(cfg)
+    mesh = mesh if mesh is not None else make_production_mesh(
+        multi_pod=multi_pod)
+    chips = mesh.size
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+
+    ok, reason = shp.shape_applicable(cfg, shape)
+    result = {"arch": arch + (f"+{tag}" if tag else ""), "shape": shape,
+              "mesh": mesh_name, "chips": chips, "status": "skipped",
+              "reason": reason, "overrides": overrides or {}}
+    if not ok:
+        return _emit(result, outdir)
+
+    kind = shp.SHAPES[shape]["kind"]
+    t0 = time.time()
+    try:
+        if kind == "train":
+            fn, structs = steps_mod.make_train_step(model, mesh, shape)
+        elif kind == "prefill":
+            fn, structs = steps_mod.make_prefill_step(model, mesh, shape)
+        else:
+            fn, structs = steps_mod.make_decode_step(model, mesh, shape)
+
+        with activate_mesh(mesh, rules):
+            lowered = fn.lower(*structs)
+            compiled = lowered.compile()
+
+        cost = compiled.cost_analysis() or {}
+        # XLA counts while bodies once; the trip-count-aware walker fixes
+        # scanned stacks (layers, kv chunks, SSD chunks).  Raw numbers are
+        # kept alongside for reference.
+        from repro.launch.hlo_cost import analyze_hlo
+        hc = analyze_hlo(compiled.as_text())
+        flops = float(hc["flops"])
+        nbytes = float(hc["bytes"])
+        try:
+            mem = compiled.memory_analysis()
+            mem_info = {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+                "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes",
+                                      getattr(mem, "temp_size_in_bytes", 0)),
+            }
+        except Exception as e:  # backend-dependent
+            mem_info = {"error": str(e)}
+
+        coll = {k: v for k, v in hc.items() if k.startswith("coll_")}
+        coll["total"] = float(hc["coll_bytes"])
+        result["bytes_by_op_unscaled"] = hc.get("bytes_by_op_unscaled", {})
+        coll["flat_module"] = rl.parse_collectives(compiled.as_text())
+        terms = rl.roofline_terms(flops, nbytes, coll["total"], chips)
+
+        tokens = shp.SHAPES[shape]["batch"] * (
+            shp.SHAPES[shape]["seq"] if kind != "decode" else 1)
+        mflops, n_total, n_active = rl.model_flops(
+            cfg, model.specs(), tokens, "train" if kind == "train" else
+            "inference")
+
+        decode_ideal = None
+        if kind == "decode":
+            # decode is memory-bound by construction: the floor is reading
+            # every param shard + the cache once per step
+            import numpy as _np
+            model_axis = dict(zip(mesh.axis_names, mesh.devices.shape)).get(
+                "model", 1)
+            cache_bytes = sum(
+                int(_np.prod(l.shape)) * l.dtype.itemsize
+                for l in jax.tree.leaves(structs[1]))
+            active_bytes = n_active * 2  # bf16
+            ideal_per_dev = (active_bytes / model_axis
+                             + cache_bytes / chips)
+            ideal_s = ideal_per_dev / rl.HW["hbm_bw"]
+            decode_ideal = {
+                "cache_bytes_global": cache_bytes,
+                "ideal_bytes_per_dev": ideal_per_dev,
+                "ideal_memory_s": ideal_s,
+                "fraction_of_modeled": (ideal_s / terms["memory_s"]
+                                        if terms["memory_s"] else None),
+            }
+        global_flops = flops * chips
+        result.update(
+            status="ok", kind=kind, compile_s=round(time.time() - t0, 1),
+            flops_per_dev=flops, bytes_per_dev=nbytes,
+            raw_cost_analysis={"flops": float(cost.get("flops", 0.0)),
+                               "bytes": float(cost.get("bytes accessed",
+                                                       0.0))},
+            collectives=coll, memory=mem_info, roofline=terms,
+            tokens=tokens, params_total=n_total, params_active=n_active,
+            model_flops=mflops, decode_ideal=decode_ideal,
+            useful_flops_ratio=(mflops / global_flops
+                                if global_flops else None),
+        )
+    except Exception as e:
+        result.update(status="error", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-2000:],
+                      compile_s=round(time.time() - t0, 1))
+    return _emit(result, outdir)
+
+
+def _emit(result: dict, outdir: str) -> dict:
+    if outdir:
+        os.makedirs(outdir, exist_ok=True)
+        fname = f"{result['arch']}_{result['shape']}_{result['mesh']}.json"
+        with open(os.path.join(outdir, fname), "w") as f:
+            json.dump(result, f, indent=1, default=str)
+    status = result["status"]
+    extra = ""
+    if status == "ok":
+        t = result["roofline"]
+        extra = (f" dom={t['dominant']} comp={t['compute_s']:.3e}s "
+                 f"mem={t['memory_s']:.3e}s coll={t['collective_s']:.3e}s "
+                 f"compile={result['compile_s']}s")
+    elif status == "error":
+        extra = " " + result["error"][:160]
+    print(f"[dryrun] {result['arch']:22s} {result['shape']:12s} "
+          f"mesh={result['mesh']:10s} {status}{extra}", flush=True)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--outdir", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else [
+        ALIASES.get(a, a) for a in args.arch.split(",")]
+    shapes = list(shp.SHAPES) if args.shape == "all" else \
+        args.shape.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    n_err = 0
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        for arch in archs:
+            for shape in shapes:
+                r = run_cell(arch, shape, multi, args.outdir, mesh=mesh)
+                n_err += r["status"] == "error"
+    if n_err:
+        raise SystemExit(f"{n_err} dry-run cells failed")
+    print("[dryrun] all requested cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Production mesh construction (function, not constant: importing this
+module must never touch jax device state)."""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; multi-pod adds a leading 2-pod axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(data: int = 2, model: int = 4):
+    """Small mesh over however many (host) devices are available."""
+    n = len(jax.devices())
+    if data * model > n:
+        if n % 2 == 0 and n >= 4:
+            data, model = 2, n // 2
+        else:
+            data, model = 1, n
+    return jax.make_mesh((data, model), ("data", "model"))

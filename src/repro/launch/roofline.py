@@ -1,0 +1,134 @@
+"""Roofline analysis from compiled dry-run artifacts (TPU v5e targets).
+
+Three terms per (arch x shape x mesh), all in seconds-per-step:
+
+    compute    = HLO_FLOPs / (chips * 197 TFLOP/s)
+    memory     = HLO_bytes / (chips * 819 GB/s)
+    collective = collective_bytes / (chips * 50 GB/s/link)
+
+``cost_analysis`` on the compiled executable reports the *per-device*
+(SPMD-partitioned) module, so per-device quantities are divided by the
+single-chip peak; global numbers reported alongside are x chips.
+Collective bytes are parsed from the partitioned HLO text: the summed
+operand sizes of every all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute (async -start counted once, -done
+skipped).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+import jax
+
+HW = {"peak_flops": 197e12, "hbm_bw": 819e9, "link_bw": 50e9}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_LINE_RE = re.compile(
+    r"=\s*(.*?)\s(" + "|".join(_COLL_OPS) + r")(-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9,]*)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:  # iota form [n_groups, group_size]<=[...]
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_LIST_RE.search(line)
+    if m:  # explicit {{a,b,..},{..}} form: size of the first group
+        return max(len([t for t in m.group(1).split(",") if t]), 1)
+    return 1
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, int]:
+    """Per-class summed *operand* bytes from (partitioned) HLO text.
+
+    Operands are referenced by name in optimized HLO, so sizes derive from
+    the result shape: all-reduce/all-to-all/collective-permute move the
+    result size, an all-gather's operand is result/group_size, and a
+    reduce-scatter's operand is result*group_size.
+    """
+    out: Dict[str, int] = {op: 0 for op in _COLL_OPS}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue  # async completion: counted at -start
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        result_txt, op, _ = m.groups()
+        rbytes = sum(_shape_bytes(d, s)
+                     for d, s in _SHAPE_RE.findall(result_txt))
+        if op == "all-gather":
+            rbytes //= _group_size(line)
+        elif op == "reduce-scatter":
+            rbytes *= _group_size(line)
+        out[op] += rbytes
+        out["count"] += 1
+    out["total"] = sum(out[o] for o in _COLL_OPS)
+    return out
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float, chips: int) -> Dict[str, float]:
+    compute = flops_per_dev / HW["peak_flops"]
+    memory = bytes_per_dev / HW["hbm_bw"]
+    collective = coll_bytes_per_dev / HW["link_bw"]
+    terms = {"compute_s": compute, "memory_s": memory,
+             "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    bound = max(compute, memory, collective)
+    terms.update(dominant=dom.replace("_s", ""),
+                 step_s_lower_bound=bound,
+                 chips=chips,
+                 global_flops=flops_per_dev * chips,
+                 global_bytes=bytes_per_dev * chips,
+                 global_coll_bytes=coll_bytes_per_dev * chips)
+    return terms
+
+
+def param_counts(specs) -> Tuple[int, int]:
+    """(total, active) parameters; routed-expert leaves scale by k/E."""
+    from repro.parallel.sharding import ParamSpec
+    import numpy as np
+
+    total = active = 0
+    flat = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))[0]
+    for path, spec in flat:
+        n = int(np.prod(spec.shape))
+        total += n
+        keys = [str(getattr(p, "key", "")) for p in path]
+        routed = "moe" in keys and "experts" in (spec.logical or ())
+        if not routed:
+            active += n
+    return total, active
+
+
+def model_flops(cfg, specs, tokens: int, mode: str) -> float:
+    """6*N_active*D (train) or 2*N_active*D (inference)."""
+    total, nonrouted = param_counts(specs)
+    routed = total - nonrouted
+    if cfg.num_experts:
+        active = nonrouted + routed * cfg.experts_per_token / cfg.num_experts
+    else:
+        active = total
+    mult = 6.0 if mode == "train" else 2.0
+    return mult * active * tokens, total, active

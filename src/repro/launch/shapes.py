@@ -1,0 +1,104 @@
+"""Assigned input shapes and abstract input specs for every (arch x shape).
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, zero allocation) for the dry-run and AOT compilation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import Model, ModelConfig
+from repro.parallel.sharding import prune_pspec
+
+__all__ = ["SHAPES", "shape_applicable", "batch_structs", "batch_shardings",
+           "cache_structs", "cache_shardings", "decode_token_structs"]
+
+SHAPES: Dict[str, Dict[str, Any]] = {
+    "train_4k":    {"seq": 4096,   "batch": 256, "kind": "train"},
+    "prefill_32k": {"seq": 32768,  "batch": 32,  "kind": "prefill"},
+    "decode_32k":  {"seq": 32768,  "batch": 128, "kind": "decode"},
+    "long_500k":   {"seq": 524288, "batch": 1,   "kind": "decode"},
+}
+
+# long_500k needs sub-quadratic sequence mixing: SSM / hybrid only.
+_LONG_OK_FAMILIES = ("ssm", "hybrid")
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    if shape == "long_500k" and cfg.family not in _LONG_OK_FAMILIES:
+        return False, (f"{cfg.name} is full-attention ({cfg.family}); "
+                       "524k-token decode requires sub-quadratic mixing "
+                       "(skip noted in DESIGN.md)")
+    return True, ""
+
+
+def _bt(mesh: Mesh):
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def batch_structs(cfg: ModelConfig, shape: str, with_labels: bool):
+    s = SHAPES[shape]
+    b, q = s["batch"], s["seq"]
+    out = {"tokens": jax.ShapeDtypeStruct((b, q), jnp.int32)}
+    if with_labels:
+        out["labels"] = jax.ShapeDtypeStruct((b, q), jnp.int32)
+    if cfg.frontend == "patch_stub":
+        out["patch_embed"] = jax.ShapeDtypeStruct(
+            (b, cfg.prefix_len, cfg.d_model), jnp.bfloat16)
+    if cfg.frontend == "audio_stub":
+        out["audio_embed"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def batch_shardings(structs, mesh: Mesh):
+    bt = _bt(mesh)
+
+    def one(sds):
+        spec = P(bt, *([None] * (len(sds.shape) - 1)))
+        return NamedSharding(mesh, prune_pspec(spec, sds.shape, mesh))
+
+    return jax.tree.map(one, structs)
+
+
+def cache_structs(model: Model, batch: int, max_len: int):
+    return model.init_cache(
+        batch, max_len,
+        factory=lambda sh, dt: jax.ShapeDtypeStruct(sh, dt))
+
+
+_CACHE_SPEC = {
+    # leaf name -> per-dim mesh-axis candidates (after the batch dim)
+    "k": (None, "model", None, None),
+    "v": (None, "model", None, None),
+    "c_kv": (None, "model", None),
+    "k_rope": (None, "model", None),
+    "conv": (None, None, "model"),
+    "h": (None, "model"),
+    "ssm": (None, "model", None, None),
+}
+
+
+def cache_shardings(cache_struct, mesh: Mesh):
+    bt = _bt(mesh)
+
+    def one(path, sds):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+        base = list(_CACHE_SPEC.get(name, (None,) * len(sds.shape)))
+        base[0] = bt                        # batch dim
+        stacked = len(sds.shape) == len(base) + 1
+        spec = P(*([None] + base)) if stacked else P(*base)
+        return NamedSharding(mesh, prune_pspec(spec, sds.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, cache_struct)
+
+
+def decode_token_structs(cfg: ModelConfig, shape: str):
+    b = SHAPES[shape]["batch"]
+    return (jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32))

@@ -1,0 +1,119 @@
+"""Step builders: pjit'd train / prefill / decode with full shardings.
+
+Each builder returns ``(jitted_fn, arg_structs)`` ready for both real
+execution and ``.lower(*structs).compile()`` AOT dry-runs.  All lowering
+must happen inside ``with activate_mesh(mesh):`` so that in-model
+``shard_act`` constraints bind to the mesh.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import Model, ModelConfig
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               cosine_schedule, zero1_shardings)
+from repro.parallel.sharding import abstract_params, param_shardings
+from . import shapes as shp
+
+__all__ = ["make_train_step", "make_prefill_step", "make_decode_step"]
+
+
+def _opt_structs(p_struct):
+    return {"mu": jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32),
+                p_struct),
+            "nu": jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32),
+                p_struct),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def make_train_step(model: Model, mesh: Mesh, shape: str,
+                    lr: float = 3e-4, total_steps: int = 10000,
+                    param_dtype=jnp.bfloat16):
+    cfg = model.cfg
+    specs = model.specs()
+    p_shard = param_shardings(specs, mesh)
+    p_struct = abstract_params(specs, param_dtype)
+    o_struct = _opt_structs(p_struct)
+    o_shard = {"mu": zero1_shardings(p_shard, p_struct, mesh),
+               "nu": zero1_shardings(p_shard, p_struct, mesh),
+               "step": NamedSharding(mesh, P())}
+    b_struct = shp.batch_structs(cfg, shape, with_labels=True)
+    b_shard = shp.batch_shardings(b_struct, mesh)
+
+    opt_cfg = AdamWConfig(lr=lr)
+    sched = cosine_schedule(lr, 100, total_steps)
+
+    def train_step(params, opt, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            lambda p: model.loss(p, batch), has_aux=True)(params)
+        params, opt, metrics = adamw_update(params, grads, opt, opt_cfg,
+                                            sched)
+        metrics.update(loss=loss, **parts)
+        return params, opt, metrics
+
+    fn = jax.jit(train_step,
+                 in_shardings=(p_shard, o_shard, b_shard),
+                 out_shardings=(p_shard, o_shard, None),
+                 donate_argnums=(0, 1))
+    return fn, (p_struct, o_struct, b_struct)
+
+
+def make_prefill_step(model: Model, mesh: Mesh, shape: str,
+                      param_dtype=jnp.bfloat16):
+    cfg = model.cfg
+    specs = model.specs()
+    p_shard = param_shardings(specs, mesh)
+    p_struct = abstract_params(specs, param_dtype)
+    b_struct = shp.batch_structs(cfg, shape, with_labels=False)
+    b_shard = shp.batch_shardings(b_struct, mesh)
+    seq = shp.SHAPES[shape]["seq"]
+    batch = shp.SHAPES[shape]["batch"]
+    c_struct = shp.cache_structs(model, batch, seq)
+    c_shard = shp.cache_shardings(c_struct, mesh)
+
+    def prefill(params, b):
+        logits, cache = model.prefill(params, b)
+        return logits, cache
+
+    fn = jax.jit(prefill, in_shardings=(p_shard, b_shard),
+                 out_shardings=(None, c_shard))
+    return fn, (p_struct, b_struct)
+
+
+def make_decode_step(model: Model, mesh: Mesh, shape: str,
+                     param_dtype=jnp.bfloat16):
+    cfg = model.cfg
+    specs = model.specs()
+    p_shard = param_shardings(specs, mesh)
+    p_struct = abstract_params(specs, param_dtype)
+    seq = shp.SHAPES[shape]["seq"]
+    batch = shp.SHAPES[shape]["batch"]
+    c_struct = shp.cache_structs(model, batch, seq)
+    c_shard = shp.cache_shardings(c_struct, mesh)
+    tok_struct, pos_struct = shp.decode_token_structs(cfg, shape)
+    bt = shp._bt(mesh)
+    tok_shard = NamedSharding(
+        mesh, prune_pspec_like(tok_struct.shape, bt, mesh))
+
+    def decode(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    fn = jax.jit(decode,
+                 in_shardings=(p_shard, c_shard, tok_shard,
+                               NamedSharding(mesh, P())),
+                 out_shardings=(None, c_shard),
+                 donate_argnums=(1,))
+    return fn, (p_struct, c_struct, tok_struct, pos_struct)
+
+
+def prune_pspec_like(shape, bt, mesh):
+    from repro.parallel.sharding import prune_pspec
+    spec = P(bt, *([None] * (len(shape) - 1)))
+    return prune_pspec(spec, shape, mesh)

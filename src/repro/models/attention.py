@@ -1,0 +1,399 @@
+"""Attention: chunked-online-softmax GQA, sliding-window, cross, and MLA.
+
+Implementation notes
+--------------------
+* Global causal attention streams KV chunks through an online-softmax
+  scan (flash-style) so the (Sq, Skv) score matrix is never materialized
+  in HBM -- required for the 32k prefill shapes.  With ``causal_skip``
+  the scan carries a per-chunk validity mask so fully-masked KV chunks
+  contribute a cheap select instead of a masked matmul where possible.
+* Sliding-window attention uses the chunk-pair scheme (each W-sized
+  query chunk attends to its own + previous chunk), FLOP-tight for
+  window == chunk.
+* Decode uses the same chunked path with a KV cache; sliding-window
+  decode uses a ring buffer so the cache is O(window), which is what
+  makes ``long_500k`` feasible for the hybrid archs.
+* MLA (DeepSeek-V2) trains/prefills in expanded form and decodes in the
+  *absorbed* form over the compressed `c_kv` cache -- the whole point of
+  MLA; expanding 32k keys per step would be O(H * d) larger.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import ParamSpec, shard_act
+from .layers import dense, dense_spec, rmsnorm, rmsnorm_spec, rope
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+def attn_specs(cfg):
+    d, h, hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    s = {"wq": dense_spec(d, h * hd),
+         "wk": dense_spec(d, hkv * hd),
+         "wv": dense_spec(d, hkv * hd),
+         "wo": dense_spec(h * hd, d, "ffn", "embed")}
+    if cfg.qk_norm:
+        s["q_norm"] = rmsnorm_spec(hd, "head_dim")
+        s["k_norm"] = rmsnorm_spec(hd, "head_dim")
+    return s
+
+
+def mla_specs(cfg):
+    d, h = cfg.d_model, cfg.num_heads
+    qk = cfg.nope_head_dim + cfg.rope_head_dim
+    s = {"kv_down": dense_spec(d, cfg.kv_lora_rank + cfg.rope_head_dim,
+                               "embed", "lora"),
+         "kv_norm": rmsnorm_spec(cfg.kv_lora_rank, "lora"),
+         "k_up": dense_spec(cfg.kv_lora_rank, h * cfg.nope_head_dim,
+                            "lora", "ffn"),
+         "v_up": dense_spec(cfg.kv_lora_rank, h * cfg.v_head_dim,
+                            "lora", "ffn"),
+         "wo": dense_spec(h * cfg.v_head_dim, d, "ffn", "embed")}
+    if cfg.q_lora_rank:
+        s["q_down"] = dense_spec(d, cfg.q_lora_rank, "embed", "lora")
+        s["q_norm"] = rmsnorm_spec(cfg.q_lora_rank, "lora")
+        s["q_up"] = dense_spec(cfg.q_lora_rank, h * qk, "lora", "ffn")
+    else:
+        s["wq"] = dense_spec(d, h * qk)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# chunked online-softmax scaled dot product (GQA grouped, no KV repeat)
+# ---------------------------------------------------------------------------
+def _sdpa_chunked(q, k, v, *, q_positions, causal: bool,
+                  window: int = 0, kv_valid: Optional[jnp.ndarray] = None,
+                  chunk_kv: int = 1024):
+    """q: (B,Sq,H,hd); k,v: (B,Skv,Hkv,hd). Returns (B,Sq,H,hd).
+
+    ``q_positions``: (Sq,) absolute positions of queries.
+    ``kv_valid``: scalar count of valid cache entries (decode), else None.
+    """
+    b, sq, h, hd = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = hd ** -0.5
+
+    ckv = min(chunk_kv, skv)
+    nkv = math.ceil(skv / ckv)
+    pad = nkv * ckv - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    qg = q.reshape(b, sq, hkv, g, hd).astype(jnp.float32)
+    kc = k.reshape(b, nkv, ckv, hkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nkv, ckv, hkv, hd).transpose(1, 0, 2, 3, 4)
+
+    qpos = q_positions.astype(jnp.int32)                     # (Sq,)
+    limit = jnp.asarray(skv if kv_valid is None else kv_valid, jnp.int32)
+
+    def step(carry, inp):
+        m, l, acc = carry
+        j, kj, vj = inp
+        kvpos = j * ckv + jnp.arange(ckv, dtype=jnp.int32)    # (ckv,)
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg,
+                       kj.astype(jnp.float32)) * scale
+        valid = (kvpos[None, :] < limit)
+        if causal:
+            valid = valid & (kvpos[None, :] <= qpos[:, None])
+        if window:
+            valid = valid & (qpos[:, None] - kvpos[None, :] < window)
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskd->bkgqd", p, vj.astype(jnp.float32))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, hd), jnp.float32)
+    js = jnp.arange(nkv, dtype=jnp.int32)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), (js, kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+def _sdpa_qchunked(q, k, v, *, q_positions, causal: bool,
+                   window: int = 0, kv_valid=None,
+                   chunk_q: int = 512, chunk_kv: int = 1024):
+    """Two-level flash attention: outer map over query chunks, inner
+    online-softmax scan over KV chunks.
+
+    vs. ``_sdpa_chunked``: the (B,H,Sq,hd) softmax accumulator no longer
+    round-trips HBM once per KV chunk -- only a (B,H,cq,hd) tile does.
+    The trade is re-reading K/V once per query chunk.  For Sq=Skv=32k
+    this cuts modeled HBM bytes ~5x (EXPERIMENTS.md §Perf, cell C).
+    """
+    b, sq, h, hd = q.shape
+    cq = min(chunk_q, sq)
+    nq = math.ceil(sq / cq)
+    pad = nq * cq - sq
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        # padded queries get position -1: fully masked, cropped after
+        q_positions = jnp.pad(q_positions, (0, pad), constant_values=-1)
+    qc = q.reshape(b, nq, cq, h, hd).transpose(1, 0, 2, 3, 4)
+    posc = q_positions.reshape(nq, cq)
+
+    def one(args):
+        qi, pi = args
+        return _sdpa_chunked(qi, k, v, q_positions=pi, causal=causal,
+                             window=window, kv_valid=kv_valid,
+                             chunk_kv=chunk_kv)
+
+    out = jax.lax.map(one, (qc, posc))          # (nq, B, cq, H, hd)
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, nq * cq, h, hd)
+    return out[:, :sq]
+
+
+def _sdpa_segmented(q, k, v, *, q_positions, causal: bool,
+                    segments: int = 4, chunk_kv: int = 1024):
+    """Causal triangular segmentation (self-attention, Sq == Skv).
+
+    Query segment s attends only kv[: (s+1)*Sq/segments] -- the fully
+    masked upper-triangle KV chunks are never *computed*, cutting both
+    score-tensor HBM traffic and matmul FLOPs by ~(1 - (n+1)/2n) at the
+    cost of `segments`x HLO size (static python loop).
+    """
+    b, sq, h, hd = q.shape
+    seg = math.ceil(sq / segments)
+    outs = []
+    for s in range(segments):
+        lo, hi = s * seg, min((s + 1) * seg, sq)
+        if lo >= hi:
+            break
+        kv_end = min(hi, k.shape[1])
+        outs.append(_sdpa_chunked(
+            q[:, lo:hi], k[:, :kv_end], v[:, :kv_end],
+            q_positions=q_positions[lo:hi], causal=causal,
+            chunk_kv=chunk_kv))
+    return jnp.concatenate(outs, axis=1)
+
+
+def _sdpa(q, k, v, *, cfg, q_positions, causal, window=0, kv_valid=None):
+    """Dispatch on cfg.attn_impl: chunked (baseline) | qchunked | segmented."""
+    long_self = (q.shape[1] > cfg.chunk_q and kv_valid is None
+                 and window == 0)
+    if cfg.attn_impl == "qchunked" and long_self:
+        return _sdpa_qchunked(q, k, v, q_positions=q_positions,
+                              causal=causal, window=window,
+                              kv_valid=kv_valid, chunk_q=cfg.chunk_q,
+                              chunk_kv=cfg.chunk_kv)
+    if (cfg.attn_impl == "segmented" and long_self and causal
+            and q.shape[1] == k.shape[1]):
+        return _sdpa_segmented(q, k, v, q_positions=q_positions,
+                               causal=causal, segments=cfg.attn_segments,
+                               chunk_kv=cfg.chunk_kv)
+    return _sdpa_chunked(q, k, v, q_positions=q_positions, causal=causal,
+                         window=window, kv_valid=kv_valid,
+                         chunk_kv=cfg.chunk_kv)
+
+
+def _local_attention(q, k, v, window: int):
+    """FLOP-tight sliding-window causal attention (train/prefill).
+
+    Chunk size == window; each query chunk attends to [prev | own].
+    q,k,v: (B,S,H|Hkv,hd) with S % window == 0 after padding.
+    """
+    b, s, h, hd = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    w = window
+    nc = math.ceil(s / w)
+    pad = nc * w - s
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    scale = hd ** -0.5
+    qc = q.reshape(b, nc, w, hkv, g, hd).astype(jnp.float32)
+    kc = k.reshape(b, nc, w, hkv, hd)
+    vc = v.reshape(b, nc, w, hkv, hd)
+    prev_k = jnp.pad(kc, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    prev_v = jnp.pad(vc, ((0, 0), (1, 0), (0, 0), (0, 0), (0, 0)))[:, :-1]
+    kk = jnp.concatenate([prev_k, kc], axis=2)               # (B,nc,2W,Hkv,hd)
+    vv = jnp.concatenate([prev_v, vc], axis=2)
+
+    scores = jnp.einsum("bcqkgd,bcskd->bckgqs", qc,
+                        kk.astype(jnp.float32)) * scale
+    qi = jnp.arange(w)[:, None]                # in-chunk query index
+    kj = jnp.arange(2 * w)[None, :] - w        # kv offset relative to chunk
+    delta = qi - kj                            # q_pos - kv_pos
+    valid = (delta >= 0) & (delta < w)         # causal, within window
+    not_first = jnp.arange(nc)[:, None, None] > 0
+    valid = valid[None] & (not_first | (kj >= 0)[None])   # no prev for c=0
+    scores = jnp.where(valid[None, :, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bckgqs,bcskd->bcqkgd", p, vv.astype(jnp.float32))
+    out = out.reshape(b, nc * w, h, hd)[:, :s]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (self / cross / cached decode)
+# ---------------------------------------------------------------------------
+def apply_attention(params, cfg, x, *, positions, causal=True,
+                    local: bool = False, cross: bool = False,
+                    cache=None, decode_pos=None, kv_x=None, use_rope=True):
+    """Returns (out, new_cache).
+
+    * train/prefill: ``cache=None`` -> new_cache holds this segment's K/V
+      (ring-buffered to ``window`` when ``local``).
+    * decode: ``cache`` given, ``x`` is (B,1,D), ``decode_pos`` scalar.
+    * cross: ``kv_x`` is the encoder output at prefill (cache stores the
+      projected K/V); at decode the cross cache is static.
+    """
+    b, sq, d = x.shape
+    h, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    window = cfg.window if local else 0
+
+    q = dense(x, params["wq"]).reshape(b, sq, h, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+
+    is_decode = cache is not None and decode_pos is not None
+
+    if cross:
+        if kv_x is not None:       # prefill: project encoder output once
+            k = dense(kv_x, params["wk"]).reshape(b, -1, hkv, hd)
+            v = dense(kv_x, params["wv"]).reshape(b, -1, hkv, hd)
+            new_cache = {"k": k, "v": v}
+        else:                      # decode: static projected cache
+            new_cache = cache
+            k, v = cache["k"], cache["v"]
+        out = _sdpa(q, k, v, cfg=cfg, q_positions=positions, causal=False)
+        return dense(out.reshape(b, sq, h * hd), params["wo"]), new_cache
+
+    k = dense(x, params["wk"]).reshape(b, sq, hkv, hd)
+    v = dense(x, params["wv"]).reshape(b, sq, hkv, hd)
+    if cfg.qk_norm:
+        k = rmsnorm(k, params["k_norm"], cfg.norm_eps)
+    if use_rope:
+        pos2d = jnp.broadcast_to(positions[None, :], (b, sq))
+        q = rope(q, pos2d, cfg.rope_theta)
+        k = rope(k, pos2d, cfg.rope_theta)
+
+    if is_decode:
+        cap = cache["k"].shape[1]
+        slot = decode_pos % cap if window else decode_pos
+        z = jnp.zeros((), jnp.int32)
+        idx = (z, jnp.asarray(slot, jnp.int32), z, z)
+        kc = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          idx)
+        vc = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          idx)
+        new_cache = {"k": kc, "v": vc}
+        if window:
+            valid = jnp.minimum(decode_pos + 1, cap)
+            out = _sdpa_chunked(q, kc, vc, q_positions=positions,
+                                causal=False, kv_valid=valid,
+                                chunk_kv=cfg.chunk_kv)
+        else:
+            out = _sdpa_chunked(q, kc, vc, q_positions=positions,
+                                causal=True, kv_valid=decode_pos + 1,
+                                chunk_kv=cfg.chunk_kv)
+        return dense(out.reshape(b, sq, h * hd), params["wo"]), new_cache
+
+    # train / prefill
+    if local:
+        out = _local_attention(q, k, v, window)
+        # ring-buffer invariant: absolute position p lives at slot p % window
+        if sq >= window:
+            ring_k = jnp.roll(k[:, -window:], sq % window, axis=1)
+            ring_v = jnp.roll(v[:, -window:], sq % window, axis=1)
+        else:
+            ring_k = jnp.pad(k, ((0, 0), (0, window - sq), (0, 0), (0, 0)))
+            ring_v = jnp.pad(v, ((0, 0), (0, window - sq), (0, 0), (0, 0)))
+        new_cache = {"k": ring_k, "v": ring_v}
+    else:
+        out = _sdpa(q, k, v, cfg=cfg, q_positions=positions, causal=causal)
+        new_cache = {"k": k, "v": v}
+    out = shard_act(out.reshape(b, sq, h * hd), "batch", "seq", "ffn")
+    return dense(out, params["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+def _mla_q(params, cfg, x):
+    b, sq, _ = x.shape
+    h = cfg.num_heads
+    qk = cfg.nope_head_dim + cfg.rope_head_dim
+    if cfg.q_lora_rank:
+        cq = rmsnorm(dense(x, params["q_down"]), params["q_norm"],
+                     cfg.norm_eps)
+        q = dense(cq, params["q_up"])
+    else:
+        q = dense(x, params["wq"])
+    q = q.reshape(b, sq, h, qk)
+    return q[..., :cfg.nope_head_dim], q[..., cfg.nope_head_dim:]
+
+
+def apply_mla(params, cfg, x, *, positions, cache=None, decode_pos=None):
+    """Returns (out, new_cache); cache = {c_kv (B,S,r), k_rope (B,S,rd)}."""
+    b, sq, d = x.shape
+    h = cfg.num_heads
+    nope, rd, vd = cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    scale = (nope + rd) ** -0.5
+    pos2d = jnp.broadcast_to(positions[None, :], (b, sq))
+
+    q_nope, q_rope = _mla_q(params, cfg, x)
+    q_rope = rope(q_rope, pos2d, cfg.rope_theta)
+
+    ckv_full = dense(x, params["kv_down"])
+    c_kv = rmsnorm(ckv_full[..., :cfg.kv_lora_rank], params["kv_norm"],
+                   cfg.norm_eps)
+    k_rope = rope(ckv_full[..., cfg.kv_lora_rank:][:, :, None, :],
+                  pos2d, cfg.rope_theta)[:, :, 0, :]
+
+    if cache is not None and decode_pos is not None:
+        z = jnp.zeros((), jnp.int32)
+        idx = (z, jnp.asarray(decode_pos, jnp.int32), z)
+        ckv_c = jax.lax.dynamic_update_slice(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), idx)
+        kr_c = jax.lax.dynamic_update_slice(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), idx)
+        new_cache = {"c_kv": ckv_c, "k_rope": kr_c}
+        # absorbed decode
+        w_kup = params["k_up"].reshape(cfg.kv_lora_rank, h, nope)
+        w_vup = params["v_up"].reshape(cfg.kv_lora_rank, h, vd)
+        q_abs = jnp.einsum("bqhn,lhn->bqhl", q_nope.astype(jnp.float32),
+                           w_kup.astype(jnp.float32))
+        s = (jnp.einsum("bqhl,bsl->bhqs", q_abs,
+                        ckv_c.astype(jnp.float32))
+             + jnp.einsum("bqhr,bsr->bhqs", q_rope.astype(jnp.float32),
+                          kr_c.astype(jnp.float32))) * scale
+        kvpos = jnp.arange(ckv_c.shape[1])
+        s = jnp.where(kvpos[None, None, None, :] <= decode_pos, s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bhqs,bsl->bqhl", p, ckv_c.astype(jnp.float32))
+        out = jnp.einsum("bqhl,lhv->bqhv", ctx, w_vup.astype(jnp.float32))
+        out = out.astype(x.dtype).reshape(b, sq, h * vd)
+        return dense(out, params["wo"]), new_cache
+
+    # train / prefill: expanded attention
+    k_nope = dense(c_kv, params["k_up"]).reshape(b, sq, h, nope)
+    v = dense(c_kv, params["v_up"]).reshape(b, sq, h, vd)
+    k_rope_b = jnp.broadcast_to(k_rope[:, :, None, :], (b, sq, h, rd))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    # pad v to qk dim for the shared kernel, crop after
+    vpad = jnp.pad(v, ((0, 0), (0, 0), (0, 0), (0, nope + rd - vd)))
+    out = _sdpa(q, k, vpad, cfg=cfg, q_positions=positions,
+                causal=True)[..., :vd]
+    out = out.reshape(b, sq, h * vd)
+    new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+    return dense(out, params["wo"]), new_cache

@@ -1,0 +1,151 @@
+"""Shared neural layers: norms, RoPE, embeddings, MLPs, 1-D convs."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import ParamSpec, shard_act
+
+__all__ = [
+    "rmsnorm", "rmsnorm_spec", "rope", "dense", "dense_spec",
+    "mlp_specs", "apply_mlp", "embed_specs", "embed_tokens", "unembed",
+    "causal_conv1d_specs", "apply_causal_conv1d", "cross_entropy_loss",
+]
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rmsnorm_spec(dim: int, logical: str = "embed") -> ParamSpec:
+    return ParamSpec((dim,), (logical,), init="ones")
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding (half-split convention)
+# ---------------------------------------------------------------------------
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 1e4):
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs    # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense projections
+# ---------------------------------------------------------------------------
+def dense_spec(d_in: int, d_out: int, lin: str = "embed",
+               lout: str = "ffn", scale: Optional[float] = None) -> ParamSpec:
+    return ParamSpec((d_in, d_out), (lin, lout), scale=scale)
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    return jnp.einsum("...d,df->...f", x, w)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU or GELU)
+# ---------------------------------------------------------------------------
+def mlp_specs(d_model: int, d_ff: int, act: str = "silu"):
+    if act == "silu":
+        return {"w_gate": dense_spec(d_model, d_ff),
+                "w_up": dense_spec(d_model, d_ff),
+                "w_down": dense_spec(d_ff, d_model, "ffn", "embed")}
+    return {"w_in": dense_spec(d_model, d_ff),
+            "w_out": dense_spec(d_ff, d_model, "ffn", "embed")}
+
+
+def apply_mlp(params, x: jnp.ndarray, act: str = "silu") -> jnp.ndarray:
+    if act == "silu":
+        h = jax.nn.silu(dense(x, params["w_gate"])) * dense(x, params["w_up"])
+        h = shard_act(h, "batch", "seq", "ffn")
+        return dense(h, params["w_down"])
+    h = jax.nn.gelu(dense(x, params["w_in"]))
+    h = shard_act(h, "batch", "seq", "ffn")
+    return dense(h, params["w_out"])
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+def embed_specs(vocab: int, d_model: int, tie: bool, max_pos: int = 0):
+    s = {"embedding": ParamSpec((vocab, d_model), ("vocab", "embed"),
+                                scale=0.02)}
+    if not tie:
+        s["unembed"] = dense_spec(d_model, vocab, "embed", "vocab")
+    if max_pos:
+        s["pos_embedding"] = ParamSpec((max_pos, d_model), ("seq", "embed"),
+                                       scale=0.02)
+    return s
+
+
+def embed_tokens(params, tokens: jnp.ndarray, positions=None) -> jnp.ndarray:
+    x = jnp.take(params["embedding"], tokens, axis=0)
+    if positions is not None and "pos_embedding" in params:
+        x = x + jnp.take(params["pos_embedding"], positions, axis=0)
+    return shard_act(x, "batch", "seq", "embed")
+
+
+def unembed(params, x: jnp.ndarray) -> jnp.ndarray:
+    if "unembed" in params:
+        logits = dense(x, params["unembed"])
+    else:
+        logits = jnp.einsum("...d,vd->...v", x, params["embedding"])
+    return shard_act(logits, "batch", "seq", "vocab")
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d (Mamba / RecurrentGemma frontends)
+# ---------------------------------------------------------------------------
+def causal_conv1d_specs(channels: int, width: int):
+    return {"conv_w": ParamSpec((width, channels), ("conv", "inner"),
+                                scale=0.5),
+            "conv_b": ParamSpec((channels,), ("inner",), init="zeros")}
+
+
+def apply_causal_conv1d(params, x: jnp.ndarray, state=None):
+    """x: (B, S, C) depthwise causal conv; ``state``: (B, W-1, C) for decode.
+
+    Returns (y, new_state).
+    """
+    w = params["conv_w"].astype(x.dtype)           # (W, C)
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)          # (B, S+W-1, C)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(width))
+    y = y + params["conv_b"].astype(x.dtype)
+    new_state = xp[:, -(width - 1):, :]
+    return y, new_state
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                       mask: Optional[jnp.ndarray] = None):
+    """Mean next-token cross entropy in f32; labels (B, S) int32."""
+    lf = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(jnp.float32)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,289 @@
+"""Model assembly: embeddings + (prefix | scanned body | tail) stacks.
+
+Layers whose kinds repeat periodically are stacked and run under
+``lax.scan`` with per-group rematerialization, keeping HLO size O(1) in
+depth (a 94-layer MoE lowers in seconds).  Irregular layers (e.g.
+DeepSeek-V2's first dense layer, pattern remainders) run unscanned.
+
+Three entry points:
+  * ``forward``     -- training/eval logits over a full batch,
+  * ``prefill``     -- forward + KV/state cache construction,
+  * ``decode_step`` -- one-token step against the cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import ParamSpec, stack_specs, shard_act
+from .blocks import apply_block, block_cache_shapes, block_specs
+from .config import ModelConfig
+from .layers import (cross_entropy_loss, embed_specs, embed_tokens, rmsnorm,
+                     rmsnorm_spec, unembed)
+
+__all__ = ["Model"]
+
+
+def _remat(fn, mode: str):
+    if mode == "none":
+        return fn
+    if mode == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)  # "full": save nothing
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.kinds = cfg.layer_kinds()
+        pl = len(cfg.block_pattern)
+        start = cfg.first_dense_layers
+        if cfg.scan_layers and cfg.num_layers - start >= pl:
+            self.n_groups = (cfg.num_layers - start) // pl
+        else:
+            self.n_groups = 0
+        self.body_start = start
+        self.tail_start = start + self.n_groups * pl
+        self.pattern_kinds = [
+            self.kinds[start + p] if self.n_groups else None
+            for p in range(pl)] if self.n_groups else []
+        self.prefix_ids = list(range(0, self.body_start))
+        self.tail_ids = list(range(self.tail_start, cfg.num_layers))
+        self.use_rope = cfg.learned_pos == 0
+        self.cross = cfg.cross_attention
+
+    # ------------------------------------------------------------------
+    # parameter specs
+    # ------------------------------------------------------------------
+    def specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        s: Dict[str, Any] = {
+            "embed": embed_specs(cfg.padded_vocab, cfg.d_model,
+                                 cfg.tie_embeddings, max_pos=cfg.learned_pos),
+            "final_norm": rmsnorm_spec(cfg.d_model),
+        }
+        if self.prefix_ids:
+            s["prefix"] = {str(i): block_specs(cfg, *self.kinds[i],
+                                               cross=self.cross)
+                           for i in self.prefix_ids}
+        if self.n_groups:
+            s["body"] = {str(p): stack_specs(
+                block_specs(cfg, *self.pattern_kinds[p], cross=self.cross),
+                self.n_groups) for p in range(len(self.pattern_kinds))}
+        if self.tail_ids:
+            s["tail"] = {str(i): block_specs(cfg, *self.kinds[i],
+                                             cross=self.cross)
+                         for i in self.tail_ids}
+        if cfg.encoder_layers:
+            s["encoder"] = {
+                "body": stack_specs(block_specs(cfg, "attn", "dense"),
+                                    cfg.encoder_layers),
+                "final_norm": rmsnorm_spec(cfg.d_model),
+            }
+        return s
+
+    # ------------------------------------------------------------------
+    # encoder (whisper-style; stub embeddings in, contextual states out)
+    # ------------------------------------------------------------------
+    def _encode(self, params, audio_embed):
+        cfg = self.cfg
+        positions = jnp.arange(audio_embed.shape[1], dtype=jnp.int32)
+
+        def fn(carry, pg):
+            x, aux = carry
+            x, _, a = apply_block(pg, cfg, x, "attn", "dense",
+                                  positions=positions, causal=False,
+                                  use_rope=False)
+            return (x, aux + a), None
+
+        (x, _), _ = jax.lax.scan(_remat(fn, cfg.remat),
+                                 (audio_embed, jnp.zeros((), jnp.float32)),
+                                 params["encoder"]["body"])
+        return rmsnorm(x, params["encoder"]["final_norm"], cfg.norm_eps)
+
+    # ------------------------------------------------------------------
+    # embedding / input munging
+    # ------------------------------------------------------------------
+    def _embed(self, params, batch, positions):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        pos2d = positions if positions.ndim == 2 else positions[None, :]
+        x = embed_tokens(params["embed"], tokens,
+                         positions=positions if cfg.learned_pos else None)
+        if cfg.frontend == "patch_stub" and "patch_embed" in batch:
+            p = batch["patch_embed"].astype(x.dtype)   # (B, P, D)
+            x = jnp.concatenate([p, x[:, p.shape[1]:]], axis=1)
+        enc_out = None
+        if cfg.encoder_layers and "audio_embed" in batch:
+            enc_out = self._encode(params, batch["audio_embed"])
+        return shard_act(x, "batch", "seq", "embed"), enc_out
+
+    # ------------------------------------------------------------------
+    # layer stacks
+    # ------------------------------------------------------------------
+    def _run_stack(self, params, x, positions, *, causal=True, cache=None,
+                   decode_pos=None, enc_out=None, collect_cache=False):
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        new_cache: Dict[str, Any] = {}
+        decode = cache is not None and decode_pos is not None
+
+        def run_one(pblock, x, kinds, c):
+            return apply_block(pblock, cfg, x, *kinds, positions=positions,
+                               causal=causal, cache=c,
+                               decode_pos=decode_pos if decode else None,
+                               enc_out=enc_out, use_rope=self.use_rope)
+
+        if self.prefix_ids:
+            new_cache["prefix"] = {}
+            for i in self.prefix_ids:
+                c = cache["prefix"][str(i)] if decode else None
+                x, nc, a = run_one(params["prefix"][str(i)], x,
+                                   self.kinds[i], c)
+                aux = aux + a
+                new_cache["prefix"][str(i)] = nc
+
+        if self.n_groups:
+            pat = self.pattern_kinds
+
+            def fn(carry, xs):
+                x, aux = carry
+                if decode:
+                    pg, cg = xs
+                else:
+                    pg, cg = xs, None
+                ncg = {}
+                for p, kinds in enumerate(pat):
+                    ci = cg[str(p)] if cg is not None else None
+                    x, nc, a = run_one(pg[str(p)], x, kinds, ci)
+                    aux = aux + a
+                    ncg[str(p)] = nc
+                ys = ncg if (decode or collect_cache) else None
+                return (x, aux), ys
+
+            xs = (params["body"], cache["body"]) if decode else params["body"]
+            (x, aux), body_cache = jax.lax.scan(_remat(fn, cfg.remat),
+                                                (x, aux), xs)
+            if decode or collect_cache:
+                new_cache["body"] = body_cache
+
+        if self.tail_ids:
+            new_cache["tail"] = {}
+            for i in self.tail_ids:
+                c = cache["tail"][str(i)] if decode else None
+                x, nc, a = run_one(params["tail"][str(i)], x,
+                                   self.kinds[i], c)
+                aux = aux + a
+                new_cache["tail"][str(i)] = nc
+
+        return x, new_cache, aux
+
+    # ------------------------------------------------------------------
+    # public entry points
+    # ------------------------------------------------------------------
+    def forward(self, params, batch):
+        """-> (logits (B,S,V), aux).  Training / teacher-forced eval."""
+        cfg = self.cfg
+        s = batch["tokens"].shape[1]
+        positions = jnp.arange(s, dtype=jnp.int32)
+        x, enc_out = self._embed(params, batch, positions)
+        x, _, aux = self._run_stack(params, x, positions, enc_out=enc_out)
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(params["embed"], x)[..., :cfg.vocab_size]
+        return logits, aux
+
+    def loss(self, params, batch, aux_weight: float = 0.01):
+        logits, aux = self.forward(params, batch)
+        ce = cross_entropy_loss(logits, batch["labels"],
+                                batch.get("loss_mask"))
+        return ce + aux_weight * aux, {"ce": ce, "aux": aux}
+
+    def prefill(self, params, batch, max_len: Optional[int] = None):
+        """-> (last-position logits (B,1,V), cache sized for ``max_len``)."""
+        cfg = self.cfg
+        b, s = batch["tokens"].shape
+        positions = jnp.arange(s, dtype=jnp.int32)
+        x, enc_out = self._embed(params, batch, positions)
+        x, cache, _ = self._run_stack(params, x, positions, enc_out=enc_out,
+                                      collect_cache=True)
+        x = rmsnorm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+        logits = unembed(params["embed"], x)[..., :cfg.vocab_size]
+        if max_len is not None and max_len > s:
+            cache_dtype = jax.tree.leaves(params)[0].dtype
+            full = self.init_cache(b, max_len,
+                                   enc_len=(enc_out.shape[1]
+                                            if enc_out is not None else 0),
+                                   dtype=cache_dtype)
+            cache = _merge_cache(full, cache)
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens, pos):
+        """tokens (B,1), pos scalar int32 -> (logits (B,1,V), new cache)."""
+        cfg = self.cfg
+        positions = jnp.reshape(pos, (1,)).astype(jnp.int32)
+        x, _ = self._embed(params, {"tokens": tokens}, positions)
+        x, new_cache, _ = self._run_stack(params, x, positions, cache=cache,
+                                          decode_pos=pos)
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        logits = unembed(params["embed"], x)[..., :cfg.vocab_size]
+        return logits, new_cache
+
+    # ------------------------------------------------------------------
+    # caches
+    # ------------------------------------------------------------------
+    def cache_shapes(self, batch: int, max_len: int, enc_len: int = 0):
+        cfg = self.cfg
+        enc_len = enc_len or (cfg.encoder_seq if cfg.encoder_layers else 0)
+
+        def one(i):
+            return block_cache_shapes(cfg, self.kinds[i][0], self.cross,
+                                      batch, max_len, enc_len)
+
+        tree: Dict[str, Any] = {}
+        if self.prefix_ids:
+            tree["prefix"] = {str(i): one(i) for i in self.prefix_ids}
+        if self.n_groups:
+            body = {}
+            for p in range(len(self.pattern_kinds)):
+                shapes = block_cache_shapes(cfg, self.pattern_kinds[p][0],
+                                            self.cross, batch, max_len,
+                                            enc_len)
+                body[str(p)] = jax.tree.map(
+                    lambda sh: (self.n_groups,) + sh, shapes,
+                    is_leaf=lambda v: isinstance(v, tuple)
+                    and all(isinstance(t, int) for t in v))
+            tree["body"] = body
+        if self.tail_ids:
+            tree["tail"] = {str(i): one(i) for i in self.tail_ids}
+        return tree
+
+    def init_cache(self, batch: int, max_len: int, enc_len: int = 0,
+                   dtype=jnp.bfloat16, factory=None):
+        shapes = self.cache_shapes(batch, max_len, enc_len)
+        factory = factory or (lambda sh, dt: jnp.zeros(sh, dt))
+
+        def make(path, sh):
+            name = str(path[-1].key) if hasattr(path[-1], "key") else ""
+            dt = jnp.float32 if name in ("h", "ssm") else dtype
+            return factory(sh, dt)
+
+        return jax.tree_util.tree_map_with_path(
+            make, shapes,
+            is_leaf=lambda v: isinstance(v, tuple)
+            and all(isinstance(t, int) for t in v))
+
+
+def _merge_cache(full, prefill):
+    """Write a prefill cache into a zero-initialized ``max_len`` cache."""
+
+    def merge(f, p):
+        if f.shape == p.shape:
+            return p.astype(f.dtype)
+        idx = (0,) * f.ndim
+        return jax.lax.dynamic_update_slice(f, p.astype(f.dtype), idx)
+
+    return jax.tree.map(merge, full, prefill)

@@ -1,0 +1,86 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) with associative scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import ParamSpec, shard_act
+from .layers import (apply_causal_conv1d, causal_conv1d_specs, dense,
+                     dense_spec)
+
+__all__ = ["rglru_specs", "apply_rglru", "rglru_cache_shapes"]
+
+_C = 8.0  # Griffin's fixed gate sharpness
+
+
+def rglru_specs(cfg):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    h = max(cfg.num_heads, 1)
+    bw = w // h                       # Griffin: block-diagonal gate matrices
+    s = {"w_x": dense_spec(d, w, "embed", "inner"),
+         "w_y": dense_spec(d, w, "embed", "inner"),
+         "w_rg": ParamSpec((h, bw, bw), ("inner", None, None)),
+         "b_rg": ParamSpec((w,), ("inner",), init="zeros"),
+         "w_ig": ParamSpec((h, bw, bw), ("inner", None, None)),
+         "b_ig": ParamSpec((w,), ("inner",), init="zeros"),
+         "a_param": ParamSpec((w,), ("inner",), init="ones"),
+         "w_out": dense_spec(w, d, "inner", "embed")}
+    s.update(causal_conv1d_specs(w, cfg.conv_width))
+    return s
+
+
+def _block_gate(x, w_block, b):
+    """x: (B,S,W) through a block-diagonal (h, W/h, W/h) matrix + bias."""
+    bsz, s, wdim = x.shape
+    h, bw, _ = w_block.shape
+    xh = x.reshape(bsz, s, h, bw)
+    y = jnp.einsum("bshi,hij->bshj", xh, w_block).reshape(bsz, s, wdim)
+    return y + b
+
+
+def rglru_cache_shapes(cfg, batch: int):
+    w = cfg.lru_width or cfg.d_model
+    return {"conv": (batch, cfg.conv_width - 1, w), "h": (batch, w)}
+
+
+def apply_rglru(params, cfg, x, cache=None, decode: bool = False):
+    """x: (B,S,D) -> (out, new_cache={conv, h})."""
+    b, s, d = x.shape
+    xb = dense(x, params["w_x"])
+    yb = jax.nn.gelu(dense(x, params["w_y"]))
+
+    conv_state = cache["conv"] if cache is not None else None
+    xc, new_conv = apply_causal_conv1d(
+        {"conv_w": params["conv_w"], "conv_b": params["conv_b"]}, xb,
+        conv_state)
+
+    r = jax.nn.sigmoid(_block_gate(xc, params["w_rg"], params["b_rg"]))
+    i = jax.nn.sigmoid(_block_gate(xc, params["w_ig"], params["b_ig"]))
+    log_a = (-_C * jax.nn.softplus(params["a_param"].astype(jnp.float32))
+             * r.astype(jnp.float32))                     # (B,S,W) <= 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    gated = beta * (i.astype(jnp.float32) * xc.astype(jnp.float32))
+
+    if decode:
+        h_prev = cache["h"].astype(jnp.float32)           # (B,W)
+        h = a[:, 0] * h_prev + gated[:, 0]
+        hs = h[:, None]
+    else:
+        h0 = cache["h"].astype(jnp.float32) if cache is not None else None
+
+        def combine(c1, c2):
+            a1, b1 = c1
+            a2, b2 = c2
+            return a1 * a2, a2 * b1 + b2
+
+        if h0 is not None:  # inject carried state into the first step
+            gated = gated.at[:, 0].add(a[:, 0] * h0)
+        aa, hs = jax.lax.associative_scan(combine, (a, gated), axis=1)
+        h = hs[:, -1]
+
+    hs = hs.astype(x.dtype)
+    hs = shard_act(hs, "batch", "seq", "inner")
+    out = dense(hs * yb, params["w_out"])
+    return out, {"conv": new_conv, "h": h.astype(jnp.float32)}

@@ -1,0 +1,142 @@
+"""Mamba-2 SSD (state-space duality) blocks: chunked scan + O(1) decode."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import ParamSpec, shard_act
+from .layers import (apply_causal_conv1d, causal_conv1d_specs, dense,
+                     dense_spec, rmsnorm)
+
+__all__ = ["mamba_specs", "apply_mamba", "mamba_cache_shapes"]
+
+
+def mamba_specs(cfg):
+    d = cfg.d_model
+    din = cfg.d_inner
+    h = cfg.ssm_heads
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    conv_ch = din + 2 * g * n
+    s = {"in_proj": dense_spec(d, 2 * din + 2 * g * n + h, "embed", "inner"),
+         "A_log": ParamSpec((h,), (None,), init="zeros"),
+         "D_skip": ParamSpec((h,), (None,), init="ones"),
+         "dt_bias": ParamSpec((h,), (None,), init="zeros"),
+         "norm": ParamSpec((din,), ("inner",), init="ones"),
+         "out_proj": dense_spec(din, d, "inner", "embed")}
+    s.update(causal_conv1d_specs(conv_ch, cfg.conv_width))
+    return s
+
+
+def mamba_cache_shapes(cfg, batch: int):
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {"conv": (batch, cfg.conv_width - 1, conv_ch),
+            "ssm": (batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim)}
+
+
+def _ssd_chunked(xs, dt, a, bm, cm, chunk: int):
+    """Chunked SSD scan.
+
+    xs: (B,S,H,P) values; dt: (B,S,H) softplus'd steps; a: (H,) negative;
+    bm, cm: (B,S,H,N) input/output projections (already head-broadcast).
+    Returns (y (B,S,H,P), final_state (B,H,N,P)).
+    """
+    b, s, h, p = xs.shape
+    n = bm.shape[-1]
+    q = min(chunk, s)
+    nc = math.ceil(s / q)
+    pad = nc * q - s
+    if pad:  # padded steps get dt=0 => exp(0) decay, zero input: no-ops
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bm = jnp.pad(bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    xc = xs.reshape(b, nc, q, h, p).astype(jnp.float32)
+    dtc = dt.reshape(b, nc, q, h).astype(jnp.float32)
+    bc = bm.reshape(b, nc, q, h, n).astype(jnp.float32)
+    cc = cm.reshape(b, nc, q, h, n).astype(jnp.float32)
+
+    da = dtc * a.astype(jnp.float32)                     # (B,nc,Q,H) <= 0
+    da_cum = jnp.cumsum(da, axis=2)                      # inclusive
+    da_tot = da_cum[:, :, -1, :]                         # (B,nc,H)
+
+    # intra-chunk: L[i,j] = exp(da_cum_i - da_cum_j) for i >= j
+    li = da_cum[:, :, :, None, :]                        # i
+    lj = da_cum[:, :, None, :, :]                        # j
+    mask = (jnp.arange(q)[:, None] >= jnp.arange(q)[None, :])
+    l = jnp.where(mask[None, None, :, :, None], jnp.exp(li - lj), 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", cc, bc) * l
+    y_diag = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", scores, dtc, xc)
+
+    # per-chunk input states: sum_j exp(da_tot - da_cum_j) dt_j B_j x_j
+    decay_out = jnp.exp(da_tot[:, :, None, :] - da_cum)  # (B,nc,Q,H)
+    states = jnp.einsum("bcjhn,bcjh,bcjhp->bchnp", bc, decay_out * dtc, xc)
+
+    # inter-chunk recurrence (sequential scan over chunks)
+    def step(st, inp):
+        st_dec, new = inp
+        st_next = st * st_dec[:, :, None, None] + new
+        return st_next, st
+
+    st0 = jnp.zeros((b, h, n, p), jnp.float32)
+    decays = jnp.exp(da_tot).transpose(1, 0, 2)          # (nc,B,H)
+    st_in = states.transpose(1, 0, 2, 3, 4)              # (nc,B,H,N,P)
+    final, prev = jax.lax.scan(step, st0, (decays, st_in))
+    prev = prev.transpose(1, 0, 2, 3, 4)                 # state before chunk c
+
+    y_off = jnp.einsum("bcihn,bchnp,bcih->bcihp", cc, prev,
+                       jnp.exp(da_cum))
+    y = (y_diag + y_off).reshape(b, nc * q, h, p)[:, :s]
+    return y.astype(xs.dtype), final
+
+
+def apply_mamba(params, cfg, x, cache=None, decode: bool = False):
+    """x: (B,S,D). Returns (out, new_cache)."""
+    b, s, d = x.shape
+    din, h, p = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    rep = h // g
+
+    zxbcdt = dense(x, params["in_proj"])
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din:2 * din + 2 * g * n]
+    dt_raw = zxbcdt[..., -h:]
+
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = apply_causal_conv1d(
+        {"conv_w": params["conv_w"], "conv_b": params["conv_b"]}, xbc,
+        conv_state if decode or cache is not None else None)
+    xbc = jax.nn.silu(xbc)
+
+    xs = xbc[..., :din].reshape(b, s, h, p)
+    bm = xbc[..., din:din + g * n].reshape(b, s, g, n)
+    cm = xbc[..., din + g * n:].reshape(b, s, g, n)
+    bm = jnp.repeat(bm, rep, axis=2)
+    cm = jnp.repeat(cm, rep, axis=2)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    if decode:
+        st = cache["ssm"].astype(jnp.float32)            # (B,H,N,P)
+        da = jnp.exp(dt[:, 0] * a)                       # (B,H)
+        upd = jnp.einsum("bh,bhn,bhp->bhnp", dt[:, 0],
+                         bm[:, 0].astype(jnp.float32),
+                         xs[:, 0].astype(jnp.float32))
+        st = st * da[:, :, None, None] + upd
+        y = jnp.einsum("bhn,bhnp->bhp", cm[:, 0].astype(jnp.float32), st)
+        y = y[:, None].astype(x.dtype)                   # (B,1,H,P)
+        new_ssm = st
+    else:
+        y, new_ssm = _ssd_chunked(xs, dt, a, bm, cm, cfg.ssm_chunk)
+
+    y = y + params["D_skip"].astype(x.dtype)[None, None, :, None] \
+        * xs.astype(x.dtype)
+    y = y.reshape(b, s, din)
+    y = rmsnorm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                params["norm"], cfg.norm_eps)
+    y = shard_act(y, "batch", "seq", "inner")
+    out = dense(y, params["out_proj"])
+    return out, {"conv": new_conv, "ssm": new_ssm.astype(jnp.float32)}

@@ -1,0 +1,4 @@
+from .adamw import (AdamWConfig, adamw_init, adamw_update, cosine_schedule,
+                    global_norm, zero1_shardings, accumulate_grads)
+from .compress import (quantize_int8, dequantize_int8, compress_tree,
+                       compressed_psum_mean)

@@ -1,0 +1,132 @@
+"""AdamW with f32 master state, global-norm clipping, cosine schedule,
+gradient accumulation, and ZeRO-1 optimizer-state sharding helpers."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+           "global_norm", "zero1_shardings", "accumulate_grads"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1),
+                        0.0, 1.0)
+        cos = 0.5 * base_lr * (1.0 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig,
+                 lr_schedule: Optional[Callable] = None):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    lr = lr_schedule(step) if lr_schedule else cfg.lr
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = cfg.b1 * mu + (1 - cfg.b1) * g
+        nu = cfg.b2 * nu + (1 - cfg.b2) * g * g
+        mu_hat = mu / (1 - cfg.b1 ** step.astype(jnp.float32))
+        nu_hat = nu / (1 - cfg.b2 ** step.astype(jnp.float32))
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_mu = jax.tree.leaves(state["mu"])
+    flat_nu = jax.tree.leaves(state["nu"])
+    new_p, new_mu, new_nu = [], [], []
+    for p, g, mu, nu in zip(flat_p, flat_g, flat_mu, flat_nu):
+        a, b, c = upd(p, g, mu, nu)
+        new_p.append(a), new_mu.append(b), new_nu.append(c)
+    new_params = jax.tree.unflatten(treedef, new_p)
+    new_state = {"mu": jax.tree.unflatten(treedef, new_mu),
+                 "nu": jax.tree.unflatten(treedef, new_nu),
+                 "step": step}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}
+
+
+def zero1_shardings(param_shardings, abstract_params, mesh: Mesh,
+                    zero_axis: str = "data"):
+    """ZeRO-1: shard optimizer moments over the data axis.
+
+    For each parameter, the first dimension that is unsharded in the
+    parameter's spec and divisible by the axis size gets ``zero_axis``.
+    Falls back to the parameter's own sharding when nothing fits, so the
+    result is always a valid NamedSharding tree for the Adam moments.
+    """
+    size = mesh.shape[zero_axis]
+
+    def for_param(ns: NamedSharding, aval):
+        shape = aval.shape
+        spec = list(ns.spec) + [None] * (len(shape) - len(ns.spec))
+        used = set()
+        for s in spec:
+            for a in (s if isinstance(s, tuple) else (s,)):
+                if a:
+                    used.add(a)
+        if zero_axis in used:
+            return ns
+        for i, (s, dim) in enumerate(zip(spec, shape)):
+            if s is None and dim % size == 0 and dim >= size:
+                spec[i] = zero_axis
+                return NamedSharding(mesh, P(*spec))
+        return ns
+
+    return jax.tree.map(for_param, param_shardings, abstract_params)
+
+
+def accumulate_grads(loss_fn: Callable, params, batches, microbatches: int):
+    """Mean loss/grads over ``microbatches`` splits of the leading axis."""
+
+    def split(x):
+        return x.reshape((microbatches, x.shape[0] // microbatches)
+                         + x.shape[1:])
+
+    mb = jax.tree.map(split, batches)
+
+    def step(carry, b):
+        acc, loss_acc = carry
+        (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(params, b)
+        acc = jax.tree.map(jnp.add, acc, g)
+        return (acc, loss_acc + loss), None
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (gsum, lsum), _ = jax.lax.scan(step, (zeros, jnp.zeros((), jnp.float32)),
+                                   mb)
+    inv = 1.0 / microbatches
+    return lsum * inv, jax.tree.map(lambda g: g * inv, gsum)

@@ -1,0 +1,4 @@
+from .sharding import (ParamSpec, LOGICAL_RULES, logical_to_pspec,
+                       param_pspecs, param_shardings, init_params,
+                       abstract_params, stack_specs, shard_act,
+                       activate_mesh, active_mesh, count_params)

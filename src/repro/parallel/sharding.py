@@ -1,0 +1,201 @@
+"""Logical-axis sharding: one source of truth for params and activations.
+
+Every parameter is declared as a :class:`ParamSpec` carrying its *logical*
+axis names; a rule table maps logical names onto mesh axes (DP over
+``pod``/``data``, TP/EP over ``model``).  The same tree of specs yields
+
+* initialized parameters (deterministic per-path PRNG folding),
+* ``PartitionSpec``s / ``NamedSharding``s for pjit in_shardings,
+* activation sharding constraints via :func:`shard_act`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "ParamSpec", "LOGICAL_RULES", "logical_to_pspec", "param_pspecs",
+    "param_shardings", "init_params", "abstract_params", "stack_specs",
+    "shard_act", "activate_mesh", "active_mesh", "count_params",
+]
+
+# logical axis -> mesh axis (None = replicated).  DP batch over pod+data,
+# TP over model for heads / ffn / vocab, EP: experts over model.
+LOGICAL_RULES: Dict[str, Any] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": None,
+    "embed": None,
+    "q_heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "ffn": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_cap": None,
+    "expert_group": ("pod", "data"),
+    "inner": "model",       # mamba d_inner / rg-lru width
+    "state": None,
+    "conv": None,
+    "lora": None,           # MLA compressed dims stay replicated
+    "layers": None,         # stacked-scan leading axis
+    "zero": "data",         # ZeRO-1 optimizer-state sharding axis
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones
+    scale: Optional[float] = None  # stddev; default 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.logical):
+            raise ValueError(f"shape {self.shape} vs logical {self.logical}")
+
+
+def logical_to_pspec(logical, rules=None, mesh: Optional[Mesh] = None) -> P:
+    rules = rules or LOGICAL_RULES
+    mesh_axes = set(mesh.shape.keys()) if mesh is not None else None
+    axes = []
+    used = set()
+    for name in logical:
+        ax = rules.get(name) if name is not None else None
+        if isinstance(ax, tuple):
+            ax = tuple(a for a in ax
+                       if a not in used
+                       and (mesh_axes is None or a in mesh_axes))
+            ax = ax if ax else None
+        elif ax is not None and mesh_axes is not None and ax not in mesh_axes:
+            ax = None
+        if ax is None:
+            axes.append(None)
+        else:
+            flat = ax if isinstance(ax, tuple) else (ax,)
+            if any(a in used for a in flat):
+                axes.append(None)      # a mesh axis may appear only once
+                continue
+            used.update(flat)
+            axes.append(ax)
+    return P(*axes)
+
+
+def _is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def param_pspecs(specs, rules=None, mesh: Optional[Mesh] = None):
+    return jax.tree.map(lambda s: logical_to_pspec(s.logical, rules, mesh),
+                        specs, is_leaf=_is_spec)
+
+
+def prune_pspec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop mesh axes from dims they don't divide (uneven shardings are
+    legal in GSPMD but pad; we prefer replication for those dims)."""
+    out = []
+    for i, s in enumerate(spec):
+        if s is None or i >= len(shape):
+            out.append(None)
+            continue
+        axes = s if isinstance(s, tuple) else (s,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        out.append(s if (n > 0 and shape[i] % n == 0) else None)
+    return P(*out)
+
+
+def param_shardings(specs, mesh: Mesh, rules=None):
+    def one(s: ParamSpec):
+        spec = prune_pspec(logical_to_pspec(s.logical, rules, mesh), s.shape,
+                           mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(one, specs, is_leaf=_is_spec)
+
+
+def _path_seed(path) -> int:
+    s = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+    return int.from_bytes(hashlib.sha256(s.encode()).digest()[:4], "little")
+
+
+def init_params(specs, key: jax.Array, dtype=jnp.bfloat16):
+    """Materialize a spec tree; per-leaf keys are path-derived (stable)."""
+
+    def one(path, spec: ParamSpec):
+        k = jax.random.fold_in(key, _path_seed(path))
+        if spec.init == "zeros":
+            return jnp.zeros(spec.shape, dtype)
+        if spec.init == "ones":
+            return jnp.ones(spec.shape, dtype)
+        fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+        std = spec.scale if spec.scale is not None else fan_in ** -0.5
+        return (jax.random.normal(k, spec.shape, jnp.float32) * std).astype(dtype)
+
+    return jax.tree_util.tree_map_with_path(one, specs, is_leaf=_is_spec)
+
+
+def abstract_params(specs, dtype=jnp.bfloat16):
+    """ShapeDtypeStructs for the spec tree (used by the dry-run)."""
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, dtype), specs,
+                        is_leaf=_is_spec)
+
+
+def stack_specs(specs, n_layers: int):
+    """Prepend a stacked-layers axis to every leaf (for lax.scan blocks)."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n_layers,) + s.shape, ("layers",) + s.logical,
+                            init=s.init, scale=s.scale),
+        specs, is_leaf=_is_spec)
+
+
+def count_params(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=_is_spec)
+    return sum(int(np.prod(s.shape)) for s in leaves)
+
+
+# ---------------------------------------------------------------------------
+# active mesh context (read at trace time by shard_act)
+# ---------------------------------------------------------------------------
+_STATE = threading.local()
+
+
+class activate_mesh:
+    """``with activate_mesh(mesh):`` makes shard_act constraints concrete."""
+
+    def __init__(self, mesh: Optional[Mesh], rules=None):
+        self.mesh, self.rules = mesh, rules
+
+    def __enter__(self):
+        self.prev = getattr(_STATE, "mesh", None), getattr(_STATE, "rules", None)
+        _STATE.mesh, _STATE.rules = self.mesh, self.rules
+        return self
+
+    def __exit__(self, *exc):
+        _STATE.mesh, _STATE.rules = self.prev
+        return False
+
+
+def active_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+def shard_act(x: jnp.ndarray, *logical: Optional[str]) -> jnp.ndarray:
+    """Constrain an activation's sharding by logical axis names (no-op when
+    no mesh is active, e.g. single-device tests)."""
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    rules = getattr(_STATE, "rules", None)
+    if len(logical) != getattr(x, "ndim", len(logical)):
+        return x  # vmap-inserted batch dims: skip the constraint
+    spec = prune_pspec(logical_to_pspec(logical, rules, mesh), x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

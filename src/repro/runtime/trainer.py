@@ -1,0 +1,167 @@
+"""Training runtime: restartable loop with failure injection, straggler
+watchdog, async checkpointing, and elastic restore.
+
+The loop is the unit of fault tolerance: any crash (including the
+injected ``SimulatedFailure``) loses at most ``ckpt_every`` steps; calling
+``Trainer.run`` again resumes from the newest atomic checkpoint, possibly
+on a different mesh (ZeRO/TP states are stored mesh-agnostic on host).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import AsyncCheckpointer, restore_checkpoint
+from repro.data.pipeline import shard_batch
+from repro.data.synthetic import TokenStream
+from repro.models import Model
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               cosine_schedule, zero1_shardings)
+from repro.optim.compress import compress_tree
+from repro.parallel.sharding import (abstract_params, activate_mesh,
+                                     init_params, param_shardings)
+
+__all__ = ["TrainerConfig", "Trainer", "SimulatedFailure"]
+
+
+class SimulatedFailure(RuntimeError):
+    """Injected node failure (tests the checkpoint/restart path)."""
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    batch_size: int = 8
+    seq_len: int = 64
+    steps: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 5
+    keep: int = 3
+    lr: float = 1e-3
+    warmup: int = 10
+    seed: int = 0
+    grad_compress: bool = False
+    zero1: bool = True
+    straggler_factor: float = 5.0   # step slower than factor x median => flag
+    fail_at_step: Optional[int] = None   # failure injection
+    log_every: int = 5
+    param_dtype: Any = jnp.float32
+
+
+class Trainer:
+    def __init__(self, model_cfg, cfg: TrainerConfig, mesh=None):
+        self.model = Model(model_cfg)
+        self.model_cfg = model_cfg
+        self.cfg = cfg
+        self.mesh = mesh
+        self.checkpointer = AsyncCheckpointer(cfg.ckpt_dir, cfg.keep)
+        self.straggler_events = []
+        self.metrics_log = []
+
+        specs = self.model.specs()
+        self._specs = specs
+        if mesh is not None:
+            self.p_shard = param_shardings(specs, mesh)
+            self.opt_shard = {
+                "mu": zero1_shardings(self.p_shard,
+                                      abstract_params(specs,
+                                                      cfg.param_dtype),
+                                      mesh),
+                "nu": zero1_shardings(self.p_shard,
+                                      abstract_params(specs,
+                                                      cfg.param_dtype),
+                                      mesh),
+                "step": None,
+            }
+        else:
+            self.p_shard = None
+            self.opt_shard = None
+
+        opt_cfg = AdamWConfig(lr=cfg.lr)
+        schedule = cosine_schedule(cfg.lr, cfg.warmup, cfg.steps)
+
+        def train_step(params, opt, batch, key):
+            loss_val, grads = jax.value_and_grad(
+                lambda p: self.model.loss(p, batch)[0])(params)
+            if cfg.grad_compress:
+                grads = compress_tree(grads, key)
+            params, opt, metrics = adamw_update(params, grads, opt, opt_cfg,
+                                                schedule)
+            metrics["loss"] = loss_val
+            return params, opt, metrics
+
+        self._train_step = jax.jit(train_step, donate_argnums=(0, 1))
+
+    # ------------------------------------------------------------------
+    def init_state(self):
+        params = init_params(self._specs, jax.random.key(self.cfg.seed),
+                             self.cfg.param_dtype)
+        if self.mesh is not None:
+            params = jax.tree.map(jax.device_put, params, self.p_shard)
+        opt = adamw_init(params)
+        return params, opt
+
+    def restore(self):
+        params_like, opt_like = jax.tree.map(np.asarray, self.init_state())
+        shardings = None
+        if self.mesh is not None:
+            shardings = {"params": self.p_shard, "opt": self.opt_shard}
+        tree, step, extra = restore_checkpoint(
+            self.cfg.ckpt_dir, {"params": params_like, "opt": opt_like},
+            shardings=shardings)
+        if tree is None:
+            return None
+        return tree["params"], tree["opt"], step
+
+    # ------------------------------------------------------------------
+    def run(self, resume: bool = True) -> Dict[str, Any]:
+        cfg = self.cfg
+        restored = self.restore() if resume else None
+        if restored is not None:
+            params, opt, start_step = restored
+            start_step = int(start_step)
+        else:
+            params, opt = self.init_state()
+            start_step = 0
+
+        stream = TokenStream(self.model_cfg.vocab_size, cfg.seq_len,
+                             cfg.batch_size, seed=cfg.seed)
+        durations = []
+        ctx = activate_mesh(self.mesh) if self.mesh is not None else None
+        if ctx:
+            ctx.__enter__()
+        try:
+            step = start_step
+            for step in range(start_step, cfg.steps):
+                if cfg.fail_at_step is not None and step == cfg.fail_at_step:
+                    raise SimulatedFailure(f"injected failure at {step}")
+                t0 = time.perf_counter()
+                batch = shard_batch(stream.batch(step), self.mesh)
+                params, opt, metrics = self._train_step(
+                    params, opt, batch, jax.random.key(step))
+                loss = float(metrics["loss"])
+                dt = time.perf_counter() - t0
+                durations.append(dt)
+                med = float(np.median(durations))
+                if len(durations) > 3 and dt > cfg.straggler_factor * med:
+                    self.straggler_events.append(
+                        {"step": step, "sec": dt, "median": med})
+                if step % cfg.log_every == 0:
+                    self.metrics_log.append({"step": step, "loss": loss,
+                                             "sec": dt})
+                if (step + 1) % cfg.ckpt_every == 0:
+                    self.checkpointer.save(step + 1,
+                                           {"params": params, "opt": opt},
+                                           extra={"loss": loss})
+            self.checkpointer.save(cfg.steps, {"params": params, "opt": opt})
+            self.checkpointer.wait()
+            return {"params": params, "opt": opt, "last_loss": loss,
+                    "log": self.metrics_log,
+                    "stragglers": self.straggler_events}
+        finally:
+            if ctx:
+                ctx.__exit__(None, None, None)

@@ -1,0 +1,35 @@
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+
+def run_subprocess(code: str, devices: int = 8, timeout: int = 600,
+                   extra_env=None):
+    """Run python code in a fresh process with N fake host devices.
+
+    Needed because the main pytest process must keep the default single
+    CPU device (smoke tests and benches see 1 device per the assignment).
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={devices}")
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.update(extra_env or {})
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, cwd=REPO, timeout=timeout, env=env)
+    if r.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={r.returncode})\n--- stdout ---\n"
+            f"{r.stdout[-4000:]}\n--- stderr ---\n{r.stderr[-4000:]}")
+    return r.stdout
+
+
+@pytest.fixture
+def subproc():
+    return run_subprocess

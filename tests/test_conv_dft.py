@@ -1,0 +1,76 @@
+"""DPRT applications: exact convolution (the paper's motivation) and the
+discrete Fourier-slice 2-D DFT."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import conv as C
+from repro.core import dft as F
+from repro.core.dprt import next_prime
+
+
+@pytest.mark.parametrize("n", [5, 7, 11, 13])
+def test_circular_conv_exact(n):
+    rng = np.random.default_rng(n)
+    f = jnp.asarray(rng.integers(0, 256, (n, n)), jnp.int32)
+    g = jnp.asarray(rng.integers(0, 16, (n, n)), jnp.int32)
+    got = np.asarray(C.circ_conv2d_dprt(f, g))
+    want = np.asarray(C.circ_conv2d_direct(f, g))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(a=st.integers(3, 9), c=st.integers(2, 5), seed=st.integers(0, 10 ** 6))
+def test_linear_conv_exact_vs_numpy(a, c, seed):
+    rng = np.random.default_rng(seed)
+    f = jnp.asarray(rng.integers(0, 256, (a, a)), jnp.int32)
+    g = jnp.asarray(rng.integers(0, 16, (c, c)), jnp.int32)
+    got = np.asarray(C.linear_conv2d_dprt(f, g))
+    np.testing.assert_array_equal(got, C.linear_conv2d_direct(f, g))
+
+
+def test_fft_path_agrees_but_is_float():
+    """The FFT route (what the paper's hardware avoids) only matches after
+    rounding -- the DPRT route is exact by construction."""
+    rng = np.random.default_rng(0)
+    f = jnp.asarray(rng.integers(0, 256, (11, 11)), jnp.int32)
+    g = jnp.asarray(rng.integers(0, 16, (11, 11)), jnp.int32)
+    exact = np.asarray(C.circ_conv2d_dprt(f, g))
+    fft = np.asarray(C.circ_conv2d_fft(f, g))
+    np.testing.assert_allclose(fft, exact, rtol=0, atol=0.5)
+    assert not np.issubdtype(np.asarray(
+        jnp.fft.fft2(f)).dtype, np.integer)
+
+
+def test_prime_padding_beats_pow2():
+    """Sec. I density-of-primes argument, quantified."""
+    r = C.prime_vs_pow2_padding(251, 16)
+    assert r["prime_pad"] == next_prime(266) == 269
+    assert r["pow2_pad"] == 512
+    assert r["prime_overhead"] < 1.05 < 1.5 < r["pow2_overhead"]
+    # and generally: prime overhead is small across a sweep
+    for size in [100, 251, 500, 1000]:
+        rr = C.prime_vs_pow2_padding(size, 32)
+        assert rr["prime_overhead"] <= rr["pow2_overhead"]
+
+
+@pytest.mark.parametrize("n", [7, 13, 31])
+def test_dft_slice_theorem(n):
+    rng = np.random.default_rng(n)
+    f = jnp.asarray(rng.integers(0, 256, (n, n)), jnp.int32)
+    got = np.asarray(F.dft2_via_dprt(f))
+    want = np.asarray(F.dft2_reference(f))
+    scale = np.max(np.abs(want))
+    assert np.max(np.abs(got - want)) / scale < 1e-5
+
+
+def test_conv1d_exact_batched():
+    rng = np.random.default_rng(3)
+    a = jnp.asarray(rng.integers(-50, 50, (4, 11)), jnp.int32)
+    b = jnp.asarray(rng.integers(-10, 10, (4, 11)), jnp.int32)
+    got = np.asarray(C.circ_conv1d_exact(a, b))
+    for i in range(4):
+        want = np.array([sum(int(a[i, t]) * int(b[i, (d - t) % 11])
+                             for t in range(11)) for d in range(11)])
+        np.testing.assert_array_equal(got[i], want)

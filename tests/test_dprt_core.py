@@ -1,0 +1,162 @@
+"""Core DPRT: exactness, invariants (property-based), paper-pinned models."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import importlib
+D = importlib.import_module("repro.core.dprt")
+P = importlib.import_module("repro.core.pareto")
+
+PRIMES = [2, 3, 5, 7, 11, 13, 17, 31]
+METHODS = [("gather", {}), ("horner", {}), ("strips", {"strip_rows": 2}),
+           ("strips", {"strip_rows": 5})]
+
+
+def rand_img(n, seed=0, lo=0, hi=256):
+    return np.random.default_rng(seed).integers(lo, hi, (n, n)).astype(np.int32)
+
+
+@pytest.mark.parametrize("n", PRIMES)
+@pytest.mark.parametrize("method,kw", METHODS)
+def test_forward_matches_oracle(n, method, kw):
+    if kw.get("strip_rows", 1) > n:
+        pytest.skip("strip taller than image")
+    f = rand_img(n, seed=n)
+    ref = D.dprt_oracle_np(f)
+    out = np.asarray(D.dprt(jnp.asarray(f), method=method, **kw))
+    np.testing.assert_array_equal(out, ref)
+
+
+@pytest.mark.parametrize("n", PRIMES)
+@pytest.mark.parametrize("method,kw", METHODS)
+def test_roundtrip_bit_exact(n, method, kw):
+    if kw.get("strip_rows", 1) > n:
+        pytest.skip("strip taller than image")
+    f = rand_img(n, seed=n + 100)
+    r = D.dprt(jnp.asarray(f), method=method, **kw)
+    back = np.asarray(D.idprt(r, method=method, **kw))
+    np.testing.assert_array_equal(back, f)
+
+
+def test_all_strip_heights_n13():
+    f = rand_img(13, seed=3)
+    ref = D.dprt_oracle_np(f)
+    for h in range(1, 14):
+        out = np.asarray(D.dprt(jnp.asarray(f), method="strips",
+                                strip_rows=h))
+        np.testing.assert_array_equal(out, ref, err_msg=f"H={h}")
+
+
+def test_rejects_nonprime_and_nonsquare():
+    with pytest.raises(ValueError):
+        D.dprt(jnp.zeros((4, 4), jnp.int32))
+    with pytest.raises(ValueError):
+        D.dprt(jnp.zeros((3, 5), jnp.int32))
+    with pytest.raises(ValueError):
+        D.idprt(jnp.zeros((5, 5), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# property-based invariants
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(n=st.sampled_from([5, 7, 11]), seed=st.integers(0, 10 ** 6))
+def test_projection_sums_equal_total(n, seed):
+    """Every projection of the DPRT sums to the total pixel sum (eq. 4)."""
+    f = rand_img(n, seed)
+    r = D.dprt_oracle_np(f)
+    s = f.sum()
+    assert (r.sum(axis=1) == s).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.sampled_from([5, 7, 11]), seed=st.integers(0, 10 ** 6))
+def test_inverse_numerator_divisible_by_n(n, seed):
+    """The iDPRT bracket is always divisible by N (exact reconstruction)."""
+    f = rand_img(n, seed)
+    r = D.dprt_oracle_np(f)
+    z = np.asarray(D.skew_sum(jnp.asarray(r[:n]), -1, method="horner"))
+    num = z - f.sum() + r[n][:, None]
+    assert (num % n == 0).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([5, 7]), seed=st.integers(0, 10 ** 6))
+def test_linearity(n, seed):
+    a = rand_img(n, seed)
+    b = rand_img(n, seed + 1)
+    ra = np.asarray(D.dprt(jnp.asarray(a)))
+    rb = np.asarray(D.dprt(jnp.asarray(b)))
+    rab = np.asarray(D.dprt(jnp.asarray(a + b)))
+    np.testing.assert_array_equal(rab, ra + rb)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.sampled_from([5, 7, 11]), s=st.integers(1, 10),
+       seed=st.integers(0, 10 ** 6))
+def test_column_shift_property(n, s, seed):
+    """f(i, <j-s>) has DPRT R(m, <d-s>) for m<N (shift covariance)."""
+    f = rand_img(n, seed)
+    fs = np.roll(f, s % n, axis=1)
+    r = D.dprt_oracle_np(f)
+    rs = D.dprt_oracle_np(fs)
+    np.testing.assert_array_equal(rs[:n], np.roll(r[:n], s % n, axis=1))
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([5, 7]), seed=st.integers(0, 10 ** 6),
+       h=st.integers(1, 7))
+def test_strip_decomposition_property(n, seed, h):
+    """Partial DPRTs accumulate to the full DPRT for any H (eq. 8)."""
+    if h > n:
+        h = n
+    f = rand_img(n, seed)
+    out = np.asarray(D.dprt(jnp.asarray(f), method="strips", strip_rows=h))
+    np.testing.assert_array_equal(out, D.dprt_oracle_np(f))
+
+
+def test_dtypes_and_batching():
+    f = rand_img(7, 5, hi=255).astype(np.uint8)
+    r8 = np.asarray(D.dprt(jnp.asarray(f)))
+    np.testing.assert_array_equal(r8, D.dprt_oracle_np(f.astype(np.int32)))
+    fb = np.stack([rand_img(7, i) for i in range(4)])
+    rb = np.asarray(D.dprt_batched(jnp.asarray(fb)))
+    for i in range(4):
+        np.testing.assert_array_equal(rb[i], D.dprt_oracle_np(fb[i]))
+
+
+# ---------------------------------------------------------------------------
+# the paper's analytical models, pinned to quoted numbers (Sec. V)
+# ---------------------------------------------------------------------------
+def test_paper_cycle_pins():
+    assert P.cycles_fdprt(251) == 511            # "requires only 511 cycles"
+    assert P.cycles_systolic(251) == 63253       # "63,253 clock cycles"
+    assert P.cycles_serial(251) == 251 ** 3 + 2 * 251 ** 2 + 251
+    assert P.cycles_sfdprt(251, 2) == \
+        (251 // 2 + 1) * (251 + 9) + 251 + 2     # H=2 lowest-resource row
+
+
+def test_paper_resource_pins():
+    assert P.flipflops_systolic(251, 8) == 516096  # square dot in Fig. 19
+    # "with 25% less resources for H=84 ... 36 times faster"
+    speedup = P.cycles_systolic(251) / P.cycles_sfdprt(251, 84)
+    assert 34 <= speedup <= 38
+    ratio = P.flipflops_sfdprt(251, 84, 8) / P.flipflops_systolic(251, 8)
+    assert 0.70 <= ratio <= 0.80
+
+
+def test_pareto_front_monotone():
+    front = P.pareto_front(251)
+    assert front and front[0] == 2
+    pts = P.pareto_points(251, 8)
+    cycles = [p["cycles"] for p in pts]
+    ffs = [p["ff"] for p in pts]
+    assert cycles == sorted(cycles, reverse=True)   # more H -> fewer cycles
+    assert ffs == sorted(ffs)                       # more H -> more FFs
+
+
+def test_tree_resources_matches_structure():
+    r = P.tree_resources(2, 8)
+    assert r["fa"] == 8 and r["ff"] == 9            # one 8-bit adder stage
+    assert P.tree_resources(1, 8) == {"fa": 0, "ff": 0, "mux": 0}
