@@ -1,46 +1,98 @@
 """Implementation shoot-out at the paper's N=251: gather (systolic analog)
 vs Horner shift-add (paper dataflow) vs strip decomposition (H sweep) vs
-the Pallas kernel (interpret mode).  This is the measurement harness the
-§Perf hillclimb of the DPRT cell iterates with."""
+the fused Pallas kernel family (interpret mode on CPU), single-image AND
+batched (the Sec. V-B coprocessor throughput scenario).
+
+Every pallas row also reports the hoisted-ladder work model: the
+roll-select masks and alignment rolls cost <= ceil(log2 N) rotate+select
+pairs of *setup* per m-block (amortized over all H Horner steps of a
+strip -- NOT re-derived per step), plus the useful-row fraction of the
+final m-block so masked padding rows are never counted as throughput.
+This is the measurement harness the §Perf hillclimb of the DPRT cell
+iterates with; ``python -m benchmarks.run`` folds these rows into
+``BENCH_dprt.json``.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dprt import dprt
-from repro.kernels import dprt_pallas
+from repro.core.dprt import dprt, dprt_batched
+from repro.kernels import (dprt_pallas, pallas_block_spec,
+                           roll_rows_ladder_spec)
+from repro.kernels.tuning import wasted_direction_rows
 
-from .common import emit, time_jax
+from .common import BENCH_DPRT_PATH, dump_json, emit, time_jax
+
+N = 251
+BATCH = 16
+
+
+def _ladder_note(n: int, m_block: int) -> str:
+    """Work model of the hoisted ladder for the derived column."""
+    setup = roll_rows_ladder_spec(n)
+    waste = wasted_direction_rows(n, m_block)
+    useful = (n + 1) / (n + 1 + waste)
+    return (f"ladder_setup_rot_sel_per_mblock<={setup} "
+            f"useful_row_frac={useful:.3f} masked_rows={waste}")
 
 
 def main() -> None:
-    n = 251
+    n = N
     rng = np.random.default_rng(0)
     f = jnp.asarray(rng.integers(0, 256, (n, n)), jnp.int32)
 
     base = time_jax(jax.jit(lambda x: dprt(x, method="gather")), f)
-    emit("dprt_impl/gather/N251", base, "systolic-analog baseline")
+    emit(f"dprt_impl/gather/N{n}", base, "systolic-analog baseline",
+         method="gather", n=n, batch=1)
     horner = time_jax(jax.jit(lambda x: dprt(x, method="horner")), f)
-    emit("dprt_impl/horner/N251", horner,
-         f"speedup_vs_gather={base / horner:.2f}")
+    emit(f"dprt_impl/horner/N{n}", horner,
+         f"speedup_vs_gather={base / horner:.2f}",
+         method="horner", n=n, batch=1)
     for h in [2, 16, 64, 128]:
         us = time_jax(jax.jit(
             lambda x, hh=h: dprt(x, method="strips", strip_rows=hh)), f)
-        emit(f"dprt_impl/strips_H{h}/N251", us,
-             f"speedup_vs_gather={base / us:.2f}")
-    us = time_jax(jax.jit(
-        lambda x: dprt_pallas(x, strip_rows=16, m_block=32)), f, iters=3)
-    emit("dprt_impl/pallas_interp/N251", us,
-         "python-interpret mode (correctness path; perf on real TPU)")
+        emit(f"dprt_impl/strips_H{h}/N{n}", us,
+             f"speedup_vs_gather={base / us:.2f}",
+             method="strips", n=n, batch=1, strip_rows=h)
+
+    th, tm = pallas_block_spec(n)
+    us = time_jax(jax.jit(lambda x: dprt(x, method="pallas")), f, iters=3)
+    emit(f"dprt_impl/pallas_fused/N{n}", us,
+         f"H={th} M={tm} speedup_vs_horner={horner / us:.2f} "
+         + _ladder_note(n, tm),
+         method="pallas", n=n, batch=1, strip_rows=th, m_block=tm)
 
     # batched service throughput (the FPGA-coprocessor comparison point,
     # Sec. V-B: CPU ~1.48ms/image for the adds alone)
-    fb = jnp.asarray(rng.integers(0, 256, (16, n, n)), jnp.int32)
-    from repro.core.dprt import dprt_batched
-    us = time_jax(jax.jit(lambda x: dprt_batched(x, method="horner")), fb,
-                  iters=3)
-    emit("dprt_impl/batched16/N251", us,
-         f"imgs_per_s={16 / (us / 1e6):.1f}")
+    fb = jnp.asarray(rng.integers(0, 256, (BATCH, n, n)), jnp.int32)
+    us_h = time_jax(jax.jit(lambda x: dprt_batched(x, method="horner")), fb,
+                    iters=3)
+    emit(f"dprt_impl/batched{BATCH}_horner/N{n}", us_h,
+         f"imgs_per_s={BATCH / (us_h / 1e6):.1f}",
+         method="horner", n=n, batch=BATCH)
+    us_s = time_jax(jax.jit(
+        lambda x: dprt_batched(x, method="strips", strip_rows=64)), fb,
+        iters=3)
+    emit(f"dprt_impl/batched{BATCH}_strips_H64/N{n}", us_s,
+         f"imgs_per_s={BATCH / (us_s / 1e6):.1f}",
+         method="strips", n=n, batch=BATCH, strip_rows=64)
+    us_p = time_jax(jax.jit(lambda x: dprt_batched(x, method="pallas")), fb,
+                    iters=3)
+    emit(f"dprt_impl/batched{BATCH}_pallas_fused/N{n}", us_p,
+         f"imgs_per_s={BATCH / (us_p / 1e6):.1f} one_pallas_call "
+         f"speedup_vs_batched_horner={us_h / us_p:.2f} "
+         + _ladder_note(n, tm),
+         method="pallas", n=n, batch=BATCH, strip_rows=th, m_block=tm)
+
+    # direct single-image pallas kernel call (bypassing dispatch), for
+    # continuity with the seed trajectory's pallas_interp row
+    us = time_jax(jax.jit(
+        lambda x: dprt_pallas(x, strip_rows=16, m_block=32)), f, iters=3)
+    emit(f"dprt_impl/pallas_interp/N{n}", us,
+         "python-interpret mode (correctness path; perf on real TPU)",
+         method="pallas", n=n, batch=1, strip_rows=16, m_block=32)
 
 
 if __name__ == "__main__":
     main()
+    dump_json(BENCH_DPRT_PATH, prefix="dprt_impl/")

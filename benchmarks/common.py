@@ -1,17 +1,49 @@
-"""Shared benchmark helpers: timing + CSV emission."""
+"""Shared benchmark helpers: timing + CSV emission + JSON artifacts."""
 from __future__ import annotations
 
+import json
+import os
+import sys
 import time
-from typing import Callable
+from typing import Callable, Optional
 
 import jax
 
-ROWS = []
+ROWS: list[dict] = []
+
+# Repo-root perf-baseline artifact, shared by benchmarks.run and the
+# standalone `python -m benchmarks.bench_dprt_impl` entry point.
+BENCH_DPRT_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_dprt.json")
 
 
-def emit(name: str, us_per_call: float, derived: str = "") -> None:
-    ROWS.append((name, us_per_call, derived))
+def emit(name: str, us_per_call: float, derived: str = "", **extra) -> None:
+    """Record one measurement row.
+
+    ``extra`` keys (e.g. method=, n=, batch=) are carried into the JSON
+    artifact written by :func:`dump_json` so downstream PRs can regress
+    against structured numbers instead of parsing row names.
+    """
+    ROWS.append({"name": name, "us_per_call": us_per_call,
+                 "derived": derived, **extra})
     print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def dump_json(path: str, prefix: Optional[str] = None) -> dict:
+    """Write recorded rows (optionally filtered by name prefix) to ``path``.
+
+    Returns the artifact dict: {"backend", "rows": [...]} with each row's
+    structured fields intact.
+    """
+    rows = [r for r in ROWS
+            if prefix is None or r["name"].startswith(prefix)]
+    artifact = {"backend": jax.default_backend(), "rows": rows}
+    with open(path, "w") as fh:
+        json.dump(artifact, fh, indent=2, sort_keys=True)
+    # status to stderr: stdout is the name,us_per_call,derived CSV stream
+    print(f"# wrote {len(rows)} rows -> {path}", file=sys.stderr)
+    return artifact
 
 
 def time_jax(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:

@@ -1,7 +1,10 @@
 """Benchmark driver: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV (units in ``derived`` where the
-quantity is a model count rather than wall time).
+quantity is a model count rather than wall time) and writes the
+``BENCH_dprt.json`` artifact (method x N x batch rows from the DPRT
+implementation shoot-out) at the repo root so subsequent PRs have a
+structured perf baseline to regress against.
 """
 import sys
 import traceback
@@ -11,10 +14,10 @@ def main() -> None:
     from . import (table1_forward_cycles, table2_inverse_cycles,
                    table3_resources, fig17_runtime_vs_n, fig19_20_pareto,
                    bench_conv, bench_dprt_impl, bench_lm_step,
-                   roofline_report)
+                   roofline_report, common)
 
     print("name,us_per_call,derived")
-    failures = 0
+    failed = []
     for mod in [table1_forward_cycles, table2_inverse_cycles,
                 table3_resources, fig17_runtime_vs_n, fig19_20_pareto,
                 bench_conv, bench_dprt_impl, bench_lm_step,
@@ -22,11 +25,17 @@ def main() -> None:
         try:
             mod.main()
         except Exception:
-            failures += 1
+            failed.append(mod)
             print(f"{mod.__name__},ERROR,", file=sys.stderr)
             traceback.print_exc()
-    if failures:
-        raise SystemExit(f"{failures} benchmark modules failed")
+    if bench_dprt_impl not in failed:
+        # never clobber the committed perf baseline with partial rows
+        common.dump_json(common.BENCH_DPRT_PATH, prefix="dprt_impl/")
+    else:
+        print("# BENCH_dprt.json NOT written (bench_dprt_impl failed)",
+              file=sys.stderr)
+    if failed:
+        raise SystemExit(f"{len(failed)} benchmark modules failed")
 
 
 if __name__ == "__main__":

@@ -23,7 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .dprt import (accum_dtype_for, dprt, idprt, is_prime, next_prime)
+from .dprt import (accum_dtype_for, dprt, dprt_batched, idprt,
+                   idprt_batched, is_prime, next_prime)
 
 __all__ = [
     "circ_conv1d_exact",
@@ -54,10 +55,36 @@ def circ_conv1d_exact(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
 @functools.partial(jax.jit, static_argnames=("method",))
 def circ_conv2d_dprt(f: jnp.ndarray, g: jnp.ndarray,
                      method: str = "horner") -> jnp.ndarray:
-    """Exact 2-D circular convolution of two (N, N) integer images (N prime)."""
-    rf = dprt(f, method=method)
-    rg = dprt(g, method=method)
-    rc = circ_conv1d_exact(rf, rg)          # all N+1 directions at once
+    """Exact 2-D circular convolution of (N, N) integer images (N prime).
+
+    All DPRT work routes through the :func:`repro.core.dprt.dprt`
+    dispatch, so ``method`` may be any strategy including ``"pallas"``
+    (the fused TPU kernel).  Either operand may also be a batched
+    (B, N, N) stack -- batched stacks go through ``dprt_batched``/
+    ``idprt_batched``, which for pallas is a single fused kernel call.
+    """
+    def fwd(x):
+        return (dprt_batched(x, method=method) if x.ndim == 3
+                else dprt(x, method=method))
+
+    rf, rg = fwd(f), fwd(g)
+    if rg.ndim > rf.ndim:
+        # convolution commutes; build the circulant from the unbatched
+        # operand so a batched g doesn't materialize a (B, N+1, N, N)
+        # circulant (~1 GB at B=16, N=251)
+        rf, rg = rg, rf
+    if rf.ndim == 3 and rg.ndim == 3:
+        if rf.shape[0] != rg.shape[0]:
+            raise ValueError(
+                f"batched operands need equal batch sizes, got "
+                f"{f.shape} vs {g.shape}")
+        # both batched: map over the batch so only one (N+1, N, N)
+        # circulant is live at a time
+        rc = jax.lax.map(lambda ab: circ_conv1d_exact(*ab), (rf, rg))
+    else:
+        rc = circ_conv1d_exact(rf, rg)      # all N+1 directions at once
+    if rc.ndim == 3:
+        return idprt_batched(rc, method=method)
     return idprt(rc, method=method)
 
 

@@ -13,6 +13,11 @@ strategies that mirror the paper's architecture space:
   into K = ceil(N/H) strips of H rows, each strip produces a *partial*
   DPRT via the Horner recurrence, and partial results are aligned
   (one circular roll) and accumulated -- eq. (7)-(8) of the paper.
+* ``pallas``  -- the fused, batched Pallas TPU kernel family
+  (:mod:`repro.kernels`): the strip decomposition mapped onto a
+  (batch, m-block, strip) grid with hoisted binary roll-select ladders
+  and the forward/inverse epilogues fused in-kernel; block shapes come
+  from the ``repro.kernels.tuning`` table unless given explicitly.
 
 All integer inputs are transformed with exact fixed-point arithmetic
 (the paper's motivation vs. floating-point FFTs); the inverse divides by
@@ -35,7 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-Method = Literal["gather", "horner", "strips"]
+Method = Literal["gather", "horner", "strips", "pallas"]
 
 __all__ = [
     "is_prime",
@@ -89,8 +94,10 @@ def accum_dtype_for(dtype) -> jnp.dtype:
     """Accumulator dtype with enough headroom for exact sums.
 
     Forward growth is +ceil(log2 N) bits; inverse adds another
-    ceil(log2 N) (paper Sec. IV-B).  int32 covers every practical
-    (B <= 16, N <= 8191) configuration; int64 inputs stay int64.
+    ceil(log2 N) (paper Sec. IV-B).  For 8-bit pixels the inverse
+    intermediates scale as 255*N^2, so int32 stays exact up to prime
+    N <= 2897 (every tuned/benchmarked size, table max N=1021); for
+    larger N pass int64 inputs under x64 (int64 inputs stay int64).
     """
     dtype = jnp.dtype(dtype)
     if dtype in (jnp.int64, jnp.uint64):
@@ -202,7 +209,8 @@ def _skew_sum_strips(g: jnp.ndarray, sign: int, strip_rows: int) -> jnp.ndarray:
 
 
 def skew_sum(g: jnp.ndarray, sign: int, method: Method = "horner",
-             strip_rows: Optional[int] = None) -> jnp.ndarray:
+             strip_rows: Optional[int] = None,
+             m_block: Optional[int] = None) -> jnp.ndarray:
     """skew_sum(g, sign)[m, d] = sum_i g(i, <d + sign*m*i>_N)."""
     if method == "gather":
         return _skew_sum_gather(g, sign)
@@ -212,36 +220,56 @@ def skew_sum(g: jnp.ndarray, sign: int, method: Method = "horner",
         if strip_rows is None:
             raise ValueError("strips method requires strip_rows (H)")
         return _skew_sum_strips(g, sign, strip_rows)
+    if method == "pallas":
+        from repro.kernels.ops import skew_sum_pallas  # lazy: no cycle
+        return skew_sum_pallas(g, sign, strip_rows=strip_rows,
+                               m_block=m_block)
     raise ValueError(f"unknown method {method!r}")
 
 
 # ---------------------------------------------------------------------------
 # public transforms
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("method", "strip_rows"))
+@functools.partial(jax.jit,
+                   static_argnames=("method", "strip_rows", "m_block"))
 def dprt(f: jnp.ndarray, method: Method = "horner",
-         strip_rows: Optional[int] = None) -> jnp.ndarray:
-    """Forward DPRT: (N, N) image -> (N+1, N) projections. Exact for ints."""
+         strip_rows: Optional[int] = None,
+         m_block: Optional[int] = None) -> jnp.ndarray:
+    """Forward DPRT: (N, N) image -> (N+1, N) projections. Exact for ints.
+
+    ``method="pallas"`` runs the fused TPU kernel (R(N, d) row produced
+    in-kernel, not as a separate pass); ``m_block`` is pallas-only.
+    """
     n = _check_square_prime(f.shape)
+    if method == "pallas":
+        from repro.kernels.ops import dprt_pallas  # lazy: no import cycle
+        return dprt_pallas(f, strip_rows=strip_rows, m_block=m_block)
     acc_dtype = accum_dtype_for(f.dtype)
     core = skew_sum(f, +1, method=method, strip_rows=strip_rows)
     last = f.astype(acc_dtype).sum(axis=1)  # R(N, d) = sum_j f(d, j)
     return jnp.concatenate([core, last[None, :]], axis=0)
 
 
-@functools.partial(jax.jit, static_argnames=("method", "strip_rows"))
+@functools.partial(jax.jit,
+                   static_argnames=("method", "strip_rows", "m_block"))
 def idprt(r: jnp.ndarray, method: Method = "horner",
-          strip_rows: Optional[int] = None) -> jnp.ndarray:
+          strip_rows: Optional[int] = None,
+          m_block: Optional[int] = None) -> jnp.ndarray:
     """Inverse DPRT: (N+1, N) projections -> (N, N) image.
 
     Exact integer reconstruction: the bracketed sum is always divisible
     by N (property-tested), so integer inputs round-trip bit-for-bit.
+    ``method="pallas"`` fuses the -S + R(N, i) correction and the exact
+    divide into the kernel's final strip; ``m_block`` is pallas-only.
     """
     if r.ndim != 2 or r.shape[0] != r.shape[1] + 1:
         raise ValueError(f"iDPRT input must be (N+1, N), got {r.shape}")
     n = r.shape[1]
     if not is_prime(n):
         raise ValueError(f"iDPRT needs prime N, got N={n}")
+    if method == "pallas":
+        from repro.kernels.ops import idprt_pallas  # lazy: no import cycle
+        return idprt_pallas(r, strip_rows=strip_rows, m_block=m_block)
     acc_dtype = accum_dtype_for(r.dtype)
     z = skew_sum(r[:n], -1, method=method, strip_rows=strip_rows)
     s = r[0].astype(acc_dtype).sum()            # S = total pixel sum (eq. 4)
@@ -253,14 +281,24 @@ def idprt(r: jnp.ndarray, method: Method = "horner",
 
 def dprt_batched(f: jnp.ndarray, method: Method = "horner",
                  strip_rows: Optional[int] = None,
-                 batch_impl: str = "auto") -> jnp.ndarray:
+                 batch_impl: str = "auto",
+                 m_block: Optional[int] = None) -> jnp.ndarray:
     """Batched :func:`dprt` over a leading axis.
 
-    ``batch_impl``: 'vmap' | 'map' | 'auto'.  Measured (EXPERIMENTS.md
-    §Perf): on CPU, ``lax.map`` hits the 16x-single ideal while vmap pays
-    +60% (the vmapped scan broadcasts its gather indices and blows the L2
-    working set); on TPU vmap vectorizes across the batch and wins.
+    ``method="pallas"`` transforms the whole (B, N, N) stack in ONE
+    fused pallas_call (leading batch grid dimension -- the paper's
+    Sec. V-B coprocessor throughput scenario); ``batch_impl`` is ignored
+    there.  Otherwise ``batch_impl``: 'vmap' | 'map' | 'auto'.  Measured
+    (EXPERIMENTS.md §Perf): on CPU, ``lax.map`` hits the 16x-single ideal
+    while vmap pays +60% (the vmapped scan broadcasts its gather indices
+    and blows the L2 working set); on TPU vmap vectorizes across the
+    batch and wins.
     """
+    if method == "pallas":
+        if f.ndim != 3:  # other methods raise via dprt(); match them
+            raise ValueError(f"dprt_batched needs (B, N, N), got {f.shape}")
+        from repro.kernels.ops import dprt_pallas  # lazy: no import cycle
+        return dprt_pallas(f, strip_rows=strip_rows, m_block=m_block)
     fn = lambda x: dprt(x, method=method, strip_rows=strip_rows)
     if batch_impl == "auto":
         batch_impl = "map" if jax.default_backend() == "cpu" else "vmap"
@@ -271,7 +309,14 @@ def dprt_batched(f: jnp.ndarray, method: Method = "horner",
 
 def idprt_batched(r: jnp.ndarray, method: Method = "horner",
                   strip_rows: Optional[int] = None,
-                  batch_impl: str = "auto") -> jnp.ndarray:
+                  batch_impl: str = "auto",
+                  m_block: Optional[int] = None) -> jnp.ndarray:
+    if method == "pallas":
+        if r.ndim != 3:  # other methods raise via idprt(); match them
+            raise ValueError(
+                f"idprt_batched needs (B, N+1, N), got {r.shape}")
+        from repro.kernels.ops import idprt_pallas  # lazy: no import cycle
+        return idprt_pallas(r, strip_rows=strip_rows, m_block=m_block)
     fn = lambda x: idprt(x, method=method, strip_rows=strip_rows)
     if batch_impl == "auto":
         batch_impl = "map" if jax.default_backend() == "cpu" else "vmap"

@@ -1,6 +1,14 @@
-"""Pallas TPU kernels for the DPRT hot-spot (validated in interpret mode)."""
+"""Pallas TPU kernels for the DPRT hot-spot (validated in interpret mode).
+
+The fused, batched SFDPRT kernel family lives in :mod:`.sfdprt`;
+:mod:`.ops` wraps it with auto block tuning (:mod:`.tuning`) and is what
+``repro.core.dprt`` dispatches to for ``method="pallas"``.
+"""
 from .ops import dprt_pallas, idprt_pallas, skew_sum_pallas
 from .ref import dprt_ref, idprt_ref, skew_sum_ref
+from .tuning import PALLAS_TUNE, pallas_block_spec
+from .sfdprt import roll_rows_ladder_spec
 
 __all__ = ["dprt_pallas", "idprt_pallas", "skew_sum_pallas",
-           "dprt_ref", "idprt_ref", "skew_sum_ref"]
+           "dprt_ref", "idprt_ref", "skew_sum_ref",
+           "PALLAS_TUNE", "pallas_block_spec", "roll_rows_ladder_spec"]

@@ -2,18 +2,21 @@
 
 The inverse core is the forward skew-sum with circular *right* shifts
 (CRS replaces CLS): Z(i,j) = sum_m R(m, <j - i*m>_N) = skew_sum(R[:N], -1).
-It therefore shares the machinery in :mod:`.sfdprt` with ``sign=-1``; the
--S / +R(N,i) correction and the exact divide-by-N (the paper's pipelined
-array divider) live in :func:`repro.kernels.ops.idprt_pallas`.
+It shares the fused kernel family in :mod:`.sfdprt` with ``sign=-1``.
+
+Since the fused-epilogue refactor the -S / +R(N,i) correction and the
+exact divide-by-N (the paper's pipelined array divider) no longer live in
+:mod:`repro.kernels.ops` as post-kernel passes -- they run *inside* the
+kernel on the final strip (``mode="inverse"``); the full fused transform
+is :func:`repro.kernels.sfdprt.idprt_pallas_raw`.  ``isfdprt_core`` below
+remains the bare CRS core for callers that want the un-corrected Z.
 """
 from __future__ import annotations
 
 import functools
 
-import jax.numpy as jnp
+from .sfdprt import idprt_pallas_raw, skew_sum_pallas_raw
 
-from .sfdprt import skew_sum_pallas_raw
-
-__all__ = ["isfdprt_core"]
+__all__ = ["isfdprt_core", "idprt_pallas_raw"]
 
 isfdprt_core = functools.partial(skew_sum_pallas_raw, sign=-1)

@@ -1,18 +1,30 @@
-"""Public jit'd wrappers around the Pallas DPRT kernels.
+"""Public jit'd wrappers around the fused Pallas DPRT kernels.
+
+This is the layer ``repro.core.dprt`` dispatches to for
+``method="pallas"``: each wrapper accepts a single (N, N) image or a
+batched (B, N, N) stack (transformed in ONE ``pallas_call`` via the
+kernel's leading batch grid dimension), resolves block shapes through
+the :mod:`.tuning` table when not given explicitly, and uses
+:func:`repro.core.dprt.accum_dtype_for` for overflow-safe accumulators
+(int64 inputs stay int64, never silently truncated to int32).
+
+The forward/inverse epilogues (R(N, d) row-sum; -S + R(N, i) correction
+plus exact divide-by-N) are fused *inside* the kernel -- see
+:mod:`.sfdprt` -- so there are no post-kernel passes here, only slicing.
 
 ``interpret`` defaults to auto: Pallas interpret mode off-TPU (this
 container is CPU-only), compiled Mosaic on real TPUs.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.dprt import is_prime
-from .sfdprt import skew_sum_pallas_raw
+from repro.core.dprt import accum_dtype_for, is_prime
+from .sfdprt import (dprt_pallas_raw, idprt_pallas_raw, skew_sum_pallas_raw)
+from .tuning import pallas_block_spec
 
 __all__ = ["dprt_pallas", "idprt_pallas", "skew_sum_pallas"]
 
@@ -23,31 +35,65 @@ def _auto_interpret(interpret: Optional[bool]) -> bool:
     return bool(interpret)
 
 
-def skew_sum_pallas(g: jnp.ndarray, sign: int = 1, strip_rows: int = 16,
-                    m_block: int = 8,
+def _resolve_blocks(n: int, strip_rows: Optional[int],
+                    m_block: Optional[int], dtype) -> tuple[int, int]:
+    th, tm = pallas_block_spec(n, jnp.dtype(accum_dtype_for(dtype)).itemsize)
+    h = th if strip_rows is None else int(strip_rows)
+    mb = tm if m_block is None else int(m_block)
+    if h < 1 or mb < 1:
+        raise ValueError(
+            f"strip_rows/m_block must be >= 1, got {h}/{mb}")
+    return h, mb
+
+
+def skew_sum_pallas(g: jnp.ndarray, sign: int = 1,
+                    strip_rows: Optional[int] = None,
+                    m_block: Optional[int] = None,
                     interpret: Optional[bool] = None) -> jnp.ndarray:
-    return skew_sum_pallas_raw(g, sign=sign, strip_rows=strip_rows,
-                               m_block=m_block,
+    """Bare (N, N) skew-sum; kept for the core-mode tests and callers."""
+    h, mb = _resolve_blocks(g.shape[0], strip_rows, m_block, g.dtype)
+    return skew_sum_pallas_raw(g, sign=sign, strip_rows=h, m_block=mb,
                                interpret=_auto_interpret(interpret))
 
 
-def dprt_pallas(f: jnp.ndarray, strip_rows: int = 16, m_block: int = 8,
+def dprt_pallas(f: jnp.ndarray, strip_rows: Optional[int] = None,
+                m_block: Optional[int] = None,
                 interpret: Optional[bool] = None) -> jnp.ndarray:
-    """Forward DPRT (N,N)->(N+1,N) via the SFDPRT Pallas kernel."""
-    n = f.shape[0]
+    """Forward DPRT via the fused SFDPRT kernel.
+
+    (N, N) -> (N+1, N), or batched (B, N, N) -> (B, N+1, N) in a single
+    pallas_call.  Block shapes default to the :mod:`.tuning` table.
+    """
+    single = f.ndim == 2
+    fb = f[None] if single else f
+    if fb.ndim != 3 or fb.shape[-1] != fb.shape[-2]:
+        raise ValueError(f"DPRT needs (B, N, N) or (N, N), got {f.shape}")
+    n = fb.shape[-1]
     if not is_prime(n):
         raise ValueError(f"DPRT needs prime N, got {n}")
-    core = skew_sum_pallas(f, 1, strip_rows, m_block, interpret)
-    last = f.astype(jnp.int32).sum(axis=1)
-    return jnp.concatenate([core, last[None, :]], axis=0)
+    h, mb = _resolve_blocks(n, strip_rows, m_block, fb.dtype)
+    out = dprt_pallas_raw(fb, strip_rows=h, m_block=mb,
+                          interpret=_auto_interpret(interpret))
+    return out[0] if single else out
 
 
-def idprt_pallas(r: jnp.ndarray, strip_rows: int = 16, m_block: int = 8,
+def idprt_pallas(r: jnp.ndarray, strip_rows: Optional[int] = None,
+                 m_block: Optional[int] = None,
                  interpret: Optional[bool] = None) -> jnp.ndarray:
-    """Inverse DPRT (N+1,N)->(N,N) via the kernel with CRS (sign=-1)."""
-    n = r.shape[1]
-    if r.shape[0] != n + 1 or not is_prime(n):
-        raise ValueError(f"iDPRT input must be (N+1, N) with N prime: {r.shape}")
-    z = skew_sum_pallas(r[:n], -1, strip_rows, m_block, interpret)
-    s = r[0].astype(jnp.int32).sum()
-    return (z - s + r[n].astype(jnp.int32)[:, None]) // n
+    """Inverse DPRT via the fused kernel (CRS core + in-kernel epilogue).
+
+    (N+1, N) -> (N, N), or batched (B, N+1, N) -> (B, N, N) in a single
+    pallas_call; exact for integer inputs (accumulator from
+    ``accum_dtype_for``, so int64 survives).
+    """
+    single = r.ndim == 2
+    rb = r[None] if single else r
+    n = rb.shape[-1]
+    if rb.ndim != 3 or rb.shape[-2] != n + 1 or not is_prime(n):
+        raise ValueError(
+            f"iDPRT input must be (B, N+1, N) or (N+1, N) with N prime: "
+            f"{r.shape}")
+    h, mb = _resolve_blocks(n, strip_rows, m_block, rb.dtype)
+    out = idprt_pallas_raw(rb, strip_rows=h, m_block=mb,
+                           interpret=_auto_interpret(interpret))
+    return out[0] if single else out

@@ -1,9 +1,23 @@
-"""Pallas TPU kernel for the scalable DPRT skew-sum (SFDPRT core).
+"""Fused, batched Pallas TPU kernels for the scalable DPRT (SFDPRT core).
 
-Maps the paper's SFDPRT_core (Fig. 2/8) onto a TPU:
+Maps the paper's SFDPRT_core / iSFDPRT_core (Fig. 2/8/16) onto a TPU as
+one kernel family with three modes:
+
+* ``core``    -- the bare skew-sum (used by :func:`skew_sum_pallas_raw`),
+* ``forward`` -- skew-sum plus the fused R(N, d) row-sum epilogue: the
+  extra projection is accumulated *while each strip is VMEM-resident*,
+  eliminating the separate post-kernel pass over the image in HBM,
+* ``inverse`` -- skew-sum with CRS (sign=-1) plus the fused
+  ``(Z - S + R(N, i)) / N`` correction and exact divide (the paper's
+  pipelined array divider, Sec. IV-B) applied on the final strip, so the
+  reconstruction never round-trips through HBM before the epilogue.
+
+Dataflow (per grid step):
 
 * a strip of H image rows is the VMEM-resident register array
-  (``BlockSpec((H, N))``),
+  (``BlockSpec((1, H, N))``); a leading *batch* grid dimension transforms
+  a (B, N, N) stack in a single ``pallas_call`` (the FPGA-coprocessor
+  throughput scenario of Sec. V-B),
 * a block of M directions lives in the sublane axis of the accumulator,
 * each Horner step ``T <- row_i + roll(T, m)`` is the paper's single
   clock cycle: circular-shift registers + adder tree,
@@ -12,12 +26,30 @@ Maps the paper's SFDPRT_core (Fig. 2/8) onto a TPU:
   **binary roll-select ladder**: for each bit b of m, rotate the whole
   tile by the *static* amount 2^b (two lane slices + concat -- no
   gather, no index arithmetic) and select per sublane on bit b.
-* strips are grid steps that revisit and accumulate into the output
-  block -- the paper's MEM_OUT accumulator (eq. 8); the alignment roll
-  R'(r,m,d) = U_r(<d + m*rH>) uses the same ladder.
 
-The same kernel computes the inverse core with ``sign=-1`` (CLS -> CRS,
-Sec. III-C).
+**Hoisted ladder setup.**  The per-step roll amount is constant per
+direction across all H Horner steps, so the per-bit select masks
+(``(amt >> b) & 1``) -- for both the step ladder and the alignment
+ladder R'(r,m,d) = U_r(<d + m*rH>) of eq. (7) -- are precomputed ONCE
+per (m-block, strip) by :func:`ladder_select_masks` and closed over by
+the ``fori_loop`` body.  Setup therefore costs <= ceil(log2 N)
+mask derivations plus <= ceil(log2 N) alignment rotate+select pairs per
+m-block, instead of being re-derived on every Horner cycle; the loop
+body itself is the paper's pure shift-add datapath.
+
+**Lane padding.**  Off the interpret path the lane axis is padded to a
+multiple of 128 so Mosaic tiling is aligned; every ladder rotate slices
+at the *logical* N (``[s:n] ++ [:s] ++ [n:]``) so the circular wraparound
+stays exact and the zero tail is preserved.
+
+**Masked final m-block.**  Direction rows beyond N-1 in the last m-block
+(the ``% N`` wrapped duplicates the seed kernel silently computed and
+discarded) are masked to zero; in ``forward`` mode the first wasted slot
+(global row N) is recycled to hold the fused R(N, d) row-sum.
+
+Accumulators use :func:`repro.core.dprt.accum_dtype_for` (int32/int64/
+float) rather than a hardcoded int32, so batched large-N integer inputs
+cannot silently overflow.
 """
 from __future__ import annotations
 
@@ -28,100 +60,278 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.dprt import accum_dtype_for
+
 try:  # compiler params spelling differs across jax versions
     from jax.experimental.pallas import tpu as pltpu
     _COMPILER_PARAMS = pltpu.CompilerParams(
-        dimension_semantics=("parallel", "arbitrary"))
+        dimension_semantics=("parallel", "parallel", "arbitrary"))
 except Exception:  # pragma: no cover
     _COMPILER_PARAMS = None
 
-__all__ = ["skew_sum_pallas_raw", "roll_rows_ladder_spec"]
+__all__ = [
+    "skew_sum_pallas_raw",
+    "dprt_pallas_raw",
+    "idprt_pallas_raw",
+    "roll_rows_ladder_spec",
+    "ladder_select_masks",
+    "apply_roll_ladder",
+]
+
+LANE = 128  # TPU lane width; Mosaic tiles want the last axis % 128 == 0
 
 
 def _num_bits(n: int) -> int:
     return max(1, math.ceil(math.log2(n)))
 
 
+def _ladder_rungs(n: int):
+    """Static rotate amounts 2^b < n used by the roll-select ladder."""
+    return [1 << b for b in range(_num_bits(n)) if (1 << b) < n]
+
+
 def roll_rows_ladder_spec(n: int) -> int:
-    """Ops per variable roll: the ladder issues ceil(log2 N) rot+sel pairs."""
+    """Rotate+select pairs per variable roll (and per-block mask setups):
+    the ladder issues ceil(log2 N) of each."""
     return _num_bits(n)
 
 
-def _roll_rows(acc: jnp.ndarray, amt: jnp.ndarray, n: int) -> jnp.ndarray:
-    """out[j, d] = acc[j, <d + amt[j]>_n] via static-shift rotate + select.
+def ladder_select_masks(amt: jnp.ndarray, n: int):
+    """Hoisted ladder setup: per-bit select masks for a (M, 1) roll amount.
 
-    ``acc`` is (M, n); ``amt`` is (M, 1) int32 in [0, n).  Every rotate is a
-    static lane slice pair, every select a per-sublane mask -- no gathers.
+    Computed once per m-block and closed over by the Horner loop body --
+    this is the "setup" the paper amortizes across all H cycles of a
+    strip (<= ceil(log2 N) shift+compare ops total, not per cycle).
     """
-    for b in range(_num_bits(n)):
+    return [((amt >> b) & 1) == 1 for b in range(len(_ladder_rungs(n)))]
+
+
+def apply_roll_ladder(acc: jnp.ndarray, masks, n: int) -> jnp.ndarray:
+    """out[j, d] = acc[j, <d + amt[j]>_n] for d < n, given hoisted masks.
+
+    ``acc`` is (M, n_pad) with n_pad >= n; lanes >= n are a zero tail that
+    is carried through unrotated (wraparound happens at the logical N).
+    Every rotate is a static lane-slice pair, every select a per-sublane
+    mask -- no gathers, no index arithmetic.
+    """
+    for b, sel in enumerate(masks):
         s = 1 << b
-        if s >= n:
-            break
-        rolled = jnp.concatenate([acc[:, s:], acc[:, :s]], axis=1)
-        bit = (amt >> b) & 1
-        acc = jnp.where(bit == 1, rolled, acc)
+        rolled = jnp.concatenate([acc[:, s:n], acc[:, :s], acc[:, n:]],
+                                 axis=1)
+        acc = jnp.where(sel, rolled, acc)
     return acc
 
 
-def _sfdprt_kernel(f_ref, out_ref, *, n: int, h: int, m_block: int,
-                   sign: int):
-    mb = pl.program_id(0)
-    k = pl.program_id(1)
+def _sfdprt_kernel(f_ref, *rest, n: int, n_pad: int, h: int, m_block: int,
+                   sign: int, k_steps: int, mode: str, acc_dtype,
+                   step_impl: str):
+    """One (batch, m-block, strip) grid step of the fused SFDPRT.
 
-    iota = jax.lax.broadcasted_iota(jnp.int32, (m_block, 1), 0)
-    m_vec = (mb * m_block + iota) % n          # directions of this block
+    Grid is (B, MB, K) with K innermost ("arbitrary"): for a fixed
+    (batch, m-block) the output block stays resident while strips
+    accumulate into it -- the paper's MEM_OUT (eq. 8).
+
+    ``step_impl`` picks how each Horner cycle realizes the hoisted roll:
+
+    * ``"ladder"``  -- re-apply the rotate+select ladder with the
+      precomputed masks every cycle (the TPU datapath: static lane
+      slices + per-sublane selects, no gathers -- Mosaic-friendly),
+    * ``"permute"`` -- run the ladder ONCE per m-block on a lane-index
+      vector (the <= ceil(log2 N) rotate+select pairs of *setup*), then
+      apply the materialized permutation with one ``take_along_axis``
+      per cycle (the interpret/CPU lowering, where a gather is cheap and
+      17 elementwise passes per cycle are not).
+    """
+    if mode == "inverse":
+        corr_ref, out_ref = rest
+    else:
+        (out_ref,) = rest
+    mb = pl.program_id(1)
+    k = pl.program_id(2)
+
+    zero = jnp.zeros((), acc_dtype)
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (m_block, 1), 0)
+    grow = mb * m_block + row_iota            # global output row
+    valid = grow < n                          # mask wrapped-duplicate rows
+    m_vec = jnp.where(valid, grow, 0)
+
+    # ---- hoisted ladder setup: ONCE per (m-block, strip) -----------------
     step_amt = m_vec if sign > 0 else (n - m_vec) % n
+    step_sel = ladder_select_masks(step_amt, n)
+    offset = k * h                            # strip's first global row rH
+    # m_vec * offset <= N^2 < 2^31 for every supported N (N <= 46340)
+    align_amt = jnp.mod(sign * m_vec * offset, n)
+    align_sel = ladder_select_masks(align_amt, n)
+
+    if step_impl == "permute":
+        # Hoisted setup: ladder applied once to lane indices; perm[j, d] =
+        # <d + amt_j>_n (identity on the zero tail).  Horner cycles below
+        # do zero rotate+select work.
+        lane_iota = jax.lax.broadcasted_iota(jnp.int32, (m_block, n_pad), 1)
+        perm = apply_roll_ladder(lane_iota, step_sel, n)
 
     def body(i, acc):
-        # T_i = f(i, .) + roll(T_{i+1}, sign*m):  one "clock cycle".
-        acc = _roll_rows(acc, step_amt, n)
-        row = f_ref[h - 1 - i, :]
+        # T_i = f(i, .) + roll(T_{i+1}, sign*m): one "clock cycle" -- the
+        # roll consumes the precomputed masks/permutation, no
+        # (amt >> b) & 1 here.
+        if step_impl == "permute":
+            acc = jnp.take_along_axis(acc, perm, axis=1)
+        else:
+            acc = apply_roll_ladder(acc, step_sel, n)
+        row = f_ref[0, h - 1 - i, :]
         return acc + row[None, :].astype(acc.dtype)
 
-    acc = jnp.zeros((m_block, n), jnp.int32)
+    acc = jnp.zeros((m_block, n_pad), acc_dtype)
     acc = jax.lax.fori_loop(0, h, body, acc)
 
     # alignment roll: R'(r, m, d) = U_r(<d + sign*m*rH>_n)   (eq. 7)
-    offset = k * h
-    align_amt = jnp.mod(sign * m_vec * offset, n)
-    acc = _roll_rows(acc, align_amt, n)
+    acc = apply_roll_ladder(acc, align_sel, n)
+    acc = jnp.where(valid, acc, zero)
 
-    # MEM_OUT accumulation across strips (eq. 8)
     @pl.when(k == 0)
     def _init():
-        out_ref[...] = acc
+        out_ref[0] = acc
 
     @pl.when(k > 0)
     def _accum():
-        out_ref[...] += acc
+        out_ref[0] = out_ref[0] + acc
+
+    if mode == "forward":
+        # Fused epilogue: R(N, d) = sum_j f(d, j).  Each strip owns the
+        # disjoint lane range [rH, rH+H); its row-sums are placed there and
+        # dropped into the recycled slot row N while the strip is in VMEM.
+        # Only the (static) m-block that holds global row N pays for it.
+        @pl.when(mb == n // m_block)
+        def _rowsum():
+            rsum = jnp.sum(f_ref[0].astype(acc_dtype), axis=1, keepdims=True)
+            lane = jax.lax.broadcasted_iota(jnp.int32, (h, n_pad), 1)
+            srow = jax.lax.broadcasted_iota(jnp.int32, (h, n_pad), 0)
+            placed = jnp.sum(jnp.where(lane == offset + srow, rsum, zero),
+                             axis=0)
+            out_ref[0] = out_ref[0] + jnp.where(grow == n, placed[None, :],
+                                                zero)
+
+    if mode == "inverse":
+        # Fused epilogue on the last strip: f = (Z - S + R(N, i)) / N with
+        # corr[i] = R(N, i) - S precomputed per row; exact integer divide
+        # (the paper's pipelined array divider, Sec. IV-B).
+        @pl.when(k == k_steps - 1)
+        def _epilogue():
+            total = out_ref[0] + corr_ref[0].astype(acc_dtype)
+            if jnp.issubdtype(jnp.dtype(acc_dtype), jnp.integer):
+                res = total // n
+            else:
+                res = total / n
+            out_ref[0] = jnp.where(valid, res, zero)
+
+
+def _pallas_skew_call(g: jnp.ndarray, *, sign: int, mode: str,
+                      strip_rows: int, m_block: int, interpret: bool,
+                      corr: jnp.ndarray | None = None,
+                      lane_pad: bool | None = None,
+                      step_impl: str | None = None) -> jnp.ndarray:
+    """Shared fused pallas_call: g is (B, N, N) already in the accumulator
+    dtype; returns (B, R, n_pad) with R = ceil(rows/m_block)*m_block --
+    callers slice to the logical output.
+
+    ``lane_pad`` (default: pad iff compiled) rounds the lane axis up to a
+    128-multiple for Mosaic tile alignment; it is overridable so the
+    wraparound-at-logical-N path is testable in interpret mode.
+    ``step_impl`` (default: "permute" in interpret mode, "ladder"
+    compiled) picks the per-cycle roll realization -- see
+    :func:`_sfdprt_kernel`.
+    """
+    b, _, n = g.shape
+    acc_dtype = g.dtype
+    h = max(1, min(int(strip_rows), n))
+    k_steps = math.ceil(n / h)
+    if lane_pad is None:
+        lane_pad = not interpret
+    if step_impl is None:
+        step_impl = "permute" if interpret else "ladder"
+    n_pad = ((n + LANE - 1) // LANE) * LANE if lane_pad else n
+    out_rows = n + 1 if mode == "forward" else n
+    r_blocks = math.ceil(out_rows / m_block)
+
+    gp = jnp.pad(g, ((0, 0), (0, k_steps * h - n), (0, n_pad - n)))
+    in_specs = [pl.BlockSpec((1, h, n_pad), lambda bb, i, j: (bb, j, 0))]
+    operands = [gp]
+    if mode == "inverse":
+        corr_p = jnp.pad(corr.astype(acc_dtype),
+                         ((0, 0), (0, r_blocks * m_block - n)))[..., None]
+        in_specs.append(pl.BlockSpec((1, m_block, 1),
+                                     lambda bb, i, j: (bb, i, 0)))
+        operands.append(corr_p)
+
+    return pl.pallas_call(
+        functools.partial(_sfdprt_kernel, n=n, n_pad=n_pad, h=h,
+                          m_block=m_block, sign=sign, k_steps=k_steps,
+                          mode=mode, acc_dtype=acc_dtype,
+                          step_impl=step_impl),
+        grid=(b, r_blocks, k_steps),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, m_block, n_pad),
+                               lambda bb, i, j: (bb, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, r_blocks * m_block, n_pad),
+                                       acc_dtype),
+        compiler_params=None if interpret else _COMPILER_PARAMS,
+        interpret=interpret,
+    )(*operands)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("sign", "strip_rows", "m_block",
-                                    "interpret"))
+                                    "interpret", "step_impl"))
 def skew_sum_pallas_raw(g: jnp.ndarray, sign: int = 1, strip_rows: int = 16,
-                        m_block: int = 8,
-                        interpret: bool = True) -> jnp.ndarray:
-    """skew_sum via the Pallas strip kernel.
+                        m_block: int = 8, interpret: bool = True,
+                        step_impl: str | None = None) -> jnp.ndarray:
+    """Bare skew_sum via the strip kernel (core mode, no fused epilogue).
 
-    g: (N, N) int array, N prime.  Returns (N, N) int32 with
-    out[m, d] = sum_i g(i, <d + sign*m*i>_N).
+    g: (N, N), N prime.  Returns (N, N) in the accumulator dtype with
+    out[m, d] = sum_i g(i, <d + sign*m*i>_N).  Wrapped-duplicate
+    direction rows in the final m-block are masked (never computed as
+    "useful" output) and sliced away.
     """
     n = g.shape[0]
-    h = min(int(strip_rows), n)
-    k = math.ceil(n / h)
-    mb = math.ceil(n / m_block)
+    out = _pallas_skew_call(g.astype(accum_dtype_for(g.dtype))[None], sign=sign,
+                            mode="core", strip_rows=strip_rows,
+                            m_block=m_block, interpret=interpret,
+                            step_impl=step_impl)
+    return out[0, :n, :n]
 
-    gp = jnp.pad(g.astype(jnp.int32), ((0, k * h - n), (0, 0)))
 
-    out = pl.pallas_call(
-        functools.partial(_sfdprt_kernel, n=n, h=h, m_block=m_block,
-                          sign=sign),
-        grid=(mb, k),
-        in_specs=[pl.BlockSpec((h, n), lambda i, j: (j, 0))],
-        out_specs=pl.BlockSpec((m_block, n), lambda i, j: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((mb * m_block, n), jnp.int32),
-        compiler_params=None if interpret else _COMPILER_PARAMS,
-        interpret=interpret,
-    )(gp)
-    return out[:n]
+@functools.partial(jax.jit,
+                   static_argnames=("strip_rows", "m_block", "interpret",
+                                    "step_impl"))
+def dprt_pallas_raw(f: jnp.ndarray, strip_rows: int = 16, m_block: int = 8,
+                    interpret: bool = True,
+                    step_impl: str | None = None) -> jnp.ndarray:
+    """Fused batched forward DPRT: (B, N, N) -> (B, N+1, N) in ONE
+    pallas_call; the R(N, d) row-sum row is produced by the in-kernel
+    epilogue rather than a second pass over the image."""
+    _, _, n = f.shape
+    out = _pallas_skew_call(f.astype(accum_dtype_for(f.dtype)), sign=1,
+                            mode="forward", strip_rows=strip_rows,
+                            m_block=m_block, interpret=interpret,
+                            step_impl=step_impl)
+    return out[:, :n + 1, :n]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("strip_rows", "m_block", "interpret",
+                                    "step_impl"))
+def idprt_pallas_raw(r: jnp.ndarray, strip_rows: int = 16, m_block: int = 8,
+                     interpret: bool = True,
+                     step_impl: str | None = None) -> jnp.ndarray:
+    """Fused batched inverse DPRT: (B, N+1, N) -> (B, N, N) in ONE
+    pallas_call; the -S + R(N, i) correction and exact divide-by-N run
+    in-kernel on the final strip (no post-kernel pass)."""
+    _, _, n = r.shape
+    acc = accum_dtype_for(r.dtype)
+    ra = r.astype(acc)
+    corr = ra[:, n, :] - ra[:, 0, :].sum(axis=1, keepdims=True)
+    out = _pallas_skew_call(ra[:, :n, :], sign=-1, mode="inverse",
+                            strip_rows=strip_rows, m_block=m_block,
+                            interpret=interpret, corr=corr,
+                            step_impl=step_impl)
+    return out[:, :n, :n]

@@ -1,0 +1,80 @@
+"""(N -> strip_rows H, m_block M) tuning for the fused SFDPRT kernels.
+
+The kernel's cost surface (paper Fig. 19/20 Pareto front, transplanted to
+TPU blocks): grid steps per image = ceil(N/H) * ceil((N+1)/M); VMEM per
+step = (H + 2M) * N_pad * itemsize; the hoisted-ladder setup
+(<= ceil(log2 N) mask derivations + alignment rotate+selects) is paid
+once per (m-block, strip), so *larger* blocks amortize setup while
+*smaller* blocks cut VMEM and wasted rows in the final m-block.
+
+``PALLAS_TUNE`` pins measured-good choices for the primes the repo's
+tests and benchmarks exercise (CPU interpret measurements; Mosaic-aligned
+sublane counts for the TPU path).  :func:`pallas_block_spec` is the
+dispatch-time lookup with a heuristic fallback for unlisted N.
+"""
+from __future__ import annotations
+
+import math
+
+__all__ = ["PALLAS_TUNE", "pallas_block_spec", "wasted_direction_rows"]
+
+# N: (strip_rows H, m_block M).  M multiples of 8 keep int32 sublane
+# tiling aligned off the interpret path.  CPU-interpret measurements
+# (N=251, int32): H=N (single strip, no alignment pass) with moderate M
+# wins -- {(251,32): 13.7ms, (251,64): 14.5ms, (64,64): 21.9ms,
+# (32,32): 16.9ms} vs horner 25.7ms; on real TPUs H instead bounds the
+# VMEM-resident strip (H*N_pad*4B), which every pinned H below respects
+# by a wide margin against the ~16 MB/core budget.
+PALLAS_TUNE = {
+    2: (2, 8),
+    3: (3, 8),
+    5: (5, 8),
+    7: (7, 8),
+    11: (11, 8),
+    13: (13, 8),
+    17: (17, 8),
+    31: (31, 8),
+    61: (61, 16),
+    127: (127, 16),
+    251: (251, 32),
+    509: (256, 32),
+    1021: (256, 64),
+}
+
+
+def pallas_block_spec(n: int, itemsize: int = 4) -> tuple[int, int]:
+    """Tuned (strip_rows, m_block) for prime N; heuristic off-table.
+
+    ``itemsize`` is the *accumulator* element size in bytes (8 for int64
+    under x64).  The heuristic keeps one strip + accumulators within a
+    ~2 MB VMEM budget and rounds the direction block to a sublane
+    multiple (8/16/64), so the final m-block can carry up to m_block-1
+    masked rows; :func:`wasted_direction_rows` reports the exact count
+    per (N, m_block) and the benchmarks surface it as useful_row_frac.
+    """
+    if n in PALLAS_TUNE:
+        return PALLAS_TUNE[n]
+    if n <= 32:
+        return n, 8
+    h = min(n, 128)
+    m_block = 64 if n >= 128 else 16
+    # shrink until (H + 2M) * N_pad * itemsize fits the budget: H first
+    # (strip residency), then the direction block, flooring both at the
+    # 8-row sublane tile
+    n_pad = ((n + 127) // 128) * 128
+    budget = 2 * 1024 * 1024
+    while (h + 2 * m_block) * n_pad * itemsize > budget:
+        if h > 8:
+            h //= 2
+        elif m_block > 8:
+            m_block //= 2
+        else:
+            break
+    return max(h, 1), m_block
+
+
+def wasted_direction_rows(n: int, m_block: int, forward: bool = True) -> int:
+    """Masked (non-useful) rows in the final m-block -- reported by the
+    benchmarks so padded work is never counted as useful throughput."""
+    rows = n + 1 if forward else n
+    return math.ceil(rows / m_block) * m_block - rows

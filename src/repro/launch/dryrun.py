@@ -60,11 +60,11 @@ def run_cell(arch: str, shape: str, multi_pod: bool, outdir: str,
             lowered = fn.lower(*structs)
             compiled = lowered.compile()
 
-        cost = compiled.cost_analysis() or {}
         # XLA counts while bodies once; the trip-count-aware walker fixes
         # scanned stacks (layers, kv chunks, SSD chunks).  Raw numbers are
         # kept alongside for reference.
-        from repro.launch.hlo_cost import analyze_hlo
+        from repro.launch.hlo_cost import analyze_hlo, compiled_cost_dict
+        cost = compiled_cost_dict(compiled)
         hc = analyze_hlo(compiled.as_text())
         flops = float(hc["flops"])
         nbytes = float(hc["bytes"])

@@ -66,8 +66,8 @@ def serve_radon(args):
     rcfg = radon_smoke() if args.smoke else radon_config()
     imgs = jnp.asarray(radon_images(rcfg.n, args.batch or rcfg.batch,
                                     kind="phantom"))
-    fwd = jax.jit(lambda x: dprt_batched(x, method="horner"))
-    inv = jax.jit(lambda r: idprt_batched(r, method="horner"))
+    fwd = jax.jit(lambda x: dprt_batched(x, method=args.method))
+    inv = jax.jit(lambda r: idprt_batched(r, method=args.method))
     fwd(imgs[:1]).block_until_ready()          # warmup/compile
     t0 = time.perf_counter()
     r = fwd(imgs)
@@ -78,7 +78,8 @@ def serve_radon(args):
     t2 = time.perf_counter()
     exact = bool((back == imgs).all())
     n = imgs.shape[0]
-    print(f"[serve-radon] N={rcfg.n} batch={n}: forward {1e3*(t1-t0):.1f}ms "
+    print(f"[serve-radon] N={rcfg.n} batch={n} method={args.method}: "
+          f"forward {1e3*(t1-t0):.1f}ms "
           f"({n/(t1-t0):.1f} img/s), inverse {1e3*(t2-t1):.1f}ms, "
           f"round-trip exact={exact}")
     assert exact, "DPRT round trip must be bit-exact"
@@ -91,6 +92,10 @@ def main(argv=None):
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--method", default="horner",
+                    choices=["gather", "horner", "pallas"],
+                    help="DPRT strategy for --mode radon (pallas = the "
+                         "fused batched kernel; one pallas_call per batch)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-tokens", type=int, default=16)
     args = ap.parse_args(argv)

@@ -1,0 +1,72 @@
+"""Deterministic stand-in for ``hypothesis`` when it is not installed.
+
+The container this repo targets ships without hypothesis and nothing may
+be pip-installed, so ``conftest.py`` registers this module as
+``sys.modules["hypothesis"]`` when the real package is missing.  It
+implements exactly the surface the test-suite uses:
+
+    from hypothesis import given, settings, strategies as st
+    st.integers(lo, hi), st.sampled_from(seq)
+    @settings(max_examples=K, deadline=None)
+    @given(n=..., seed=...)
+
+``given`` expands each test into ``max_examples`` deterministic examples
+drawn from a PRNG seeded by the test name, so failures reproduce
+run-to-run (no shrinking, no database -- just seeded sampling).
+"""
+from __future__ import annotations
+
+import types
+import zlib
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def sampled_from(seq):
+    items = list(seq)
+    return _Strategy(lambda rng: items[int(rng.integers(0, len(items)))])
+
+
+strategies = types.ModuleType("hypothesis.strategies")
+strategies.integers = integers
+strategies.sampled_from = sampled_from
+
+
+def settings(max_examples=DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+    def deco(fn):
+        fn._hyp_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        def runner():
+            n = getattr(runner, "_hyp_max_examples",
+                        getattr(fn, "_hyp_max_examples",
+                                DEFAULT_MAX_EXAMPLES))
+            seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+            rng = np.random.default_rng(seed)
+            for _ in range(n):
+                fn(**{k: s.example(rng) for k, s in strats.items()})
+        # NOTE: no functools.wraps -- pytest must see a zero-arg function,
+        # not the original signature (it would treat params as fixtures).
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        return runner
+    return deco

@@ -1,3 +1,4 @@
+import importlib.util
 import os
 import subprocess
 import sys
@@ -8,6 +9,19 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 if SRC not in sys.path:
     sys.path.insert(0, SRC)
+
+# The target container has no hypothesis and pip installs are forbidden;
+# fall back to the deterministic shim so property tests still run.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    _spec = importlib.util.spec_from_file_location(
+        "hypothesis", os.path.join(os.path.dirname(__file__),
+                                   "_hypothesis_shim.py"))
+    _shim = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_shim)
+    sys.modules["hypothesis"] = _shim
+    sys.modules["hypothesis.strategies"] = _shim.strategies
 
 
 def run_subprocess(code: str, devices: int = 8, timeout: int = 600,
