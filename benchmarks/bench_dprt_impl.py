@@ -62,6 +62,13 @@ def main() -> None:
          + _ladder_note(n, tm),
          method="pallas", n=n, batch=1, strip_rows=th, m_block=tm)
 
+    # the plan layer's auto pick (resolves to the fused pallas backend for
+    # prime images); the regression guard gates it against pallas_fused
+    us_a = time_jax(jax.jit(lambda x: dprt(x, method="auto")), f, iters=3)
+    emit(f"dprt_impl/auto/N{n}", us_a,
+         f"resolved=pallas dispatch_overhead_x={us_a / us:.2f}",
+         method="auto", n=n, batch=1, strip_rows=th, m_block=tm)
+
     # batched service throughput (the FPGA-coprocessor comparison point,
     # Sec. V-B: CPU ~1.48ms/image for the adds alone)
     fb = jnp.asarray(rng.integers(0, 256, (BATCH, n, n)), jnp.int32)
@@ -83,6 +90,17 @@ def main() -> None:
          f"speedup_vs_batched_horner={us_h / us_p:.2f} "
          + _ladder_note(n, tm),
          method="pallas", n=n, batch=BATCH, strip_rows=th, m_block=tm)
+
+    # bounded-memory streaming (Sec. III-C resource fitting): the same
+    # stack in block_batch-sized chunks through the fused kernel
+    us_b = time_jax(jax.jit(
+        lambda x: dprt_batched(x, method="pallas", block_batch=4)), fb,
+        iters=3)
+    emit(f"dprt_impl/batched{BATCH}_pallas_blockbatch4/N{n}", us_b,
+         f"imgs_per_s={BATCH / (us_b / 1e6):.1f} chunks_of_4 "
+         f"overhead_vs_one_call_x={us_b / us_p:.2f}",
+         method="pallas", n=n, batch=BATCH, strip_rows=th, m_block=tm,
+         block_batch=4)
 
     # direct single-image pallas kernel call (bypassing dispatch), for
     # continuity with the seed trajectory's pallas_interp row

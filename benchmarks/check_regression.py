@@ -1,0 +1,133 @@
+"""Perf regression guard: fresh DPRT benchmark vs the committed baseline.
+
+Compares a fresh ``bench_dprt_impl`` run against the repo-root
+``BENCH_dprt.json`` artifact (written by ``python -m benchmarks.run``)
+and exits nonzero when any matched row slows down by more than the
+tolerance.  Workflow:
+
+    python -m benchmarks.check_regression            # guard only
+    python -m benchmarks.check_regression --tol 1.3  # tighter gate
+    python -m benchmarks.run --check                 # full suite, compare
+                                                     # INSTEAD of rewriting
+    python -m benchmarks.run                         # rewrite the baseline
+                                                     # (after accepting perf)
+
+Rows are matched by their ``name`` field.  Rows new in this run (e.g.
+``dprt_impl/auto/...`` before the baseline was regenerated) fall back to
+the equivalent baseline row when one exists (``auto`` resolves to the
+fused pallas backend, so it is gated against ``pallas_fused``) and are
+otherwise reported as NEW without failing the guard.  A baseline
+recorded on a different jax backend (cpu vs tpu) is incomparable: the
+guard reports SKIPPED and passes.
+
+The default tolerance is deliberately loose (1.5x): CPU-interpret
+timings on shared machines are noisy, and the guard's job is to catch
+real regressions (an accidental de-fusing, a lost batching path), not
+scheduler jitter.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from . import common
+
+DEFAULT_TOL = 1.5
+
+# fresh-row name -> baseline-row name, used when the fresh name is not
+# in the baseline yet.  "auto" resolves to the fused pallas backend for
+# prime images, so its gate is the pallas_fused baseline row.
+ALIASES = [("/auto/", "/pallas_fused/")]
+
+
+def load_baseline(path: str) -> dict:
+    with open(path) as fh:
+        artifact = json.load(fh)
+    rows = {r["name"]: r for r in artifact.get("rows", [])}
+    return {"backend": artifact.get("backend"), "rows": rows}
+
+
+def _baseline_row(baseline_rows: dict, name: str):
+    if name in baseline_rows:
+        return baseline_rows[name], name
+    for frag, repl in ALIASES:
+        alias = name.replace(frag, repl)
+        if alias != name and alias in baseline_rows:
+            return baseline_rows[alias], alias
+    return None, None
+
+
+def compare(baseline: dict, fresh_rows: list, tol: float) -> tuple:
+    """Returns (report_lines, regressions).  A regression is a matched
+    row whose fresh/baseline time ratio exceeds ``tol``."""
+    lines, regressions = [], []
+    seen = set()
+    for row in fresh_rows:
+        base, matched_name = _baseline_row(baseline["rows"], row["name"])
+        if base is None:
+            lines.append(f"NEW      {row['name']}: "
+                         f"{row['us_per_call']:.0f}us (no baseline row)")
+            continue
+        seen.add(matched_name)
+        ratio = row["us_per_call"] / base["us_per_call"]
+        status = "REGRESS" if ratio > tol else "ok"
+        via = "" if matched_name == row["name"] else f" (vs {matched_name})"
+        lines.append(f"{status:8s} {row['name']}{via}: "
+                     f"{row['us_per_call']:.0f}us vs "
+                     f"{base['us_per_call']:.0f}us  x{ratio:.2f}")
+        if ratio > tol:
+            regressions.append((row["name"], ratio))
+    for name in sorted(set(baseline["rows"]) - seen):
+        lines.append(f"MISSING  {name}: baseline row not measured this run")
+    return lines, regressions
+
+
+def run_guard(fresh_rows: list, baseline_path: str = None,
+              tol: float = DEFAULT_TOL) -> int:
+    """Compare ``fresh_rows`` against the committed baseline; 0 = pass."""
+    import jax
+    baseline_path = baseline_path or common.BENCH_DPRT_PATH
+    try:
+        baseline = load_baseline(baseline_path)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"# no usable baseline at {baseline_path}: {e}",
+              file=sys.stderr)
+        return 0
+    if baseline["backend"] != jax.default_backend():
+        print(f"# SKIPPED: baseline backend {baseline['backend']!r} != "
+              f"current {jax.default_backend()!r} (incomparable timings)",
+              file=sys.stderr)
+        return 0
+    lines, regressions = compare(baseline, fresh_rows, tol)
+    for line in lines:
+        print(f"# {line}", file=sys.stderr)
+    if regressions:
+        worst = max(regressions, key=lambda x: x[1])
+        print(f"# FAIL: {len(regressions)} row(s) beyond x{tol} tolerance; "
+              f"worst {worst[0]} at x{worst[1]:.2f}", file=sys.stderr)
+        return 1
+    print(f"# PASS: {sum(1 for l in lines if l.startswith('ok'))} rows "
+          f"within x{tol} of baseline", file=sys.stderr)
+    return 0
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--tol", type=float, default=DEFAULT_TOL,
+                    help=f"max fresh/baseline ratio (default {DEFAULT_TOL})")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline JSON (default: repo BENCH_dprt.json)")
+    args = ap.parse_args(argv)
+
+    from . import bench_dprt_impl
+    start = len(common.ROWS)
+    print("name,us_per_call,derived")
+    bench_dprt_impl.main()
+    fresh = [r for r in common.ROWS[start:]
+             if r["name"].startswith("dprt_impl/")]
+    raise SystemExit(run_guard(fresh, args.baseline, args.tol))
+
+
+if __name__ == "__main__":
+    main()

@@ -5,16 +5,27 @@ quantity is a model count rather than wall time) and writes the
 ``BENCH_dprt.json`` artifact (method x N x batch rows from the DPRT
 implementation shoot-out) at the repo root so subsequent PRs have a
 structured perf baseline to regress against.
+
+Regression workflow (see ``benchmarks/check_regression.py``):
+
+    python -m benchmarks.run             # full run, REWRITES the baseline
+    python -m benchmarks.run --check     # full run, COMPARES against the
+                                         # committed baseline instead of
+                                         # rewriting; exit 1 on slowdown
+    python -m benchmarks.check_regression  # DPRT shoot-out only + compare
 """
 import sys
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    if argv is None:
+        argv = sys.argv[1:]
+    check = "--check" in argv
     from . import (table1_forward_cycles, table2_inverse_cycles,
                    table3_resources, fig17_runtime_vs_n, fig19_20_pareto,
                    bench_conv, bench_dprt_impl, bench_lm_step,
-                   roofline_report, common)
+                   roofline_report, check_regression, common)
 
     print("name,us_per_call,derived")
     failed = []
@@ -28,15 +39,21 @@ def main() -> None:
             failed.append(mod)
             print(f"{mod.__name__},ERROR,", file=sys.stderr)
             traceback.print_exc()
-    if bench_dprt_impl not in failed:
-        # never clobber the committed perf baseline with partial rows
-        common.dump_json(common.BENCH_DPRT_PATH, prefix="dprt_impl/")
-    else:
+    if bench_dprt_impl in failed:
         print("# BENCH_dprt.json NOT written (bench_dprt_impl failed)",
               file=sys.stderr)
+    elif check:
+        # guard mode: gate against the committed baseline, don't touch it
+        fresh = [r for r in common.ROWS
+                 if r["name"].startswith("dprt_impl/")]
+        if check_regression.run_guard(fresh) != 0:
+            raise SystemExit(1)
+    else:
+        # never clobber the committed perf baseline with partial rows
+        common.dump_json(common.BENCH_DPRT_PATH, prefix="dprt_impl/")
     if failed:
         raise SystemExit(f"{len(failed)} benchmark modules failed")
 
 
 if __name__ == "__main__":
-    main()
+    main(sys.argv[1:])

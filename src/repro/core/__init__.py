@@ -2,17 +2,27 @@
 from .dprt import (dprt, idprt, dprt_batched, idprt_batched, skew_sum,
                    strip_partial, align_partial, is_prime, next_prime,
                    accum_dtype_for, dprt_oracle_np, idprt_oracle_np)
+from .geometry import Geometry, normalize_geometry
+from .plan import (Backend, RadonPlan, available_backends,
+                   backend_capabilities, get_backend, get_plan,
+                   plan_cache_clear, plan_cache_info, register_backend,
+                   select_backend)
 from .conv import (circ_conv2d_dprt, circ_conv2d_direct, circ_conv2d_fft,
                    linear_conv2d_dprt, linear_conv2d_direct,
                    circ_conv1d_exact, prime_vs_pow2_padding)
-from .dft import dft2_via_dprt, dft2_reference
+from .dft import dft2_via_dprt, dft2_via_dprt_batched, dft2_reference
 from . import pareto
 
 __all__ = [
     "dprt", "idprt", "dprt_batched", "idprt_batched", "skew_sum",
     "strip_partial", "align_partial", "is_prime", "next_prime",
     "accum_dtype_for", "dprt_oracle_np", "idprt_oracle_np",
+    "Geometry", "normalize_geometry",
+    "Backend", "RadonPlan", "available_backends", "backend_capabilities",
+    "get_backend", "get_plan", "plan_cache_clear", "plan_cache_info",
+    "register_backend", "select_backend",
     "circ_conv2d_dprt", "circ_conv2d_direct", "circ_conv2d_fft",
     "linear_conv2d_dprt", "linear_conv2d_direct", "circ_conv1d_exact",
-    "prime_vs_pow2_padding", "dft2_via_dprt", "dft2_reference", "pareto",
+    "prime_vs_pow2_padding", "dft2_via_dprt", "dft2_via_dprt_batched",
+    "dft2_reference", "pareto",
 ]

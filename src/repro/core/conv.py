@@ -9,10 +9,28 @@ the per-direction 1-D circular convolution of the DPRTs:
 so 2-D convolution = DPRT -> (N+1) independent 1-D circular convolutions ->
 inverse DPRT, entirely in integer arithmetic (no floating-point FFT).
 
-Linear convolution is obtained by zero-padding both operands to the next
-prime P >= A + C - 1.  This is the paper's density-of-primes argument: a
-power-of-two FFT must pad to 2^ceil(log2(A+C-1)) (up to ~2x), while the next
-prime is only O(log P) away on average.
+All DPRT work routes through the transform-plan dispatch
+(:mod:`repro.core.plan`), so ``method`` may be any registered backend
+name (including ``"auto"`` and ``"pallas"``), and geometry handling
+comes from :mod:`repro.core.geometry`:
+
+* **Linear convolution** of arbitrary rectangular operands zero-pads
+  both to the next prime P >= out_h/out_w *per axis* (the paper's
+  density-of-primes argument: a power-of-two FFT must pad up to ~2x,
+  the next prime is only O(log P) away on average).
+* **Blocked linear convolution** (``block_size=``) realizes the
+  companion paper's overlap-add scheme (arXiv 2112.13150) on the plan
+  layer: the image is tiled into ``block_size``-sized square tiles,
+  every tile convolves against the small kernel at the much smaller
+  tile prime q = next_prime(block + k - 1) -- one batched fused-kernel
+  call over the whole tile stack -- and per-tile results overlap-add
+  onto the output canvas (`lax.scan`, one tile live at a time).  Exact
+  in integers: tile padding is zeros, and overlap-add of exact tile
+  linear convolutions is the exact full linear convolution.
+* **Circular convolution** of square prime operands uses the direct
+  transform-domain route above; any other (equal) geometry is convolved
+  on its true (H, W) torus by folding the exact prime-embedded linear
+  convolution (:func:`repro.core.geometry.fold_mod`) -- still bit-exact.
 """
 from __future__ import annotations
 
@@ -23,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import geometry as G
 from .dprt import (accum_dtype_for, dprt, dprt_batched, idprt,
                    idprt_batched, is_prime, next_prime)
 
@@ -40,9 +59,10 @@ __all__ = [
 def circ_conv1d_exact(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     """Batched exact 1-D circular convolution along the last axis.
 
-    a, b: (..., N).  out[..., d] = sum_t a[..., t] * b[..., <d-t>_N].
-    O(N^2) integer MACs per row -- these run on the MXU as a matmul with
-    the circulant of ``b`` (built by gather once, reused across rows).
+    a, b: (..., N) with broadcastable leading dims.
+    out[..., d] = sum_t a[..., t] * b[..., <d-t>_N].  O(N^2) integer
+    MACs per row -- these run on the MXU as a matmul with the circulant
+    of ``b`` (built by gather once, reused across rows).
     """
     n = a.shape[-1]
     acc = accum_dtype_for(jnp.result_type(a.dtype, b.dtype))
@@ -52,20 +72,18 @@ def circ_conv1d_exact(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     return jnp.einsum("...t,...dt->...d", a.astype(acc), bc)
 
 
-@functools.partial(jax.jit, static_argnames=("method",))
-def circ_conv2d_dprt(f: jnp.ndarray, g: jnp.ndarray,
-                     method: str = "horner") -> jnp.ndarray:
-    """Exact 2-D circular convolution of (N, N) integer images (N prime).
+def _transform_kw(method, strip_rows, m_block) -> dict:
+    return {"method": method, "strip_rows": strip_rows, "m_block": m_block}
 
-    All DPRT work routes through the :func:`repro.core.dprt.dprt`
-    dispatch, so ``method`` may be any strategy including ``"pallas"``
-    (the fused TPU kernel).  Either operand may also be a batched
-    (B, N, N) stack -- batched stacks go through ``dprt_batched``/
-    ``idprt_batched``, which for pallas is a single fused kernel call.
-    """
+
+def _circ_prime(f: jnp.ndarray, g: jnp.ndarray, method: str,
+                strip_rows: Optional[int],
+                m_block: Optional[int]) -> jnp.ndarray:
+    """Transform-domain circular convolution of square prime operands."""
+    kw = _transform_kw(method, strip_rows, m_block)
+
     def fwd(x):
-        return (dprt_batched(x, method=method) if x.ndim == 3
-                else dprt(x, method=method))
+        return (dprt_batched(x, **kw) if x.ndim == 3 else dprt(x, **kw))
 
     rf, rg = fwd(f), fwd(g)
     if rg.ndim > rf.ndim:
@@ -84,8 +102,38 @@ def circ_conv2d_dprt(f: jnp.ndarray, g: jnp.ndarray,
     else:
         rc = circ_conv1d_exact(rf, rg)      # all N+1 directions at once
     if rc.ndim == 3:
-        return idprt_batched(rc, method=method)
-    return idprt(rc, method=method)
+        return idprt_batched(rc, **kw)
+    return idprt(rc, **kw)
+
+
+@functools.partial(jax.jit, static_argnames=("method", "strip_rows",
+                                             "m_block", "block_size"))
+def circ_conv2d_dprt(f: jnp.ndarray, g: jnp.ndarray,
+                     method: str = "horner",
+                     strip_rows: Optional[int] = None,
+                     m_block: Optional[int] = None,
+                     block_size: Optional[int] = None) -> jnp.ndarray:
+    """Exact 2-D circular convolution of equal-geometry integer images.
+
+    Square prime (N, N) operands take the paper's direct transform-
+    domain route (either operand may be a batched (B, N, N) stack --
+    for ``method="pallas"`` one fused kernel call per stack).  Any
+    other (H, W) geometry is convolved on its true (H, W) torus by
+    folding the exact prime-embedded linear convolution -- bit-exact
+    for integers either way.  ``block_size`` streams the non-native
+    path tile-by-tile (overlap-add; see :func:`linear_conv2d_dprt`).
+    """
+    fh, fw = f.shape[-2:]
+    gh, gw = g.shape[-2:]
+    if (fh, fw) != (gh, gw):
+        raise ValueError(
+            f"circular convolution needs equal operand geometry, got "
+            f"{f.shape} vs {g.shape}")
+    if fh == fw and is_prime(fh) and block_size is None:
+        return _circ_prime(f, g, method, strip_rows, m_block)
+    lin = linear_conv2d_dprt(f, g, method=method, strip_rows=strip_rows,
+                             m_block=m_block, block_size=block_size)
+    return G.fold_mod(lin, fh, fw)
 
 
 def circ_conv2d_direct(f: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
@@ -107,29 +155,95 @@ def circ_conv2d_fft(f: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
     return out
 
 
-def _pad_to(x: jnp.ndarray, p: int) -> jnp.ndarray:
-    return jnp.pad(x, ((0, p - x.shape[0]), (0, p - x.shape[1])))
+def _linear_conv_blocked(f: jnp.ndarray, g: jnp.ndarray, block: int,
+                         method: str, strip_rows: Optional[int],
+                         m_block: Optional[int]) -> jnp.ndarray:
+    """Overlap-add linear convolution on prime-sized tiles.
+
+    ``f``: (…, A_h, A_w) image(s); ``g``: one small (C_h, C_w) kernel.
+    Each tile's circular convolution at q = next_prime(block + k - 1)
+    IS its full linear convolution (no wraparound: q >= tile + k - 1),
+    and the per-tile results overlap-add exactly to the full linear
+    convolution -- the companion paper's scalable scheme.
+    """
+    if g.ndim != 2:
+        raise ValueError(
+            f"blocked convolution needs a single 2-D kernel, got {g.shape}")
+    ah, aw = f.shape[-2:]
+    ch, cw = g.shape[-2:]
+    block = int(block)
+    q = next_prime(block + max(ch, cw) - 1)
+    kw = _transform_kw(method, strip_rows, m_block)
+
+    tiles, offsets = G.image_to_tiles(f, block)   # (…, T, block, block)
+    tq = G.pad2d(tiles, q - block, q - block)
+    gq = G.pad2d(g, q - ch, q - cw)
+    rg = dprt(gq, **kw)                           # (q+1, q), once
+
+    t = tq.shape[-3]
+    stack = tq.reshape(-1, q, q)                  # (B*T or T, q, q)
+    rt = dprt_batched(stack, **kw)                # one fused call per stack
+    rc = circ_conv1d_exact(rt, rg)                # broadcast over the stack
+    outs = idprt_batched(rc, **kw)                # (B*T or T, q, q)
+
+    oh, ow = block + ch - 1, block + cw - 1       # useful tile output
+    tile_out = outs[..., :oh, :ow]
+    th, tw = -(-ah // block), -(-aw // block)
+    canvas = (th * block + ch - 1, tw * block + cw - 1)
+
+    def assemble(tiles_one):
+        return G.overlap_add(tiles_one, offsets, canvas)
+
+    if f.ndim == 3:
+        lin = jax.lax.map(assemble,
+                          tile_out.reshape(f.shape[0], t, oh, ow))
+    else:
+        lin = assemble(tile_out)
+    return lin[..., : ah + ch - 1, : aw + cw - 1]
 
 
+@functools.partial(jax.jit, static_argnames=("method", "strip_rows",
+                                             "m_block", "block_size"))
 def linear_conv2d_dprt(f: jnp.ndarray, g: jnp.ndarray,
-                       method: str = "horner") -> jnp.ndarray:
-    """Exact full linear convolution via prime zero-padding + circular conv."""
-    a, c = f.shape[0], g.shape[0]
-    out = a + c - 1
-    p = next_prime(out)
-    res = circ_conv2d_dprt(_pad_to(f, p), _pad_to(g, p), method=method)
-    return res[:out, :out]
+                       method: str = "horner",
+                       strip_rows: Optional[int] = None,
+                       m_block: Optional[int] = None,
+                       block_size: Optional[int] = None) -> jnp.ndarray:
+    """Exact full linear convolution of arbitrary rectangular operands.
+
+    Whole-image route: zero-pad both operands to the next prime that
+    covers the full (out_h, out_w) support -- rows and columns padded
+    independently, so rectangular inputs are handled exactly.  With
+    ``block_size``, the overlap-add route tiles ``f`` into
+    ``block_size``-square tiles and convolves each against the (small)
+    kernel ``g`` at the tile prime instead of one giant image prime --
+    the companion paper's resource-fitting scheme (bounded working set,
+    batched tile stack through the plan dispatch).  ``f`` may be a
+    (B, H, W) stack in either route.
+    """
+    ah, aw = f.shape[-2:]
+    ch, cw = g.shape[-2:]
+    out_h, out_w = ah + ch - 1, aw + cw - 1
+    if block_size is not None:
+        return _linear_conv_blocked(f, g, block_size, method,
+                                    strip_rows, m_block)
+    p = next_prime(max(out_h, out_w))
+    fp = G.pad2d(f, p - ah, p - aw)
+    gp = G.pad2d(g, p - ch, p - cw)
+    res = _circ_prime(fp, gp, method, strip_rows, m_block)
+    return res[..., :out_h, :out_w]
 
 
 def linear_conv2d_direct(f: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
     """numpy oracle for full linear convolution (exact, int64)."""
     fa = np.asarray(f, dtype=np.int64)
     ga = np.asarray(g, dtype=np.int64)
-    a, c = fa.shape[0], ga.shape[0]
-    out = np.zeros((a + c - 1, a + c - 1), dtype=np.int64)
-    for u in range(a):
-        for v in range(a):
-            out[u:u + c, v:v + c] += fa[u, v] * ga
+    ah, aw = fa.shape
+    ch, cw = ga.shape
+    out = np.zeros((ah + ch - 1, aw + cw - 1), dtype=np.int64)
+    for u in range(ah):
+        for v in range(aw):
+            out[u:u + ch, v:v + cw] += fa[u, v] * ga
     return out
 
 

@@ -11,37 +11,85 @@ length-N 1-D FFTs cover the full 2-D spectrum exactly once (plus the shared
 DC term).  This is the paper's "minimal number of 1-D FFTs" route to the
 2-D DFT (Sec. I, refs [14][17]) -- all O(N^3) additions happen in exact
 integer arithmetic inside the DPRT; only the final N+1 FFTs are float.
+
+The DPRT stage routes through the transform-plan dispatch
+(:mod:`repro.core.plan`): ``method`` may be any registered backend
+(including ``"auto"``/``"pallas"``), and ``strip_rows``/``m_block``
+are forwarded to it.  :func:`dft2_via_dprt_batched` runs a (B, N, N)
+stack -- for the pallas backend the whole stack's DPRT is ONE fused
+kernel call, followed by batched FFTs and one vectorized scatter.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from .dprt import dprt, is_prime
+from .dprt import dprt, dprt_batched, is_prime
 
-__all__ = ["dft2_via_dprt", "dft2_reference"]
+__all__ = ["dft2_via_dprt", "dft2_via_dprt_batched", "dft2_reference"]
 
 
-@functools.partial(jax.jit, static_argnames=("method",))
-def dft2_via_dprt(f: jnp.ndarray, method: str = "horner") -> jnp.ndarray:
-    """(N, N) real/int image -> (N, N) complex 2-D DFT, via N+1 1-D FFTs."""
-    n = f.shape[0]
-    r = dprt(f, method=method)                     # (N+1, N) exact ints
-    rhat = jnp.fft.fft(r.astype(jnp.float64 if r.dtype == jnp.int64
-                                else jnp.float32), axis=1)
-
+def _slice_scatter(rhat: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Assemble the (…, N, N) spectrum from (…, N+1, N) projection FFTs."""
     k = jnp.arange(n)
     m = jnp.arange(n)[:, None]
-    u = (-m * k[None, :]) % n                      # Fhat(u[m,k], k) = Rhat[m,k]
+    u = (-m * k[None, :]) % n                  # Fhat(u[m,k], k) = Rhat[m,k]
 
-    out = jnp.zeros((n, n), rhat.dtype)
+    out = jnp.zeros((*rhat.shape[:-2], n, n), rhat.dtype)
     # scatter the skew slices; k=0 column is written N times with the same
     # DC value (harmless), then overwritten exactly by the m=N projection.
-    out = out.at[u, jnp.broadcast_to(k[None, :], (n, n))].set(rhat[:n])
-    out = out.at[:, 0].set(rhat[n])                # Fhat(u, 0) = FFT(R[N])[u]
+    out = out.at[..., u, jnp.broadcast_to(k[None, :], (n, n))].set(
+        rhat[..., :n, :])
+    out = out.at[..., :, 0].set(rhat[..., n, :])  # Fhat(u, 0) = FFT(R[N])[u]
     return out
+
+
+def _proj_fft(r: jnp.ndarray) -> jnp.ndarray:
+    return jnp.fft.fft(r.astype(jnp.float64 if r.dtype == jnp.int64
+                                else jnp.float32), axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("method", "strip_rows",
+                                             "m_block"))
+def dft2_via_dprt(f: jnp.ndarray, method: str = "horner",
+                  strip_rows: Optional[int] = None,
+                  m_block: Optional[int] = None) -> jnp.ndarray:
+    """(N, N) real/int image -> (N, N) complex 2-D DFT, via N+1 1-D FFTs."""
+    n = f.shape[0]
+    if f.ndim != 2 or f.shape[1] != n or not is_prime(n):
+        # the m -> <-m*v>_N bijection needs prime N; no embedding here
+        # (padding would change the spectrum, unlike the DPRT round trip)
+        raise ValueError(f"slice-theorem DFT needs a square prime-N image, "
+                         f"got {f.shape}")
+    r = dprt(f, method=method, strip_rows=strip_rows,
+             m_block=m_block)                      # (N+1, N) exact ints
+    return _slice_scatter(_proj_fft(r), n)
+
+
+@functools.partial(jax.jit, static_argnames=("method", "strip_rows",
+                                             "m_block", "batch_impl"))
+def dft2_via_dprt_batched(f: jnp.ndarray, method: str = "horner",
+                          strip_rows: Optional[int] = None,
+                          m_block: Optional[int] = None,
+                          batch_impl: str = "auto") -> jnp.ndarray:
+    """(B, N, N) stack -> (B, N, N) complex 2-D DFTs.
+
+    The integer DPRT stage is batched through the plan dispatch (one
+    fused pallas_call for ``method="pallas"``); the float FFT + slice
+    scatter stages are vectorized across the batch.
+    """
+    if f.ndim != 3:
+        raise ValueError(f"dft2_via_dprt_batched needs (B, N, N), "
+                         f"got {f.shape}")
+    n = f.shape[-1]
+    if not is_prime(n):
+        raise ValueError(f"slice-theorem DFT needs prime N, got {n}")
+    r = dprt_batched(f, method=method, strip_rows=strip_rows,
+                     m_block=m_block, batch_impl=batch_impl)
+    return _slice_scatter(_proj_fft(r), n)
 
 
 def dft2_reference(f: jnp.ndarray) -> jnp.ndarray:

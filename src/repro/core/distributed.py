@@ -14,6 +14,12 @@ combined with one collective:
                        the beyond-paper option used by the perf pass).
 
 Image *batches* shard trivially over the data axes on top of this.
+
+This module is registered as the ``"sharded"`` backend in the transform
+plan registry (:mod:`repro.core.plan`) -- declared mesh-aware, so
+``method="auto"`` routes here whenever a mesh is passed (or an ambient
+``with mesh:`` context is active) and every public entry point accepts
+``method="sharded", mesh=...`` without importing this module directly.
 """
 from __future__ import annotations
 
@@ -112,6 +118,10 @@ def dprt_batch_sharded(fb: jnp.ndarray, mesh: Mesh,
     from .dprt import dprt_batched  # local import to avoid cycle
 
     axes = tuple(a for a in batch_axes if a in mesh.shape)
+    if not axes:
+        # mesh has no data axis to shard the batch over (e.g. a pure
+        # "model" mesh): every device computes the full batch locally
+        return dprt_batched(fb, method=method)
     sharding = NamedSharding(mesh, P(axes if len(axes) > 1 else axes[0],
                                      None, None))
     fb = jax.lax.with_sharding_constraint(fb, sharding)

@@ -18,6 +18,21 @@ strategies that mirror the paper's architecture space:
   (batch, m-block, strip) grid with hoisted binary roll-select ladders
   and the forward/inverse epilogues fused in-kernel; block shapes come
   from the ``repro.kernels.tuning`` table unless given explicitly.
+* ``sharded`` -- the shard_map super-strip path
+  (:mod:`repro.core.distributed`); needs ``mesh=``.
+
+Method dispatch lives in :mod:`repro.core.plan` (the backend registry);
+this module owns the transform *primitives* (Horner scans, strip
+partials, alignment rolls) that the registered backends are built from,
+plus the thin public entry points.  ``method="auto"`` picks the best
+registered backend for the call site.
+
+Inputs may be any ``(H, W)`` or ``(B, H, W)`` geometry: non-square or
+non-prime images are zero-embedded into the smallest prime
+``P >= max(H, W)`` (see :mod:`repro.core.geometry`), so :func:`dprt`
+returns ``(P+1, P)`` projections.  The pad metadata is recorded on the
+cached plan -- ``plan.inverse(plan.forward(f)) == f`` bit-exactly for
+any integer image (:func:`repro.core.plan.get_plan`).
 
 All integer inputs are transformed with exact fixed-point arithmetic
 (the paper's motivation vs. floating-point FFTs); the inverse divides by
@@ -40,7 +55,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-Method = Literal["gather", "horner", "strips", "pallas"]
+Method = Literal["auto", "gather", "horner", "strips", "pallas", "sharded"]
 
 __all__ = [
     "is_prime",
@@ -78,15 +93,6 @@ def next_prime(n: int) -> int:
     """Smallest prime >= n."""
     while not is_prime(n):
         n += 1
-    return n
-
-
-def _check_square_prime(shape) -> int:
-    if len(shape) != 2 or shape[0] != shape[1]:
-        raise ValueError(f"DPRT needs a square image, got {shape}")
-    n = shape[0]
-    if not is_prime(n):
-        raise ValueError(f"DPRT needs prime N, got N={n}")
     return n
 
 
@@ -210,119 +216,143 @@ def _skew_sum_strips(g: jnp.ndarray, sign: int, strip_rows: int) -> jnp.ndarray:
 
 def skew_sum(g: jnp.ndarray, sign: int, method: Method = "horner",
              strip_rows: Optional[int] = None,
-             m_block: Optional[int] = None) -> jnp.ndarray:
-    """skew_sum(g, sign)[m, d] = sum_i g(i, <d + sign*m*i>_N)."""
-    if method == "gather":
-        return _skew_sum_gather(g, sign)
-    if method == "horner":
-        return _skew_sum_horner(g, sign)
-    if method == "strips":
-        if strip_rows is None:
-            raise ValueError("strips method requires strip_rows (H)")
-        return _skew_sum_strips(g, sign, strip_rows)
-    if method == "pallas":
-        from repro.kernels.ops import skew_sum_pallas  # lazy: no cycle
-        return skew_sum_pallas(g, sign, strip_rows=strip_rows,
-                               m_block=m_block)
-    raise ValueError(f"unknown method {method!r}")
+             m_block: Optional[int] = None, mesh=None) -> jnp.ndarray:
+    """skew_sum(g, sign)[m, d] = sum_i g(i, <d + sign*m*i>_N).
+
+    Routed through the backend registry (:mod:`repro.core.plan`); any
+    registered method name (or ``"auto"``) is accepted.
+    """
+    from .plan import dispatch_skew_sum  # lazy: plan imports this module
+    return dispatch_skew_sum(g, sign, method=method, strip_rows=strip_rows,
+                             m_block=m_block, mesh=mesh)
 
 
 # ---------------------------------------------------------------------------
-# public transforms
+# public transforms (thin wrappers over the cached plan layer)
 # ---------------------------------------------------------------------------
-@functools.partial(jax.jit,
-                   static_argnames=("method", "strip_rows", "m_block"))
+_PLAN_KNOBS = ("method", "strip_rows", "m_block", "batch_impl",
+               "block_rows", "block_batch", "mesh")
+
+
+def _resolve_ambient_mesh(method, mesh):
+    """Resolve an ambient `with mesh:` context BEFORE the jit cache.
+
+    The mesh is a static jit argument, so resolving it out here makes
+    the ambient context part of the trace-cache key -- a trace taken
+    outside a mesh is never replayed inside one (or vice versa).
+    """
+    if method == "auto" and mesh is None:
+        from .plan import _active_mesh
+        return _active_mesh()
+    return mesh
+
+
+@functools.partial(jax.jit, static_argnames=_PLAN_KNOBS)
+def _dprt_jit(f, method, strip_rows, m_block, batch_impl, block_rows,
+              block_batch, mesh):
+    from .plan import get_plan  # lazy: plan imports this module
+    plan = get_plan(f.shape, f.dtype, method, strip_rows=strip_rows,
+                    m_block=m_block, batch_impl=batch_impl,
+                    block_rows=block_rows, block_batch=block_batch,
+                    mesh=mesh)
+    return plan.forward(f)
+
+
+@functools.partial(jax.jit, static_argnames=_PLAN_KNOBS)
+def _idprt_jit(r, method, strip_rows, m_block, batch_impl, block_rows,
+               block_batch, mesh):
+    from .plan import get_plan  # lazy: plan imports this module
+    n = r.shape[-1]
+    shape = (n, n) if r.ndim == 2 else (r.shape[0], n, n)
+    plan = get_plan(shape, r.dtype, method, strip_rows=strip_rows,
+                    m_block=m_block, batch_impl=batch_impl,
+                    block_rows=block_rows, block_batch=block_batch,
+                    mesh=mesh)
+    return plan.inverse(r)
+
+
 def dprt(f: jnp.ndarray, method: Method = "horner",
          strip_rows: Optional[int] = None,
-         m_block: Optional[int] = None) -> jnp.ndarray:
-    """Forward DPRT: (N, N) image -> (N+1, N) projections. Exact for ints.
+         m_block: Optional[int] = None,
+         batch_impl: str = "auto",
+         block_rows: Optional[int] = None,
+         block_batch: Optional[int] = None,
+         mesh=None) -> jnp.ndarray:
+    """Forward DPRT: (H, W) image -> (P+1, P) projections. Exact for ints.
 
-    ``method="pallas"`` runs the fused TPU kernel (R(N, d) row produced
-    in-kernel, not as a separate pass); ``m_block`` is pallas-only.
+    Any geometry is accepted: square prime-N images transform natively
+    (P = N); everything else is zero-embedded into the smallest prime
+    P >= max(H, W).  A ``(B, H, W)`` stack transforms batched (for
+    ``method="pallas"``: ONE fused pallas_call).  ``method="auto"``
+    selects the best registered backend; ``block_rows``/``block_batch``
+    stream the work in bounded-memory blocks (paper Sec. III-C); use
+    :func:`repro.core.plan.get_plan` directly when you need the
+    crop-back inverse of a padded geometry.
     """
-    n = _check_square_prime(f.shape)
-    if method == "pallas":
-        from repro.kernels.ops import dprt_pallas  # lazy: no import cycle
-        return dprt_pallas(f, strip_rows=strip_rows, m_block=m_block)
-    acc_dtype = accum_dtype_for(f.dtype)
-    core = skew_sum(f, +1, method=method, strip_rows=strip_rows)
-    last = f.astype(acc_dtype).sum(axis=1)  # R(N, d) = sum_j f(d, j)
-    return jnp.concatenate([core, last[None, :]], axis=0)
+    mesh = _resolve_ambient_mesh(method, mesh)
+    return _dprt_jit(f, method, strip_rows, m_block, batch_impl,
+                     block_rows, block_batch, mesh)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("method", "strip_rows", "m_block"))
 def idprt(r: jnp.ndarray, method: Method = "horner",
           strip_rows: Optional[int] = None,
-          m_block: Optional[int] = None) -> jnp.ndarray:
+          m_block: Optional[int] = None,
+          batch_impl: str = "auto",
+          block_rows: Optional[int] = None,
+          block_batch: Optional[int] = None,
+          mesh=None) -> jnp.ndarray:
     """Inverse DPRT: (N+1, N) projections -> (N, N) image.
 
     Exact integer reconstruction: the bracketed sum is always divisible
     by N (property-tested), so integer inputs round-trip bit-for-bit.
-    ``method="pallas"`` fuses the -S + R(N, i) correction and the exact
-    divide into the kernel's final strip; ``m_block`` is pallas-only.
+    Batched ``(B, N+1, N)`` stacks are accepted.  Projections always
+    live in the prime domain; to recover the original (H, W) of an
+    embedded image, call ``plan.inverse`` on the plan that produced the
+    projections (it crops the recorded padding).
     """
-    if r.ndim != 2 or r.shape[0] != r.shape[1] + 1:
-        raise ValueError(f"iDPRT input must be (N+1, N), got {r.shape}")
-    n = r.shape[1]
+    if r.ndim not in (2, 3) or r.shape[-2] != r.shape[-1] + 1:
+        raise ValueError(
+            f"iDPRT input must be (N+1, N) or (B, N+1, N), got {r.shape}")
+    n = r.shape[-1]
     if not is_prime(n):
         raise ValueError(f"iDPRT needs prime N, got N={n}")
-    if method == "pallas":
-        from repro.kernels.ops import idprt_pallas  # lazy: no import cycle
-        return idprt_pallas(r, strip_rows=strip_rows, m_block=m_block)
-    acc_dtype = accum_dtype_for(r.dtype)
-    z = skew_sum(r[:n], -1, method=method, strip_rows=strip_rows)
-    s = r[0].astype(acc_dtype).sum()            # S = total pixel sum (eq. 4)
-    num = z - s + r[n].astype(acc_dtype)[:, None]  # + R(N, i) on row i
-    if jnp.issubdtype(acc_dtype, jnp.integer):
-        return num // n
-    return num / n
+    mesh = _resolve_ambient_mesh(method, mesh)
+    return _idprt_jit(r, method, strip_rows, m_block, batch_impl,
+                      block_rows, block_batch, mesh)
 
 
 def dprt_batched(f: jnp.ndarray, method: Method = "horner",
                  strip_rows: Optional[int] = None,
                  batch_impl: str = "auto",
-                 m_block: Optional[int] = None) -> jnp.ndarray:
-    """Batched :func:`dprt` over a leading axis.
+                 m_block: Optional[int] = None,
+                 block_batch: Optional[int] = None,
+                 mesh=None) -> jnp.ndarray:
+    """Batched :func:`dprt` over a leading axis (requires (B, H, W)).
 
-    ``method="pallas"`` transforms the whole (B, N, N) stack in ONE
-    fused pallas_call (leading batch grid dimension -- the paper's
-    Sec. V-B coprocessor throughput scenario); ``batch_impl`` is ignored
-    there.  Otherwise ``batch_impl``: 'vmap' | 'map' | 'auto'.  Measured
-    (EXPERIMENTS.md §Perf): on CPU, ``lax.map`` hits the 16x-single ideal
-    while vmap pays +60% (the vmapped scan broadcasts its gather indices
-    and blows the L2 working set); on TPU vmap vectorizes across the
-    batch and wins.
+    ``method="pallas"`` transforms the whole stack in ONE fused
+    pallas_call (the paper's Sec. V-B coprocessor throughput scenario).
+    Other backends batch via ``batch_impl``: 'vmap' | 'map' | 'auto'
+    (auto: `lax.map` on CPU, vmap on TPU -- measured EXPERIMENTS.md
+    §Perf).  ``block_batch`` streams the stack through the backend in
+    bounded-size chunks.
     """
-    if method == "pallas":
-        if f.ndim != 3:  # other methods raise via dprt(); match them
-            raise ValueError(f"dprt_batched needs (B, N, N), got {f.shape}")
-        from repro.kernels.ops import dprt_pallas  # lazy: no import cycle
-        return dprt_pallas(f, strip_rows=strip_rows, m_block=m_block)
-    fn = lambda x: dprt(x, method=method, strip_rows=strip_rows)
-    if batch_impl == "auto":
-        batch_impl = "map" if jax.default_backend() == "cpu" else "vmap"
-    if batch_impl == "map":
-        return jax.lax.map(fn, f)
-    return jax.vmap(fn)(f)
+    if f.ndim != 3:
+        raise ValueError(f"dprt_batched needs (B, H, W), got {f.shape}")
+    return dprt(f, method=method, strip_rows=strip_rows, m_block=m_block,
+                batch_impl=batch_impl, block_batch=block_batch, mesh=mesh)
 
 
 def idprt_batched(r: jnp.ndarray, method: Method = "horner",
                   strip_rows: Optional[int] = None,
                   batch_impl: str = "auto",
-                  m_block: Optional[int] = None) -> jnp.ndarray:
-    if method == "pallas":
-        if r.ndim != 3:  # other methods raise via idprt(); match them
-            raise ValueError(
-                f"idprt_batched needs (B, N+1, N), got {r.shape}")
-        from repro.kernels.ops import idprt_pallas  # lazy: no import cycle
-        return idprt_pallas(r, strip_rows=strip_rows, m_block=m_block)
-    fn = lambda x: idprt(x, method=method, strip_rows=strip_rows)
-    if batch_impl == "auto":
-        batch_impl = "map" if jax.default_backend() == "cpu" else "vmap"
-    if batch_impl == "map":
-        return jax.lax.map(fn, r)
-    return jax.vmap(fn)(r)
+                  m_block: Optional[int] = None,
+                  block_batch: Optional[int] = None,
+                  mesh=None) -> jnp.ndarray:
+    """Batched :func:`idprt` over a leading axis (requires (B, N+1, N))."""
+    if r.ndim != 3:
+        raise ValueError(f"idprt_batched needs (B, N+1, N), got {r.shape}")
+    return idprt(r, method=method, strip_rows=strip_rows, m_block=m_block,
+                 batch_impl=batch_impl, block_batch=block_batch, mesh=mesh)
 
 
 # ---------------------------------------------------------------------------

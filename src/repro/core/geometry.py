@@ -1,0 +1,196 @@
+"""Geometry normalization for arbitrary-shape DPRT inputs.
+
+The transforms themselves are only defined on square prime-N images
+(the paper's Sec. II setting).  This module is the bridge from
+arbitrary ``(H, W)`` / ``(B, H, W)`` inputs to that prime domain and
+back, with every pad/crop recorded so the round trip is bit-exact:
+
+* **Embedding** -- an ``(H, W)`` image is zero-padded into the smallest
+  prime ``P >= max(H, W)`` (density of primes: ``P - max(H, W)`` is
+  ``O(log P)`` on average, the paper's Sec. I argument vs power-of-two
+  FFT padding).  Zero rows/columns contribute nothing to any projection
+  sum, and the exact inverse reproduces the zero padding exactly, so
+  cropping back to ``(H, W)`` loses nothing: for any integer image
+  ``crop(idprt(dprt(embed(f)))) == f`` bit-for-bit.
+* **Tiling** -- helpers for the block-based resource-fitting scheme
+  (paper Sec. III-C / the companion overlap-add convolution paper,
+  arXiv 2112.13150): split a large image into fixed-size square tiles
+  plus their placement offsets, and overlap-add per-tile results back
+  onto a canvas.
+* **Folding** -- wrap a full linear-convolution result onto an
+  ``(H, W)`` torus (index arithmetic mod H / mod W), which turns the
+  prime-embedded *linear* convolution into the true ``(H, W)``-periodic
+  *circular* convolution for geometries the DPRT cannot represent
+  directly.
+
+Everything here is shape metadata plus cheap `jnp.pad`/slice/scatter
+ops; no transform math.  :mod:`repro.core.plan` builds on these to make
+cached :class:`~repro.core.plan.RadonPlan` objects.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .dprt import next_prime
+
+__all__ = [
+    "Geometry",
+    "normalize_geometry",
+    "embed",
+    "crop",
+    "pad2d",
+    "image_to_tiles",
+    "overlap_add",
+    "fold_mod",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Geometry:
+    """Pad/crop metadata tying a logical image shape to its prime domain.
+
+    ``prime`` is the transform size P; ``height``/``width`` the logical
+    image; ``batch`` is ``None`` for single images.  ``native`` means the
+    input already lives in the prime domain (square, prime side) and
+    embed/crop are identities -- the fast path every existing caller of
+    square prime-N transforms stays on.
+    """
+
+    height: int
+    width: int
+    prime: int
+    batch: Optional[int] = None
+
+    @property
+    def batched(self) -> bool:
+        return self.batch is not None
+
+    @property
+    def native(self) -> bool:
+        return self.height == self.width == self.prime
+
+    @property
+    def pad_rows(self) -> int:
+        return self.prime - self.height
+
+    @property
+    def pad_cols(self) -> int:
+        return self.prime - self.width
+
+    @property
+    def image_shape(self) -> tuple:
+        hw = (self.height, self.width)
+        return (self.batch, *hw) if self.batched else hw
+
+    @property
+    def transform_shape(self) -> tuple:
+        pr = (self.prime + 1, self.prime)
+        return (self.batch, *pr) if self.batched else pr
+
+
+def normalize_geometry(shape: Sequence[int]) -> Geometry:
+    """(H, W) or (B, H, W) -> :class:`Geometry` with P = next_prime(max)."""
+    shape = tuple(int(s) for s in shape)
+    if len(shape) == 2:
+        batch, (h, w) = None, shape
+    elif len(shape) == 3:
+        batch, (h, w) = shape[0], shape[1:]
+    else:
+        raise ValueError(
+            f"DPRT input must be (H, W) or (B, H, W), got {shape}")
+    if h < 1 or w < 1 or (batch is not None and batch < 1):
+        raise ValueError(f"DPRT input dims must be positive, got {shape}")
+    return Geometry(height=h, width=w, prime=next_prime(max(h, w, 2)),
+                    batch=batch)
+
+
+def pad2d(x: jnp.ndarray, rows: int, cols: int) -> jnp.ndarray:
+    """Zero-pad the trailing two axes by (rows, cols) at the high end."""
+    if rows == 0 and cols == 0:
+        return x
+    cfg = [(0, 0)] * (x.ndim - 2) + [(0, rows), (0, cols)]
+    return jnp.pad(x, cfg)
+
+
+def embed(f: jnp.ndarray, geom: Geometry) -> jnp.ndarray:
+    """Zero-embed the image(s) into the (…, P, P) prime domain."""
+    if f.shape[-2:] != (geom.height, geom.width):
+        raise ValueError(
+            f"image trailing shape {f.shape[-2:]} does not match plan "
+            f"geometry ({geom.height}, {geom.width})")
+    return pad2d(f, geom.pad_rows, geom.pad_cols)
+
+
+def crop(x: jnp.ndarray, geom: Geometry) -> jnp.ndarray:
+    """Crop a (…, P, P) prime-domain image back to (…, H, W)."""
+    return x[..., : geom.height, : geom.width]
+
+
+# ---------------------------------------------------------------------------
+# tiling (paper Sec. III-C / companion-paper overlap-add blocks)
+# ---------------------------------------------------------------------------
+def image_to_tiles(f: jnp.ndarray, block: int
+                   ) -> Tuple[jnp.ndarray, np.ndarray]:
+    """Split (…, H, W) into (…, T, block, block) tiles + (T, 2) offsets.
+
+    The image is zero-padded up to a multiple of ``block`` per axis; the
+    returned offsets are each tile's top-left corner in the *original*
+    image, row-major.  Zero padding in edge tiles contributes nothing to
+    any downstream convolution, so overlap-add of per-tile results stays
+    exact.
+    """
+    h, w = f.shape[-2:]
+    if block < 1:
+        raise ValueError(f"block must be >= 1, got {block}")
+    th, tw = math.ceil(h / block), math.ceil(w / block)
+    fp = pad2d(f, th * block - h, tw * block - w)
+    lead = fp.shape[:-2]
+    tiles = fp.reshape(*lead, th, block, tw, block)
+    tiles = jnp.swapaxes(tiles, -3, -2).reshape(
+        *lead, th * tw, block, block)
+    offsets = np.array([(i * block, j * block)
+                        for i in range(th) for j in range(tw)],
+                       dtype=np.int32)
+    return tiles, offsets
+
+
+def overlap_add(tile_outs: jnp.ndarray, offsets: np.ndarray,
+                canvas_shape: Tuple[int, int]) -> jnp.ndarray:
+    """Accumulate (T, oh, ow) tiles onto a canvas at (T, 2) offsets.
+
+    A `lax.scan` keeps exactly one tile live at a time (bounded memory:
+    the canvas plus a single tile), which is the streaming half of the
+    resource-fitting scheme.
+    """
+    t, oh, ow = tile_outs.shape
+    canvas = jnp.zeros(canvas_shape, tile_outs.dtype)
+
+    def step(c, xs):
+        tile, off = xs
+        cur = jax.lax.dynamic_slice(c, (off[0], off[1]), (oh, ow))
+        return jax.lax.dynamic_update_slice(c, cur + tile,
+                                            (off[0], off[1])), None
+
+    canvas, _ = jax.lax.scan(step, canvas,
+                             (tile_outs, jnp.asarray(offsets)))
+    return canvas
+
+
+def fold_mod(lin: jnp.ndarray, h: int, w: int) -> jnp.ndarray:
+    """Wrap a (…, LH, LW) linear-conv result onto the (h, w) torus.
+
+    out[..., x, y] = sum of lin[..., u, v] over u ≡ x (mod h),
+    v ≡ y (mod w).  Exact in integers (scatter-add), turning prime-
+    embedded linear convolution into true (h, w)-circular convolution.
+    """
+    lh, lw = lin.shape[-2:]
+    u = jnp.arange(lh) % h
+    v = jnp.arange(lw) % w
+    out = jnp.zeros((*lin.shape[:-2], h, w), lin.dtype)
+    return out.at[..., u[:, None], v[None, :]].add(lin)

@@ -1,0 +1,588 @@
+"""Transform plans: the single dispatch point for every DPRT in the repo.
+
+Two layers live here:
+
+1. **Backend registry.**  Each transform strategy (``gather`` /
+   ``horner`` / ``strips`` / ``pallas`` / the ``sharded`` shard_map path
+   from :mod:`repro.core.distributed`) registers a :class:`Backend`
+   object declaring its capabilities -- batched-native, needs
+   ``strip_rows``, takes ``m_block``, mesh-aware, supported dtype kinds
+   -- plus uniform callables for the skew-sum core and the full
+   forward/inverse transforms.  Every public entry point
+   (:mod:`repro.core.dprt`, :mod:`repro.core.conv`,
+   :mod:`repro.core.dft`, ``launch/serve.py``) resolves methods here,
+   so there is exactly one ``method`` string -> implementation mapping
+   in the repo.  ``method="auto"`` picks the best registered backend
+   for (shape, dtype, batch, active mesh), consulting the
+   :mod:`repro.kernels.tuning` table for block shapes.
+
+2. **RadonPlan.**  A cached, frozen plan for arbitrary ``(H, W)`` or
+   ``(B, H, W)`` inputs: the image is zero-embedded into the smallest
+   prime ``P >= max(H, W)`` (:mod:`repro.core.geometry` records the
+   pad), transformed by the resolved backend, and the inverse crops
+   back -- so ``plan.inverse(plan.forward(f)) == f`` holds bit-exactly
+   for any integer image.  Zero padding is exact by linearity: padded
+   rows/columns contribute 0 to every projection sum and the exact
+   integer inverse reproduces them as 0, so the crop discards only
+   zeros.  Plans also carry the paper's Sec. III-C resource-fitting
+   knobs: ``block_rows`` streams the strip decomposition (eq. 7-8)
+   through a `lax.scan` so only one strip partial is live at a time,
+   and ``block_batch`` streams batched stacks through the fused Pallas
+   kernel in bounded-size chunks via `lax.map`.
+
+Plans are cached by (shape, dtype, method, knobs, mesh) via
+``functools.lru_cache`` -- building one is pure Python shape math, so
+repeat traffic on the same geometry (the serving scenario) hits the
+cache; see :func:`plan_cache_info`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import geometry as G
+from .dprt import (accum_dtype_for, align_partial, strip_partial,
+                   _skew_sum_gather, _skew_sum_horner, _skew_sum_strips)
+from repro.kernels.tuning import resolve_blocks
+
+__all__ = [
+    "Backend",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+    "backend_capabilities",
+    "select_backend",
+    "RadonPlan",
+    "get_plan",
+    "plan_cache_info",
+    "plan_cache_clear",
+    "dispatch_skew_sum",
+]
+
+
+# ---------------------------------------------------------------------------
+# backend registry
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    """One transform strategy and its declared capabilities.
+
+    All callables share the uniform keyword surface
+    ``(x, *, strip_rows=None, m_block=None, mesh=None)`` (plus ``sign``
+    for ``skew_sum``); adapters ignore knobs they do not use.  A ``None``
+    ``forward_batched``/``inverse_batched`` means the dispatch wraps the
+    single-image callable with `lax.map`/`vmap` (``batch_impl``).
+    """
+
+    name: str
+    skew_sum: Callable
+    forward: Callable
+    inverse: Callable
+    forward_batched: Optional[Callable] = None
+    inverse_batched: Optional[Callable] = None
+    batched_native: bool = False
+    needs_strip_rows: bool = False
+    takes_m_block: bool = False
+    mesh_aware: bool = False
+    dtype_kinds: Optional[Tuple[str, ...]] = None  # None = any dtype
+    priority: int = 0  # higher wins under method="auto"
+    note: str = ""
+
+    def supports_dtype(self, dtype) -> bool:
+        if self.dtype_kinds is None:
+            return True
+        return jnp.dtype(dtype).kind in self.dtype_kinds
+
+
+_REGISTRY: dict = {}
+
+
+def register_backend(backend: Backend) -> Backend:
+    """Register (or replace) a backend; returns it for chaining."""
+    _REGISTRY[backend.name] = backend
+    if "_cached_plan" in globals():  # cached plans may pin a stale choice
+        plan_cache_clear()           # (guard: built-ins register first)
+    return backend
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown method {name!r}; registered backends: "
+            f"{available_backends()} (or 'auto')") from None
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def backend_capabilities() -> list:
+    """Capability rows (dicts) for docs, ``serve --list-backends``, tests."""
+    rows = []
+    for name in available_backends():
+        b = _REGISTRY[name]
+        rows.append({
+            "name": b.name,
+            "batched_native": b.batched_native,
+            "needs_strip_rows": b.needs_strip_rows,
+            "takes_m_block": b.takes_m_block,
+            "mesh_aware": b.mesh_aware,
+            "dtypes": "any" if b.dtype_kinds is None
+                      else ",".join(b.dtype_kinds),
+            "priority": b.priority,
+            "note": b.note,
+        })
+    return rows
+
+
+def _active_mesh():
+    """The ambient `with mesh:` context's mesh, if any (best effort)."""
+    try:  # pragma: no cover - exercised only under an active mesh
+        from jax._src.mesh import thread_resources
+        m = thread_resources.env.physical_mesh
+        if m is not None and not m.empty and m.size > 1:
+            return m
+    except Exception:
+        pass
+    return None
+
+
+def select_backend(n: int, dtype, batch: Optional[int] = None,
+                   mesh=None) -> str:
+    """``method="auto"``: best registered backend for the call site.
+
+    An explicit mesh routes to the mesh-aware backend; otherwise the
+    highest-priority backend whose dtype capability matches wins -- with
+    the shipped registry that is the fused ``pallas`` kernel for every
+    int/float image, falling back to ``horner``.  Block shapes come from
+    :mod:`repro.kernels.tuning` at plan-build time.  (Ambient
+    ``with mesh:`` contexts are resolved by the *callers* --
+    :func:`get_plan` and the public transform wrappers -- before any
+    cache, so a cached decision is never pinned to a stale context.)
+    """
+    if mesh is not None:
+        for name in available_backends():
+            if _REGISTRY[name].mesh_aware:
+                return name
+    best = None
+    for name in available_backends():
+        b = _REGISTRY[name]
+        if b.mesh_aware or not b.supports_dtype(dtype):
+            continue
+        if best is None or b.priority > best.priority:
+            best = b
+    if best is None:
+        raise ValueError(f"no registered backend supports dtype {dtype}")
+    return best.name
+
+
+# ---------------------------------------------------------------------------
+# shared transform epilogues (the only copies in the repo)
+# ---------------------------------------------------------------------------
+def _attach_row_sum(core: jnp.ndarray, f: jnp.ndarray) -> jnp.ndarray:
+    """Append the R(N, d) = sum_j f(d, j) projection row."""
+    last = f.astype(core.dtype).sum(axis=-1)
+    return jnp.concatenate([core, last[None, :]], axis=0)
+
+
+def _inverse_epilogue(z: jnp.ndarray, r: jnp.ndarray, n: int) -> jnp.ndarray:
+    """-S + R(N, i) correction and the exact divide-by-N (paper eq. 3-4)."""
+    acc = z.dtype
+    s = r[0].astype(acc).sum()
+    num = z - s + r[n].astype(acc)[:, None]
+    if jnp.issubdtype(acc, jnp.integer):
+        return num // n
+    return num / n
+
+
+def _make_forward(skew: Callable) -> Callable:
+    def fwd(f, *, strip_rows=None, m_block=None, mesh=None):
+        core = skew(f, +1, strip_rows=strip_rows, m_block=m_block, mesh=mesh)
+        return _attach_row_sum(core, f)
+    return fwd
+
+
+def _make_inverse(skew: Callable) -> Callable:
+    def inv(r, *, strip_rows=None, m_block=None, mesh=None):
+        n = r.shape[-1]
+        z = skew(r[:n], -1, strip_rows=strip_rows, m_block=m_block, mesh=mesh)
+        return _inverse_epilogue(z, r, n)
+    return inv
+
+
+# ---------------------------------------------------------------------------
+# built-in backends
+# ---------------------------------------------------------------------------
+def _gather_skew(g, sign, *, strip_rows=None, m_block=None, mesh=None):
+    return _skew_sum_gather(g, sign)
+
+
+def _horner_skew(g, sign, *, strip_rows=None, m_block=None, mesh=None):
+    return _skew_sum_horner(g, sign)
+
+
+def _strips_skew(g, sign, *, strip_rows=None, m_block=None, mesh=None):
+    if strip_rows is None:  # plan-level resolution supplies the tuned H;
+        # direct callers get the same table lookup (real accum itemsize)
+        itemsize = jnp.dtype(accum_dtype_for(g.dtype)).itemsize
+        strip_rows = resolve_blocks(g.shape[-1], itemsize)[0]
+    return _skew_sum_strips(g, sign, strip_rows)
+
+
+def _pallas_skew(g, sign, *, strip_rows=None, m_block=None, mesh=None):
+    from repro.kernels.ops import skew_sum_pallas  # lazy: no import cycle
+    return skew_sum_pallas(g, sign, strip_rows=strip_rows, m_block=m_block)
+
+
+def _pallas_forward(f, *, strip_rows=None, m_block=None, mesh=None):
+    from repro.kernels.ops import dprt_pallas
+    return dprt_pallas(f, strip_rows=strip_rows, m_block=m_block)
+
+
+def _pallas_inverse(r, *, strip_rows=None, m_block=None, mesh=None):
+    from repro.kernels.ops import idprt_pallas
+    return idprt_pallas(r, strip_rows=strip_rows, m_block=m_block)
+
+
+def _require_mesh(mesh):
+    if mesh is None:
+        raise ValueError(
+            "the 'sharded' backend needs mesh= (jax.sharding.Mesh); "
+            "pass it explicitly or select it via an active `with mesh:`")
+    return mesh
+
+
+def _mesh_axis(mesh) -> str:
+    """Row-sharding axis: 'model' if present, else the mesh's first axis."""
+    if "model" in mesh.shape:
+        return "model"
+    return next(iter(mesh.shape))
+
+
+def _sharded_skew(g, sign, *, strip_rows=None, m_block=None, mesh=None):
+    from .distributed import _skew_sum_sharded
+    mesh = _require_mesh(mesh)
+    return _skew_sum_sharded(g, mesh, axis=_mesh_axis(mesh), sign=sign)
+
+
+def _sharded_forward(f, *, strip_rows=None, m_block=None, mesh=None):
+    from .distributed import dprt_sharded
+    mesh = _require_mesh(mesh)
+    return dprt_sharded(f, mesh, axis=_mesh_axis(mesh))
+
+
+def _sharded_inverse(r, *, strip_rows=None, m_block=None, mesh=None):
+    from .distributed import idprt_sharded
+    mesh = _require_mesh(mesh)
+    return idprt_sharded(r, mesh, axis=_mesh_axis(mesh))
+
+
+def _sharded_forward_batched(fb, *, strip_rows=None, m_block=None, mesh=None):
+    from .distributed import dprt_batch_sharded
+    return dprt_batch_sharded(fb, _require_mesh(mesh))
+
+
+register_backend(Backend(
+    name="gather",
+    skew_sum=_gather_skew,
+    forward=_make_forward(_gather_skew),
+    inverse=_make_inverse(_gather_skew),
+    priority=10,
+    note="per-direction shear oracle (systolic analog)",
+))
+register_backend(Backend(
+    name="horner",
+    skew_sum=_horner_skew,
+    forward=_make_forward(_horner_skew),
+    inverse=_make_inverse(_horner_skew),
+    priority=50,
+    note="paper Sec. III-B shift-and-add dataflow",
+))
+register_backend(Backend(
+    name="strips",
+    skew_sum=_strips_skew,
+    forward=_make_forward(_strips_skew),
+    inverse=_make_inverse(_strips_skew),
+    needs_strip_rows=True,
+    priority=30,
+    note="scalable SFDPRT strip decomposition (eq. 5-8)",
+))
+register_backend(Backend(
+    name="pallas",
+    skew_sum=_pallas_skew,
+    forward=_pallas_forward,
+    inverse=_pallas_inverse,
+    forward_batched=_pallas_forward,   # same wrappers take (B, N, N)
+    inverse_batched=_pallas_inverse,
+    batched_native=True,
+    takes_m_block=True,
+    dtype_kinds=("i", "u", "f"),
+    priority=100,
+    note="fused batched SFDPRT TPU kernel (one pallas_call per stack)",
+))
+register_backend(Backend(
+    name="sharded",
+    skew_sum=_sharded_skew,
+    forward=_sharded_forward,
+    inverse=_sharded_inverse,
+    forward_batched=_sharded_forward_batched,
+    mesh_aware=True,
+    priority=0,  # only reachable via mesh= / active mesh
+    note="shard_map super-strips + one psum (core/distributed.py)",
+))
+
+
+# ---------------------------------------------------------------------------
+# blocked (resource-fitting) execution helpers
+# ---------------------------------------------------------------------------
+def _blocked_skew_sum(gmat: jnp.ndarray, sign: int, block_rows: int,
+                      acc_dtype) -> jnp.ndarray:
+    """Strip decomposition streamed through `lax.scan` (bounded memory).
+
+    Identical algebra to ``method="strips"`` (partial Horner per strip,
+    one alignment roll, accumulate -- paper eq. 7-8) but only ONE strip
+    partial is live at a time instead of all ceil(N/H) of them: the
+    Sec. III-C "fit the architecture to available resources" scheme.
+    """
+    n = gmat.shape[-1]
+    h = int(block_rows)
+    if h < 1:
+        raise ValueError(f"block_rows must be >= 1, got {h}")
+    k = math.ceil(gmat.shape[0] / h)
+    gp = jnp.pad(gmat, ((0, k * h - gmat.shape[0]), (0, 0)))
+    strips = gp.reshape(k, h, n)
+    offsets = jnp.arange(k, dtype=jnp.int32) * h
+
+    def step(acc, xs):
+        s, off = xs
+        u = strip_partial(s, n, sign=sign, acc_dtype=acc_dtype)
+        return acc + align_partial(u, off, sign), None
+
+    acc0 = jnp.zeros((n, n), acc_dtype)
+    acc, _ = jax.lax.scan(step, acc0, (strips, offsets))
+    return acc
+
+
+def _map_chunks(fn: Callable, xb: jnp.ndarray, chunk: int) -> jnp.ndarray:
+    """Apply a stack-level ``fn`` over batch chunks via `lax.map`.
+
+    Bounds live memory to one ``chunk``-sized stack (plus the output);
+    zero-image padding on the last chunk is sliced back off.
+    """
+    b = xb.shape[0]
+    chunk = int(chunk)
+    if chunk < 1:
+        raise ValueError(f"block_batch must be >= 1, got {chunk}")
+    if chunk >= b:
+        return fn(xb)
+    nb = math.ceil(b / chunk)
+    pad = nb * chunk - b
+    xp = jnp.pad(xb, ((0, pad),) + ((0, 0),) * (xb.ndim - 1))
+    out = jax.lax.map(fn, xp.reshape(nb, chunk, *xb.shape[1:]))
+    return out.reshape(nb * chunk, *out.shape[2:])[:b]
+
+
+# ---------------------------------------------------------------------------
+# RadonPlan
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class RadonPlan:
+    """A resolved, cached recipe for transforming one input geometry.
+
+    ``forward`` embeds into the prime domain and returns the
+    ``(…, P+1, P)`` projections; ``inverse`` reconstructs and crops back
+    to ``(…, H, W)``.  Bit-exact round trip for integer images by
+    construction (zero pad in, zero pad out, crop).
+    """
+
+    geometry: G.Geometry
+    method: str                      # resolved backend name (never "auto")
+    requested_method: str            # what the caller asked for
+    strip_rows: Optional[int] = None
+    m_block: Optional[int] = None
+    batch_impl: str = "auto"
+    block_rows: Optional[int] = None
+    block_batch: Optional[int] = None
+    mesh: Optional[object] = None
+
+    @property
+    def backend(self) -> Backend:
+        return get_backend(self.method)
+
+    def _knobs(self) -> dict:
+        return {"strip_rows": self.strip_rows, "m_block": self.m_block,
+                "mesh": self.mesh}
+
+    def _batch_impl(self) -> str:
+        if self.batch_impl != "auto":
+            return self.batch_impl
+        # Measured (EXPERIMENTS.md §Perf): on CPU `lax.map` hits the
+        # 16x-single ideal while vmap pays +60%; on TPU vmap wins.
+        return "map" if jax.default_backend() == "cpu" else "vmap"
+
+    # -- prime-domain single image ----------------------------------------
+    def _forward_prime(self, fp: jnp.ndarray) -> jnp.ndarray:
+        if self.block_rows is not None:
+            core = _blocked_skew_sum(fp, +1, self.block_rows,
+                                     accum_dtype_for(fp.dtype))
+            return _attach_row_sum(core, fp)
+        return self.backend.forward(fp, **self._knobs())
+
+    def _inverse_prime(self, r: jnp.ndarray) -> jnp.ndarray:
+        if self.block_rows is not None:
+            n = r.shape[-1]
+            acc = accum_dtype_for(r.dtype)
+            z = _blocked_skew_sum(r[:n], -1, self.block_rows, acc)
+            return _inverse_epilogue(z, r, n)
+        return self.backend.inverse(r, **self._knobs())
+
+    # -- batched stacks ----------------------------------------------------
+    def _stack(self, xb: jnp.ndarray, native: Optional[Callable],
+               one: Callable) -> jnp.ndarray:
+        if native is not None and self.block_rows is None:
+            fn = lambda chunk: native(chunk, **self._knobs())
+        elif self._batch_impl() == "map":
+            fn = lambda chunk: jax.lax.map(one, chunk)
+        else:
+            fn = lambda chunk: jax.vmap(one)(chunk)
+        if self.block_batch is not None:
+            return _map_chunks(fn, xb, self.block_batch)
+        return fn(xb)
+
+    # -- public ------------------------------------------------------------
+    def forward(self, f: jnp.ndarray) -> jnp.ndarray:
+        """(…, H, W) image(s) -> (…, P+1, P) exact projections."""
+        g = self.geometry
+        if f.shape != g.image_shape:
+            raise ValueError(
+                f"plan built for {g.image_shape}, got image {f.shape}")
+        fp = G.embed(f, g)
+        if not g.batched:
+            return self._forward_prime(fp)
+        be = self.backend
+        if be.mesh_aware:
+            if be.forward_batched is None:
+                raise ValueError(f"{be.name} has no batched forward")
+            return be.forward_batched(fp, **self._knobs())
+        native = be.forward_batched if be.batched_native else None
+        return self._stack(fp, native, self._forward_prime)
+
+    def inverse(self, r: jnp.ndarray) -> jnp.ndarray:
+        """(…, P+1, P) projections -> (…, H, W) exact reconstruction."""
+        g = self.geometry
+        if r.shape != g.transform_shape:
+            raise ValueError(
+                f"plan expects projections {g.transform_shape}, "
+                f"got {r.shape}")
+        if not g.batched:
+            return G.crop(self._inverse_prime(r), g)
+        be = self.backend
+        # mesh-aware backends have no batched-native inverse, so they take
+        # the generic _stack path too (map/vmap of the sharded inverse,
+        # block_batch chunking respected)
+        native = be.inverse_batched if be.batched_native else None
+        return G.crop(self._stack(r, native, self._inverse_prime), g)
+
+    def describe(self) -> dict:
+        g = self.geometry
+        return {
+            "image_shape": g.image_shape,
+            "prime": g.prime,
+            "pad": (g.pad_rows, g.pad_cols),
+            "native": g.native,
+            "method": self.method,
+            "requested_method": self.requested_method,
+            "strip_rows": self.strip_rows,
+            "m_block": self.m_block,
+            "block_rows": self.block_rows,
+            "block_batch": self.block_batch,
+            "mesh": None if self.mesh is None else repr(self.mesh),
+        }
+
+
+# ---------------------------------------------------------------------------
+# plan construction + cache
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=512)
+def _cached_plan(shape: tuple, dtype_name: str, method: str,
+                 strip_rows: Optional[int], m_block: Optional[int],
+                 batch_impl: str, block_rows: Optional[int],
+                 block_batch: Optional[int], mesh) -> RadonPlan:
+    geom = G.normalize_geometry(shape)
+    dtype = jnp.dtype(dtype_name)
+    requested = method
+    if method == "auto":
+        method = select_backend(geom.prime, dtype, batch=geom.batch,
+                                mesh=mesh)
+    be = get_backend(method)
+    if not be.supports_dtype(dtype):
+        raise ValueError(
+            f"backend {be.name!r} does not support dtype {dtype_name} "
+            f"(kinds: {be.dtype_kinds})")
+    if batch_impl not in ("auto", "map", "vmap"):
+        raise ValueError(f"batch_impl must be auto|map|vmap: {batch_impl!r}")
+    itemsize = jnp.dtype(accum_dtype_for(dtype)).itemsize
+    if be.needs_strip_rows or be.takes_m_block:
+        th, tm = resolve_blocks(geom.prime, itemsize, strip_rows, m_block)
+        strip_rows = th
+        m_block = tm if be.takes_m_block else None
+    return RadonPlan(geometry=geom, method=method, requested_method=requested,
+                     strip_rows=strip_rows, m_block=m_block,
+                     batch_impl=batch_impl, block_rows=block_rows,
+                     block_batch=block_batch, mesh=mesh)
+
+
+def get_plan(shape, dtype, method: str = "auto", *,
+             strip_rows: Optional[int] = None,
+             m_block: Optional[int] = None,
+             batch_impl: str = "auto",
+             block_rows: Optional[int] = None,
+             block_batch: Optional[int] = None,
+             mesh=None) -> RadonPlan:
+    """Cached :class:`RadonPlan` for an input shape/dtype and knobs.
+
+    An ambient ``with mesh:`` context is resolved HERE, before the
+    lru-cache lookup, so the context participates in the effective cache
+    key -- a plan built outside a mesh is never returned inside one (or
+    vice versa).
+    """
+    if method == "auto" and mesh is None:
+        mesh = _active_mesh()
+    shape = tuple(int(s) for s in shape)
+    return _cached_plan(shape, jnp.dtype(dtype).name, method,
+                        None if strip_rows is None else int(strip_rows),
+                        None if m_block is None else int(m_block),
+                        batch_impl,
+                        None if block_rows is None else int(block_rows),
+                        None if block_batch is None else int(block_batch),
+                        mesh)
+
+
+def plan_cache_info():
+    return _cached_plan.cache_info()
+
+
+def plan_cache_clear() -> None:
+    _cached_plan.cache_clear()
+
+
+def dispatch_skew_sum(g: jnp.ndarray, sign: int, method: str = "horner",
+                      strip_rows: Optional[int] = None,
+                      m_block: Optional[int] = None, mesh=None) -> jnp.ndarray:
+    """Registry-routed skew-sum primitive (prime-domain (N, N) input)."""
+    n = g.shape[-1]
+    if method == "auto":
+        method = select_backend(n, g.dtype, mesh=mesh)
+    be = get_backend(method)
+    if be.needs_strip_rows and strip_rows is None:
+        itemsize = jnp.dtype(accum_dtype_for(g.dtype)).itemsize
+        strip_rows = resolve_blocks(n, itemsize, None, None)[0]
+    return be.skew_sum(g, sign, strip_rows=strip_rows, m_block=m_block,
+                       mesh=mesh)

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 
 from repro.core.dprt import accum_dtype_for, is_prime
 from .sfdprt import (dprt_pallas_raw, idprt_pallas_raw, skew_sum_pallas_raw)
-from .tuning import pallas_block_spec
+from .tuning import resolve_blocks
 
 __all__ = ["dprt_pallas", "idprt_pallas", "skew_sum_pallas"]
 
@@ -37,13 +37,10 @@ def _auto_interpret(interpret: Optional[bool]) -> bool:
 
 def _resolve_blocks(n: int, strip_rows: Optional[int],
                     m_block: Optional[int], dtype) -> tuple[int, int]:
-    th, tm = pallas_block_spec(n, jnp.dtype(accum_dtype_for(dtype)).itemsize)
-    h = th if strip_rows is None else int(strip_rows)
-    mb = tm if m_block is None else int(m_block)
-    if h < 1 or mb < 1:
-        raise ValueError(
-            f"strip_rows/m_block must be >= 1, got {h}/{mb}")
-    return h, mb
+    # delegate to the shared resolver so the plan layer ("auto") and
+    # direct pallas calls agree on block shapes
+    return resolve_blocks(n, jnp.dtype(accum_dtype_for(dtype)).itemsize,
+                          strip_rows, m_block)
 
 
 def skew_sum_pallas(g: jnp.ndarray, sign: int = 1,

@@ -16,7 +16,8 @@ from __future__ import annotations
 
 import math
 
-__all__ = ["PALLAS_TUNE", "pallas_block_spec", "wasted_direction_rows"]
+__all__ = ["PALLAS_TUNE", "pallas_block_spec", "resolve_blocks",
+           "wasted_direction_rows"]
 
 # N: (strip_rows H, m_block M).  M multiples of 8 keep int32 sublane
 # tiling aligned off the interpret path.  CPU-interpret measurements
@@ -71,6 +72,22 @@ def pallas_block_spec(n: int, itemsize: int = 4) -> tuple[int, int]:
         else:
             break
     return max(h, 1), m_block
+
+
+def resolve_blocks(n: int, itemsize: int = 4,
+                   strip_rows=None, m_block=None) -> tuple[int, int]:
+    """Fill missing (strip_rows, m_block) from the table, validate given.
+
+    The single knob-resolution used by both the Pallas op wrappers and
+    the transform-plan layer (``repro.core.plan``), so ``method="auto"``
+    and explicit ``method="pallas"`` land on identical block shapes.
+    """
+    th, tm = pallas_block_spec(n, itemsize)
+    h = th if strip_rows is None else int(strip_rows)
+    mb = tm if m_block is None else int(m_block)
+    if h < 1 or mb < 1:
+        raise ValueError(f"strip_rows/m_block must be >= 1, got {h}/{mb}")
+    return h, mb
 
 
 def wasted_direction_rows(n: int, m_block: int, forward: bool = True) -> int:

@@ -2,8 +2,15 @@
 
 ``--mode lm``     prefill a batch of prompts then greedy-decode N tokens.
 ``--mode radon``  the paper's FPGA-coprocessor pattern as a TPU service:
-                  batches of prime-sized images in, DPRT (or DPRT-domain
+                  batches of images in, DPRT (or DPRT-domain
                   convolution) out, batch sharded across the mesh.
+
+The radon service resolves ``--method`` through the transform-plan
+registry (:mod:`repro.core.plan`) -- any registered backend plus
+``auto`` -- and accepts arbitrary ``--n`` (non-prime sizes are
+zero-embedded into the next prime and cropped back by the plan, so the
+round trip stays bit-exact).  ``--strip-rows`` / ``--m-block`` /
+``--batch-impl`` / ``--block-batch`` plumb straight into the plan.
 """
 from __future__ import annotations
 
@@ -17,7 +24,8 @@ import numpy as np
 from repro.configs import get_config, get_smoke_config
 from repro.configs.radon_251 import config as radon_config, \
     smoke_config as radon_smoke
-from repro.core.dprt import dprt_batched, idprt_batched
+from repro.core.plan import available_backends, backend_capabilities, \
+    get_backend, get_plan
 from repro.data.synthetic import TokenStream, radon_images
 from repro.launch.mesh import make_local_mesh
 from repro.models import Model
@@ -64,11 +72,16 @@ def serve_lm(args):
 
 def serve_radon(args):
     rcfg = radon_smoke() if args.smoke else radon_config()
-    imgs = jnp.asarray(radon_images(rcfg.n, args.batch or rcfg.batch,
+    n = args.n or rcfg.n                       # any size; plan embeds
+    imgs = jnp.asarray(radon_images(n, args.batch or rcfg.batch,
                                     kind="phantom"))
-    fwd = jax.jit(lambda x: dprt_batched(x, method=args.method))
-    inv = jax.jit(lambda r: idprt_batched(r, method=args.method))
-    fwd(imgs[:1]).block_until_ready()          # warmup/compile
+    plan = get_plan(imgs.shape, imgs.dtype, args.method,
+                    strip_rows=args.strip_rows, m_block=args.m_block,
+                    batch_impl=args.batch_impl,
+                    block_batch=args.block_batch)
+    fwd = jax.jit(plan.forward)
+    inv = jax.jit(plan.inverse)
+    fwd(imgs).block_until_ready()              # warmup/compile
     t0 = time.perf_counter()
     r = fwd(imgs)
     r.block_until_ready()
@@ -76,29 +89,58 @@ def serve_radon(args):
     back = inv(r)
     back.block_until_ready()
     t2 = time.perf_counter()
-    exact = bool((back == imgs).all())
-    n = imgs.shape[0]
-    print(f"[serve-radon] N={rcfg.n} batch={n} method={args.method}: "
+    exact = bool((back == imgs).all())         # plan crops the embedding
+    b = imgs.shape[0]
+    print(f"[serve-radon] N={n} (prime P={plan.geometry.prime}) batch={b} "
+          f"method={args.method}->{plan.method}: "
           f"forward {1e3*(t1-t0):.1f}ms "
-          f"({n/(t1-t0):.1f} img/s), inverse {1e3*(t2-t1):.1f}ms, "
+          f"({b/(t1-t0):.1f} img/s), inverse {1e3*(t2-t1):.1f}ms, "
           f"round-trip exact={exact}")
     assert exact, "DPRT round trip must be bit-exact"
     return r
 
 
+def list_backends():
+    cols = ("name", "batched_native", "needs_strip_rows", "takes_m_block",
+            "mesh_aware", "dtypes", "note")
+    for row in backend_capabilities():
+        print("  ".join(f"{c}={row[c]}" for c in cols))
+
+
 def main(argv=None):
+    # CLI surface = the registry: every non-mesh backend plus "auto"
+    methods = ["auto"] + [name for name in available_backends()
+                          if not get_backend(name).mesh_aware]
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=["lm", "radon"], default="radon")
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--method", default="horner",
-                    choices=["gather", "horner", "pallas"],
-                    help="DPRT strategy for --mode radon (pallas = the "
-                         "fused batched kernel; one pallas_call per batch)")
+    ap.add_argument("--method", default="auto", choices=methods,
+                    help="DPRT strategy for --mode radon (auto = registry "
+                         "pick for shape/dtype/batch; pallas = the fused "
+                         "batched kernel, one pallas_call per batch)")
+    ap.add_argument("--n", type=int, default=None,
+                    help="image side for --mode radon; non-prime/any size "
+                         "is embedded into the next prime by the plan "
+                         "layer (default: config N)")
+    ap.add_argument("--strip-rows", type=int, default=None,
+                    help="strip height H (strips/pallas; default: tuned)")
+    ap.add_argument("--m-block", type=int, default=None,
+                    help="direction block M (pallas; default: tuned)")
+    ap.add_argument("--batch-impl", default="auto",
+                    choices=["auto", "map", "vmap"],
+                    help="batching for non-batched-native backends")
+    ap.add_argument("--block-batch", type=int, default=None,
+                    help="stream the batch through the backend in chunks "
+                         "of this many images (bounded memory)")
+    ap.add_argument("--list-backends", action="store_true",
+                    help="print the backend capability table and exit")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-tokens", type=int, default=16)
     args = ap.parse_args(argv)
+    if args.list_backends:
+        return list_backends()
     if args.mode == "lm":
         return serve_lm(args)
     return serve_radon(args)

@@ -30,6 +30,89 @@ def test_linear_conv_exact_vs_numpy(a, c, seed):
     np.testing.assert_array_equal(got, C.linear_conv2d_direct(f, g))
 
 
+@settings(max_examples=10, deadline=None)
+@given(ah=st.integers(2, 9), aw=st.integers(2, 9), ch=st.integers(1, 4),
+       cw=st.integers(1, 4), seed=st.integers(0, 10 ** 6))
+def test_linear_conv_rectangular_exact(ah, aw, ch, cw, seed):
+    """Regression: the old square-only prime padding mis-padded
+    rectangular operands; the geometry layer pads each axis."""
+    rng = np.random.default_rng(seed)
+    f = jnp.asarray(rng.integers(0, 256, (ah, aw)), jnp.int32)
+    g = jnp.asarray(rng.integers(0, 16, (ch, cw)), jnp.int32)
+    got = np.asarray(C.linear_conv2d_dprt(f, g))
+    assert got.shape == (ah + ch - 1, aw + cw - 1)
+    np.testing.assert_array_equal(got, C.linear_conv2d_direct(f, g))
+
+
+@settings(max_examples=6, deadline=None)
+@given(block=st.integers(2, 9), seed=st.integers(0, 10 ** 6))
+def test_linear_conv_blocked_overlap_add_equals_whole(block, seed):
+    """Companion-paper overlap-add: tile-by-tile at the tile prime must
+    reproduce the whole-image result exactly."""
+    rng = np.random.default_rng(seed)
+    f = jnp.asarray(rng.integers(0, 256, (13, 17)), jnp.int32)
+    g = jnp.asarray(rng.integers(0, 16, (3, 4)), jnp.int32)
+    whole = np.asarray(C.linear_conv2d_dprt(f, g))
+    blocked = np.asarray(C.linear_conv2d_dprt(f, g, block_size=block))
+    np.testing.assert_array_equal(blocked, whole)
+    np.testing.assert_array_equal(whole, C.linear_conv2d_direct(f, g))
+
+
+def test_linear_conv_blocked_batched_stack():
+    rng = np.random.default_rng(7)
+    fb = jnp.asarray(rng.integers(0, 256, (3, 10, 8)), jnp.int32)
+    g = jnp.asarray(rng.integers(0, 16, (3, 3)), jnp.int32)
+    got = np.asarray(C.linear_conv2d_dprt(fb, g, method="pallas",
+                                          block_size=4))
+    for i in range(3):
+        np.testing.assert_array_equal(
+            got[i], C.linear_conv2d_direct(fb[i], g))
+
+
+def test_circular_conv_arbitrary_geometry_torus():
+    """Non-prime geometry circular conv = true (H, W)-torus convolution
+    (fold of the exact linear convolution)."""
+    rng = np.random.default_rng(4)
+    h, w = 6, 8
+    f = rng.integers(0, 50, (h, w)).astype(np.int64)
+    g = rng.integers(0, 10, (h, w)).astype(np.int64)
+    got = np.asarray(C.circ_conv2d_dprt(jnp.asarray(f, jnp.int32),
+                                        jnp.asarray(g, jnp.int32)))
+    want = np.zeros((h, w), np.int64)
+    for x in range(h):
+        for y in range(w):
+            want[x, y] = sum(f[u, v] * g[(x - u) % h, (y - v) % w]
+                             for u in range(h) for v in range(w))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_circular_conv_rejects_mismatched_geometry():
+    with pytest.raises(ValueError):
+        C.circ_conv2d_dprt(jnp.zeros((5, 5), jnp.int32),
+                           jnp.zeros((7, 7), jnp.int32))
+
+
+def test_dft_batched_matches_reference():
+    rng = np.random.default_rng(9)
+    fb = jnp.asarray(rng.integers(0, 256, (4, 13, 13)), jnp.int32)
+    got = np.asarray(F.dft2_via_dprt_batched(fb))
+    for i in range(4):
+        want = np.asarray(F.dft2_reference(fb[i]))
+        assert np.max(np.abs(got[i] - want)) / np.max(np.abs(want)) < 1e-5
+
+
+def test_dft_kwargs_forward_to_dispatch():
+    rng = np.random.default_rng(10)
+    f = jnp.asarray(rng.integers(0, 256, (13, 13)), jnp.int32)
+    base = np.asarray(F.dft2_via_dprt(f))
+    for kw in [dict(method="strips", strip_rows=4),
+               dict(method="pallas", strip_rows=5, m_block=3)]:
+        np.testing.assert_array_equal(np.asarray(F.dft2_via_dprt(f, **kw)),
+                                      base)
+    with pytest.raises(ValueError):
+        F.dft2_via_dprt(jnp.zeros((6, 6), jnp.int32))  # non-prime: no DFT
+
+
 def test_fft_path_agrees_but_is_float():
     """The FFT route (what the paper's hardware avoids) only matches after
     rounding -- the DPRT route is exact by construction."""

@@ -48,13 +48,28 @@ def test_all_strip_heights_n13():
         np.testing.assert_array_equal(out, ref, err_msg=f"H={h}")
 
 
-def test_rejects_nonprime_and_nonsquare():
-    with pytest.raises(ValueError):
-        D.dprt(jnp.zeros((4, 4), jnp.int32))
-    with pytest.raises(ValueError):
-        D.dprt(jnp.zeros((3, 5), jnp.int32))
-    with pytest.raises(ValueError):
+def test_arbitrary_geometry_embeds_to_next_prime():
+    """Non-prime / non-square inputs are zero-embedded (plan layer), not
+    rejected; projections come back in the (P+1, P) prime domain."""
+    assert D.dprt(jnp.zeros((4, 4), jnp.int32)).shape == (6, 5)
+    assert D.dprt(jnp.zeros((3, 5), jnp.int32)).shape == (6, 5)
+    f = rand_img(6, seed=9)[:4]                   # (4, 6) rectangle
+    r = D.dprt(jnp.asarray(f))
+    assert r.shape == (8, 7)                      # next_prime(6) = 7
+    fp = np.zeros((7, 7), f.dtype)
+    fp[:4, :6] = f
+    np.testing.assert_array_equal(np.asarray(r), D.dprt_oracle_np(fp))
+
+
+def test_rejects_malformed_inputs():
+    with pytest.raises(ValueError):               # not a projection shape
         D.idprt(jnp.zeros((5, 5), jnp.int32))
+    with pytest.raises(ValueError):               # (N+1, N) but N not prime
+        D.idprt(jnp.zeros((10, 9), jnp.int32))
+    with pytest.raises(ValueError):               # 4-D is not a geometry
+        D.dprt(jnp.zeros((2, 2, 4, 4), jnp.int32))
+    with pytest.raises(ValueError):
+        D.dprt_batched(jnp.zeros((5, 5), jnp.int32))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,289 @@
+"""Transform-plan layer: backend registry, arbitrary-geometry embedding,
+blocked (resource-fitting) execution, auto selection, plan caching."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import importlib
+D = importlib.import_module("repro.core.dprt")
+C = importlib.import_module("repro.core.conv")
+G = importlib.import_module("repro.core.geometry")
+PL = importlib.import_module("repro.core.plan")
+
+
+def rand_img(shape, seed=0, hi=256):
+    return np.random.default_rng(seed).integers(0, hi, shape).astype(np.int32)
+
+
+def embedded_oracle(f):
+    """Oracle DPRT of the zero-embedded prime-domain image."""
+    geom = G.normalize_geometry(f.shape)
+    fp = np.zeros((geom.prime, geom.prime), np.int64)
+    fp[: f.shape[0], : f.shape[1]] = f
+    return D.dprt_oracle_np(fp)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+def test_registry_has_all_five_backends():
+    names = PL.available_backends()
+    for want in ("gather", "horner", "strips", "pallas", "sharded"):
+        assert want in names, names
+
+
+def test_registry_capability_declarations():
+    assert PL.get_backend("pallas").batched_native
+    assert PL.get_backend("pallas").takes_m_block
+    assert PL.get_backend("strips").needs_strip_rows
+    assert PL.get_backend("sharded").mesh_aware
+    assert not PL.get_backend("horner").needs_strip_rows
+    rows = {r["name"]: r for r in PL.backend_capabilities()}
+    assert rows["pallas"]["batched_native"] and rows["sharded"]["mesh_aware"]
+
+
+def test_unknown_method_lists_backends():
+    with pytest.raises(ValueError, match="registered backends"):
+        PL.get_backend("fftw")
+    with pytest.raises(ValueError):
+        D.dprt(jnp.asarray(rand_img((5, 5))), method="fftw")
+
+
+def test_custom_backend_registration_roundtrip():
+    calls = []
+    horner = PL.get_backend("horner")
+
+    def spy(g, sign, **kw):
+        calls.append(g.shape)
+        return horner.skew_sum(g, sign, **kw)
+
+    PL.register_backend(PL.Backend(
+        name="spy", skew_sum=spy,
+        forward=PL._make_forward(spy), inverse=PL._make_inverse(spy)))
+    try:
+        f = rand_img((7, 7), seed=3)
+        out = np.asarray(D.dprt(jnp.asarray(f), method="spy"))
+        np.testing.assert_array_equal(out, D.dprt_oracle_np(f))
+        assert calls, "registered backend was not dispatched to"
+    finally:
+        PL._REGISTRY.pop("spy", None)
+        PL.plan_cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# method="auto"
+# ---------------------------------------------------------------------------
+def test_auto_selects_pallas_for_prime_images():
+    assert PL.select_backend(251, jnp.int32) == "pallas"
+    plan = PL.get_plan((251, 251), "int32", "auto")
+    assert plan.method == "pallas" and plan.requested_method == "auto"
+    # blocks come from the tuning table
+    from repro.kernels.tuning import PALLAS_TUNE
+    assert (plan.strip_rows, plan.m_block) == PALLAS_TUNE[251]
+
+
+def test_auto_falls_back_on_unsupported_dtype():
+    # pallas declares int/float only; complex must land elsewhere
+    assert PL.select_backend(13, jnp.complex64) == "horner"
+
+
+def test_auto_transform_is_exact():
+    f = rand_img((13, 13), seed=11)
+    r = np.asarray(D.dprt(jnp.asarray(f), method="auto"))
+    np.testing.assert_array_equal(r, D.dprt_oracle_np(f))
+    back = np.asarray(D.idprt(jnp.asarray(r.astype(np.int32)),
+                              method="auto"))
+    np.testing.assert_array_equal(back, f)
+
+
+# ---------------------------------------------------------------------------
+# arbitrary geometry: embed + bit-exact round trip
+# ---------------------------------------------------------------------------
+@settings(max_examples=15, deadline=None)
+@given(h=st.integers(1, 14), w=st.integers(1, 14),
+       seed=st.integers(0, 10 ** 6))
+def test_roundtrip_any_geometry_horner(h, w, seed):
+    f = rand_img((h, w), seed)
+    plan = PL.get_plan(f.shape, f.dtype, "horner")
+    r = plan.forward(jnp.asarray(f))
+    assert r.shape == plan.geometry.transform_shape
+    back = np.asarray(plan.inverse(r))
+    np.testing.assert_array_equal(back, f)
+
+
+@settings(max_examples=8, deadline=None)
+@given(h=st.integers(1, 12), w=st.integers(1, 12),
+       seed=st.integers(0, 10 ** 6))
+def test_roundtrip_any_geometry_pallas(h, w, seed):
+    f = rand_img((h, w), seed)
+    plan = PL.get_plan(f.shape, f.dtype, "pallas")
+    back = np.asarray(plan.inverse(plan.forward(jnp.asarray(f))))
+    np.testing.assert_array_equal(back, f)
+
+
+@settings(max_examples=6, deadline=None)
+@given(b=st.integers(1, 4), h=st.integers(2, 10), w=st.integers(2, 10),
+       seed=st.integers(0, 10 ** 6))
+def test_roundtrip_batched_any_geometry(b, h, w, seed):
+    fb = rand_img((b, h, w), seed)
+    for method in ("horner", "pallas"):
+        plan = PL.get_plan(fb.shape, fb.dtype, method)
+        back = np.asarray(plan.inverse(plan.forward(jnp.asarray(fb))))
+        np.testing.assert_array_equal(back, fb, err_msg=method)
+
+
+def test_forward_matches_embedded_oracle():
+    f = rand_img((4, 6), seed=5)
+    r = np.asarray(D.dprt(jnp.asarray(f)))       # bare dprt embeds too
+    np.testing.assert_array_equal(r, embedded_oracle(f))
+    assert r.shape == (8, 7)                     # next_prime(6) = 7
+
+
+def test_geometry_normalization():
+    g = G.normalize_geometry((4, 4))
+    assert (g.prime, g.native) == (5, False)
+    assert G.normalize_geometry((3, 5)).prime == 5
+    g251 = G.normalize_geometry((251, 251))
+    assert g251.native and g251.prime == 251
+    gb = G.normalize_geometry((8, 3, 5))
+    assert gb.batched and gb.batch == 8
+    for bad in [(5,), (2, 3, 4, 5), (0, 4)]:
+        with pytest.raises(ValueError):
+            G.normalize_geometry(bad)
+
+
+def test_plan_shape_validation():
+    plan = PL.get_plan((6, 9), "int32", "horner")
+    with pytest.raises(ValueError, match="plan built for"):
+        plan.forward(jnp.zeros((9, 6), jnp.int32))
+    with pytest.raises(ValueError, match="expects projections"):
+        plan.inverse(jnp.zeros((5, 5), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# blocked (bounded-memory) execution == whole-image results
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(n=st.sampled_from([5, 7, 11, 13]), block=st.integers(1, 13),
+       seed=st.integers(0, 10 ** 6))
+def test_block_rows_equals_whole_image(n, block, seed):
+    f = rand_img((n, n), seed)
+    whole = PL.get_plan(f.shape, f.dtype, "horner")
+    blocked = PL.get_plan(f.shape, f.dtype, "horner", block_rows=block)
+    fj = jnp.asarray(f)
+    r_whole = np.asarray(whole.forward(fj))
+    r_blocked = np.asarray(blocked.forward(fj))
+    np.testing.assert_array_equal(r_blocked, r_whole)
+    np.testing.assert_array_equal(
+        np.asarray(blocked.inverse(jnp.asarray(r_blocked))), f)
+
+
+@settings(max_examples=6, deadline=None)
+@given(b=st.integers(2, 9), chunk=st.integers(1, 4),
+       seed=st.integers(0, 10 ** 6))
+def test_block_batch_equals_one_call(b, chunk, seed):
+    fb = rand_img((b, 7, 7), seed)
+    fj = jnp.asarray(fb)
+    for method in ("pallas", "horner"):
+        whole = np.asarray(
+            PL.get_plan(fb.shape, fb.dtype, method).forward(fj))
+        chunked = np.asarray(PL.get_plan(fb.shape, fb.dtype, method,
+                                         block_batch=chunk).forward(fj))
+        np.testing.assert_array_equal(chunked, whole, err_msg=method)
+
+
+def test_block_rows_on_embedded_geometry():
+    f = rand_img((9, 12), seed=2)
+    plan = PL.get_plan(f.shape, f.dtype, "horner", block_rows=4)
+    back = np.asarray(plan.inverse(plan.forward(jnp.asarray(f))))
+    np.testing.assert_array_equal(back, f)
+
+
+# ---------------------------------------------------------------------------
+# plan cache
+# ---------------------------------------------------------------------------
+def test_plan_cache_hits():
+    PL.plan_cache_clear()
+    base = PL.plan_cache_info()
+    assert base.currsize == 0
+    p1 = PL.get_plan((11, 11), "int32", "horner")
+    after_miss = PL.plan_cache_info()
+    assert after_miss.misses == base.misses + 1
+    p2 = PL.get_plan((11, 11), "int32", "horner")
+    after_hit = PL.plan_cache_info()
+    assert after_hit.hits == after_miss.hits + 1
+    assert p1 is p2                       # cached plan object is reused
+    PL.get_plan((11, 11), "int32", "gather")
+    assert PL.plan_cache_info().misses == after_miss.misses + 1
+
+
+def test_transforms_share_the_plan_cache():
+    PL.plan_cache_clear()
+    f = jnp.asarray(rand_img((7, 7), seed=1))
+    D.dprt(f)                              # miss (trace) then cached
+    m = PL.plan_cache_info().misses
+    D.dprt(f + 1)                          # same shape/dtype/knobs: no trace,
+    assert PL.plan_cache_info().misses == m   # and no new plan either
+
+
+# ---------------------------------------------------------------------------
+# sharded backend through the registry (fake multi-device subprocess)
+# ---------------------------------------------------------------------------
+def test_sharded_backend_via_registry(subproc):
+    subproc("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.dprt import dprt, idprt, dprt_oracle_np
+from repro.core.plan import get_plan, select_backend
+mesh = jax.make_mesh((8,), ("model",))
+f = jnp.asarray(np.random.default_rng(0).integers(0, 256, (13, 13)), jnp.int32)
+assert select_backend(13, jnp.int32, mesh=mesh) == "sharded"
+plan = get_plan(f.shape, f.dtype, "auto", mesh=mesh)
+assert plan.method == "sharded", plan.method
+r = np.asarray(plan.forward(f))
+assert (r == dprt_oracle_np(np.asarray(f))).all()
+back = np.asarray(plan.inverse(jnp.asarray(r.astype(np.int32))))
+assert (back == np.asarray(f)).all()
+# and through the public entry point
+r2 = np.asarray(dprt(f, method="sharded", mesh=mesh))
+assert (r2 == r).all()
+
+# a mesh without a "model" axis must still work (axis fallback)
+mesh_d = jax.make_mesh((8,), ("data",))
+r3 = np.asarray(dprt(f, method="auto", mesh=mesh_d))
+assert (r3 == r).all()
+
+# ambient-context resolution must not be pinned by any cache: the same
+# shape under auto picks pallas outside the mesh, sharded inside it,
+# and pallas again after the context exits
+plain = get_plan(f.shape, f.dtype, "auto")
+assert plain.method == "pallas", plain.method
+with mesh:
+    inside = get_plan(f.shape, f.dtype, "auto")
+    assert inside.method == "sharded", inside.method
+    assert (np.asarray(dprt(f, method="auto")) == r).all()
+after = get_plan(f.shape, f.dtype, "auto")
+assert after.method == "pallas", after.method
+assert (np.asarray(dprt(f, method="auto")) == r).all()
+print("OK")
+""")
+
+
+# ---------------------------------------------------------------------------
+# registry is the single dispatch point (no stray method chains)
+# ---------------------------------------------------------------------------
+def test_no_per_module_method_chains():
+    """The five former dispatch sites must not string-match backend
+    names (the registry is the only method->implementation mapping;
+    checking for the "auto" sentinel is allowed)."""
+    import os
+    import re
+    root = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src", "repro")
+    sites = ["core/dprt.py", "core/conv.py", "core/dft.py",
+             "kernels/ops.py", "launch/serve.py"]
+    pat = re.compile(r"""if\s+method\s*==\s*['"](?!auto['"])""")
+    for rel in sites:
+        with open(os.path.join(root, rel)) as fh:
+            assert not pat.search(fh.read()), \
+                f"{rel} still has an if method == <backend> chain"
