@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dprt import dprt, dprt_batched
+from repro import radon
 from repro.kernels import (dprt_pallas, pallas_block_spec,
                            roll_rows_ladder_spec)
 from repro.kernels.tuning import wasted_direction_rows
@@ -41,22 +41,23 @@ def main() -> None:
     rng = np.random.default_rng(0)
     f = jnp.asarray(rng.integers(0, 256, (n, n)), jnp.int32)
 
-    base = time_jax(jax.jit(lambda x: dprt(x, method="gather")), f)
+    # operator API: one cached, AOT-able operator per (geometry, knobs)
+    base = time_jax(radon.DPRT((n, n), jnp.int32, "gather"), f)
     emit(f"dprt_impl/gather/N{n}", base, "systolic-analog baseline",
          method="gather", n=n, batch=1)
-    horner = time_jax(jax.jit(lambda x: dprt(x, method="horner")), f)
+    horner = time_jax(radon.DPRT((n, n), jnp.int32, "horner"), f)
     emit(f"dprt_impl/horner/N{n}", horner,
          f"speedup_vs_gather={base / horner:.2f}",
          method="horner", n=n, batch=1)
     for h in [2, 16, 64, 128]:
-        us = time_jax(jax.jit(
-            lambda x, hh=h: dprt(x, method="strips", strip_rows=hh)), f)
+        us = time_jax(radon.DPRT((n, n), jnp.int32, "strips",
+                                 strip_rows=h), f)
         emit(f"dprt_impl/strips_H{h}/N{n}", us,
              f"speedup_vs_gather={base / us:.2f}",
              method="strips", n=n, batch=1, strip_rows=h)
 
     th, tm = pallas_block_spec(n)
-    us = time_jax(jax.jit(lambda x: dprt(x, method="pallas")), f, iters=3)
+    us = time_jax(radon.DPRT((n, n), jnp.int32, "pallas"), f, iters=3)
     emit(f"dprt_impl/pallas_fused/N{n}", us,
          f"H={th} M={tm} speedup_vs_horner={horner / us:.2f} "
          + _ladder_note(n, tm),
@@ -64,7 +65,7 @@ def main() -> None:
 
     # the plan layer's auto pick (resolves to the fused pallas backend for
     # prime images); the regression guard gates it against pallas_fused
-    us_a = time_jax(jax.jit(lambda x: dprt(x, method="auto")), f, iters=3)
+    us_a = time_jax(radon.DPRT((n, n), jnp.int32, "auto"), f, iters=3)
     emit(f"dprt_impl/auto/N{n}", us_a,
          f"resolved=pallas dispatch_overhead_x={us_a / us:.2f}",
          method="auto", n=n, batch=1, strip_rows=th, m_block=tm)
@@ -72,18 +73,17 @@ def main() -> None:
     # batched service throughput (the FPGA-coprocessor comparison point,
     # Sec. V-B: CPU ~1.48ms/image for the adds alone)
     fb = jnp.asarray(rng.integers(0, 256, (BATCH, n, n)), jnp.int32)
-    us_h = time_jax(jax.jit(lambda x: dprt_batched(x, method="horner")), fb,
+    us_h = time_jax(radon.DPRT((BATCH, n, n), jnp.int32, "horner"), fb,
                     iters=3)
     emit(f"dprt_impl/batched{BATCH}_horner/N{n}", us_h,
          f"imgs_per_s={BATCH / (us_h / 1e6):.1f}",
          method="horner", n=n, batch=BATCH)
-    us_s = time_jax(jax.jit(
-        lambda x: dprt_batched(x, method="strips", strip_rows=64)), fb,
-        iters=3)
+    us_s = time_jax(radon.DPRT((BATCH, n, n), jnp.int32, "strips",
+                               strip_rows=64), fb, iters=3)
     emit(f"dprt_impl/batched{BATCH}_strips_H64/N{n}", us_s,
          f"imgs_per_s={BATCH / (us_s / 1e6):.1f}",
          method="strips", n=n, batch=BATCH, strip_rows=64)
-    us_p = time_jax(jax.jit(lambda x: dprt_batched(x, method="pallas")), fb,
+    us_p = time_jax(radon.DPRT((BATCH, n, n), jnp.int32, "pallas"), fb,
                     iters=3)
     emit(f"dprt_impl/batched{BATCH}_pallas_fused/N{n}", us_p,
          f"imgs_per_s={BATCH / (us_p / 1e6):.1f} one_pallas_call "
@@ -93,9 +93,8 @@ def main() -> None:
 
     # bounded-memory streaming (Sec. III-C resource fitting): the same
     # stack in block_batch-sized chunks through the fused kernel
-    us_b = time_jax(jax.jit(
-        lambda x: dprt_batched(x, method="pallas", block_batch=4)), fb,
-        iters=3)
+    us_b = time_jax(radon.DPRT((BATCH, n, n), jnp.int32, "pallas",
+                               block_batch=4), fb, iters=3)
     emit(f"dprt_impl/batched{BATCH}_pallas_blockbatch4/N{n}", us_b,
          f"imgs_per_s={BATCH / (us_b / 1e6):.1f} chunks_of_4 "
          f"overhead_vs_one_call_x={us_b / us_p:.2f}",

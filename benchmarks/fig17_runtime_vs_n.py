@@ -1,12 +1,11 @@
 """Paper Fig. 17: running time vs N.  Cycle models for the hardware
 variants + *measured* wall-times of our JAX implementations on this host
 (the shape of the curves is the reproduction; absolute units differ)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import radon
 from repro.core import pareto as P
-from repro.core.dprt import dprt
 
 from .common import emit, time_jax
 
@@ -25,8 +24,8 @@ def main() -> None:
         f = jnp.asarray(rng.integers(0, 256, (n, n)), jnp.int32)
         for method, kw in [("gather", {}), ("horner", {}),
                            ("strips", {"strip_rows": 16})]:
-            fn = jax.jit(lambda x, m=method, k=kw: dprt(x, method=m, **k))
-            us = time_jax(fn, f)
+            op = radon.DPRT((n, n), jnp.int32, method, **kw)
+            us = time_jax(op, f)
             emit(f"fig17/measured/{method}/N{n}", us, "us_wall_cpu")
 
 

@@ -43,10 +43,19 @@ def main(argv=None) -> None:
         print("# BENCH_dprt.json NOT written (bench_dprt_impl failed)",
               file=sys.stderr)
     elif check:
-        # guard mode: gate against the committed baseline, don't touch it
+        # guard mode: gate perf against the committed baseline AND the
+        # public-API health smoke together (neither touches the baseline)
         fresh = [r for r in common.ROWS
                  if r["name"].startswith("dprt_impl/")]
-        if check_regression.run_guard(fresh) != 0:
+        guard_failed = check_regression.run_guard(fresh) != 0
+        import contextlib
+        from repro.radon import selfcheck
+        with contextlib.redirect_stdout(sys.stderr):  # keep stdout CSV-pure
+            selfcheck_failed = selfcheck.run(run_bench=False) != 0
+        if selfcheck_failed:
+            print("# FAIL: repro.radon.selfcheck", file=sys.stderr)
+            guard_failed = True
+        if guard_failed:
             raise SystemExit(1)
     else:
         # never clobber the committed perf baseline with partial rows

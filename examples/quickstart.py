@@ -1,56 +1,73 @@
-"""Quickstart: the DPRT public API in ten lines each.
+"""Quickstart: the `repro.radon` operator API in ten lines each.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import radon
 from repro.core import (circ_conv2d_dprt, dft2_reference, dft2_via_dprt,
-                        dprt, idprt, next_prime, pareto)
-from repro.kernels import dprt_pallas
+                        next_prime, pareto)
 
 
 def main():
-    # 1. forward + exact inverse on a prime-sized integer image
+    # 1. one operator per geometry: forward + exact inverse
     rng = np.random.default_rng(0)
     n = 31
     img = jnp.asarray(rng.integers(0, 256, (n, n)), jnp.int32)
-    r = dprt(img)                          # (N+1, N), exact int32
-    back = idprt(r)
-    assert (back == img).all()
-    print(f"1. DPRT round-trip on {n}x{n}: bit-exact ✓ "
+    op = radon.DPRT(img.shape, img.dtype)  # method="auto" -> fused pallas
+    r = op(img)                            # (N+1, N), exact int32
+    assert (op.inverse(r) == img).all()
+    print(f"1. DPRT round-trip on {n}x{n} via {op.plan.method}: bit-exact ✓ "
           f"(projections sum to {int(r[0].sum())} = total pixel sum)")
 
-    # 2. the paper's scalable strip decomposition (choose H for your VMEM)
-    for h in [2, 8, n]:
-        assert (dprt(img, method="strips", strip_rows=h) == r).all()
-    print("2. strip decomposition H∈{2,8,N}: identical results ✓")
+    # 2. any geometry: non-prime/rectangular images embed into the next
+    #    prime and the SAME operator's inverse crops back exactly
+    rect = jnp.asarray(rng.integers(0, 256, (40, 57)), jnp.int32)
+    op_r = radon.DPRT(rect.shape, rect.dtype)
+    assert (op_r.inverse(op_r(rect)) == rect).all()
+    print(f"2. (40, 57) image -> prime P={op_r.plan.geometry.prime} "
+          "projections -> cropped back bit-exact ✓")
 
-    # 3. the Pallas TPU kernel (interpret mode on CPU)
-    rk = dprt_pallas(img, strip_rows=8, m_block=8)
-    assert (rk == r).all()
-    print("3. Pallas SFDPRT kernel == oracle ✓")
+    # 3. ambient config scopes replace per-call kwarg plumbing
+    with radon.config(method="strips", strip_rows=8):
+        assert (radon.DPRT(img.shape, img.dtype)(img) == r).all()
+    print("3. radon.config(method='strips', strip_rows=8): same bits ✓")
 
-    # 4. exact integer convolution through the transform domain
+    # 4. the adjoint is first-class (op.T != op.inverse) and jax.grad
+    #    through ANY backend -- including pallas -- hits it exactly
+    opf = radon.DPRT((n, n), jnp.float32, method="pallas")
+    w = jnp.asarray(rng.integers(0, 9, opf.shape_out), jnp.float32)
+    grad = jax.grad(lambda x: (opf(x) * w).sum())(img.astype(jnp.float32))
+    assert (grad == opf.T(w)).all()
+    print("4. jax.grad through the fused pallas kernel == explicit "
+          "adjoint ✓ (differentiable Radon layers)")
+
+    # 5. AOT serving: compile once per geometry, then zero retraces
+    exe = op.compile()
+    with radon.retrace_guard(max_traces=0):
+        for _ in range(3):
+            exe(img)
+    print("5. op.compile(): AOT executable, zero retraces under guard ✓")
+
+    # 6. operator composition: a whole DPRT-domain pipeline as one object
+    roundtrip = op.inverse @ op
+    assert (roundtrip(img) == img).all()
+    print("6. (op.inverse @ op)(img) == img: composition ✓")
+
+    # 7. exact integer convolution + the slice-theorem DFT still ride on
+    #    the same plans underneath
     kernel = jnp.zeros((n, n), jnp.int32).at[:3, :3].set(1)
     out = circ_conv2d_dprt(img, kernel)
-    print(f"4. exact 3x3 box filter via DPRT: sum={int(out.sum())} "
-          f"(= 9x image sum: {int(img.sum()) * 9}) ✓")
-
-    # 5. 2-D DFT by the discrete Fourier-slice theorem
     err = float(jnp.max(jnp.abs(dft2_via_dprt(img) - dft2_reference(img))))
-    print(f"5. 2-D DFT via N+1 1-D FFTs: max err vs fft2 = {err:.2e} ✓")
+    print(f"7. exact 3x3 box filter (sum={int(out.sum())} = 9x image sum) "
+          f"and 2-D DFT via N+1 FFTs (max err {err:.2e}) ✓")
 
-    # 6. the paper's Pareto front: pick H for your budget
+    # 8. the paper's Pareto front + prime-vs-pow2 padding argument
     front = pareto.pareto_front(251)
-    print(f"6. Pareto-optimal strip heights for N=251: {front[:8]}... "
-          f"({len(front)} points; H=84 runs "
-          f"{pareto.cycles_systolic(251) / pareto.cycles_sfdprt(251, 84):.0f}x "
-          "faster than the systolic baseline)")
-
-    # 7. prime padding beats power-of-two padding for linear convolution
-    print(f"7. linear conv 251+16-1=266 -> pad to prime {next_prime(266)} "
-          "(vs 512 for an FFT) ✓")
+    print(f"8. Pareto strip heights for N=251: {front[:6]}... and linear "
+          f"conv 251+16-1=266 -> prime {next_prime(266)} (vs 512 FFT) ✓")
 
 
 if __name__ == "__main__":

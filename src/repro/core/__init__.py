@@ -6,7 +6,7 @@ from .geometry import Geometry, normalize_geometry
 from .plan import (Backend, RadonPlan, available_backends,
                    backend_capabilities, get_backend, get_plan,
                    plan_cache_clear, plan_cache_info, register_backend,
-                   select_backend)
+                   select_backend, set_plan_cache_maxsize)
 from .conv import (circ_conv2d_dprt, circ_conv2d_direct, circ_conv2d_fft,
                    linear_conv2d_dprt, linear_conv2d_direct,
                    circ_conv1d_exact, prime_vs_pow2_padding)
@@ -20,7 +20,7 @@ __all__ = [
     "Geometry", "normalize_geometry",
     "Backend", "RadonPlan", "available_backends", "backend_capabilities",
     "get_backend", "get_plan", "plan_cache_clear", "plan_cache_info",
-    "register_backend", "select_backend",
+    "register_backend", "select_backend", "set_plan_cache_maxsize",
     "circ_conv2d_dprt", "circ_conv2d_direct", "circ_conv2d_fft",
     "linear_conv2d_dprt", "linear_conv2d_direct", "circ_conv1d_exact",
     "prime_vs_pow2_padding", "dft2_via_dprt", "dft2_via_dprt_batched",

@@ -42,8 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import geometry as G
-from .dprt import (accum_dtype_for, dprt, dprt_batched, idprt,
-                   idprt_batched, is_prime, next_prime)
+from .dprt import accum_dtype_for, is_prime, next_prime
 
 __all__ = [
     "circ_conv1d_exact",
@@ -72,18 +71,25 @@ def circ_conv1d_exact(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     return jnp.einsum("...t,...dt->...d", a.astype(acc), bc)
 
 
-def _transform_kw(method, strip_rows, m_block) -> dict:
-    return {"method": method, "strip_rows": strip_rows, "m_block": m_block}
+def _resolve_knobs(method, strip_rows, m_block) -> tuple:
+    """Full ambient-knob snapshot (see ``ambient.snapshot_knobs``),
+    taken OUTSIDE the jit boundaries below so the whole scope is part
+    of each trace-cache key."""
+    from repro.radon import ambient  # lazy: radon imports repro.core
+    return ambient.snapshot_knobs(method, strip_rows, m_block)
 
 
-def _circ_prime(f: jnp.ndarray, g: jnp.ndarray, method: str,
-                strip_rows: Optional[int],
-                m_block: Optional[int]) -> jnp.ndarray:
+def _operator(shape, dtype, knobs: tuple):
+    """The cached radon operator for one operand geometry."""
+    from repro.radon import operator_for  # lazy: radon imports repro.core
+    return operator_for(shape, dtype, knobs)
+
+
+def _circ_prime(f: jnp.ndarray, g: jnp.ndarray,
+                knobs: tuple) -> jnp.ndarray:
     """Transform-domain circular convolution of square prime operands."""
-    kw = _transform_kw(method, strip_rows, m_block)
-
     def fwd(x):
-        return (dprt_batched(x, **kw) if x.ndim == 3 else dprt(x, **kw))
+        return _operator(x.shape, x.dtype, knobs)(x)
 
     rf, rg = fwd(f), fwd(g)
     if rg.ndim > rf.ndim:
@@ -101,15 +107,24 @@ def _circ_prime(f: jnp.ndarray, g: jnp.ndarray, method: str,
         rc = jax.lax.map(lambda ab: circ_conv1d_exact(*ab), (rf, rg))
     else:
         rc = circ_conv1d_exact(rf, rg)      # all N+1 directions at once
-    if rc.ndim == 3:
-        return idprt_batched(rc, **kw)
-    return idprt(rc, **kw)
+    n = rc.shape[-1]
+    shape = (n, n) if rc.ndim == 2 else (rc.shape[0], n, n)
+    inv = _operator(shape, rc.dtype, knobs).inverse
+    return inv(rc)
 
 
-@functools.partial(jax.jit, static_argnames=("method", "strip_rows",
-                                             "m_block", "block_size"))
+@functools.partial(jax.jit, static_argnames=("knobs", "block_size"))
+def _circ_conv2d_jit(f: jnp.ndarray, g: jnp.ndarray, knobs: tuple,
+                     block_size: Optional[int]) -> jnp.ndarray:
+    fh, fw = f.shape[-2:]
+    if fh == fw and is_prime(fh) and block_size is None:
+        return _circ_prime(f, g, knobs)
+    lin = _linear_conv2d_jit(f, g, knobs, block_size)
+    return G.fold_mod(lin, fh, fw)
+
+
 def circ_conv2d_dprt(f: jnp.ndarray, g: jnp.ndarray,
-                     method: str = "horner",
+                     method: Optional[str] = None,
                      strip_rows: Optional[int] = None,
                      m_block: Optional[int] = None,
                      block_size: Optional[int] = None) -> jnp.ndarray:
@@ -122,6 +137,8 @@ def circ_conv2d_dprt(f: jnp.ndarray, g: jnp.ndarray,
     folding the exact prime-embedded linear convolution -- bit-exact
     for integers either way.  ``block_size`` streams the non-native
     path tile-by-tile (overlap-add; see :func:`linear_conv2d_dprt`).
+    All DPRT stages run through :mod:`repro.radon` operators; unset
+    knobs resolve against the ambient :func:`repro.radon.config` scope.
     """
     fh, fw = f.shape[-2:]
     gh, gw = g.shape[-2:]
@@ -129,11 +146,8 @@ def circ_conv2d_dprt(f: jnp.ndarray, g: jnp.ndarray,
         raise ValueError(
             f"circular convolution needs equal operand geometry, got "
             f"{f.shape} vs {g.shape}")
-    if fh == fw and is_prime(fh) and block_size is None:
-        return _circ_prime(f, g, method, strip_rows, m_block)
-    lin = linear_conv2d_dprt(f, g, method=method, strip_rows=strip_rows,
-                             m_block=m_block, block_size=block_size)
-    return G.fold_mod(lin, fh, fw)
+    knobs = _resolve_knobs(method, strip_rows, m_block)
+    return _circ_conv2d_jit(f, g, knobs, block_size)
 
 
 def circ_conv2d_direct(f: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
@@ -156,8 +170,7 @@ def circ_conv2d_fft(f: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
 
 
 def _linear_conv_blocked(f: jnp.ndarray, g: jnp.ndarray, block: int,
-                         method: str, strip_rows: Optional[int],
-                         m_block: Optional[int]) -> jnp.ndarray:
+                         knobs: tuple) -> jnp.ndarray:
     """Overlap-add linear convolution on prime-sized tiles.
 
     ``f``: (…, A_h, A_w) image(s); ``g``: one small (C_h, C_w) kernel.
@@ -173,18 +186,18 @@ def _linear_conv_blocked(f: jnp.ndarray, g: jnp.ndarray, block: int,
     ch, cw = g.shape[-2:]
     block = int(block)
     q = next_prime(block + max(ch, cw) - 1)
-    kw = _transform_kw(method, strip_rows, m_block)
 
     tiles, offsets = G.image_to_tiles(f, block)   # (…, T, block, block)
     tq = G.pad2d(tiles, q - block, q - block)
     gq = G.pad2d(g, q - ch, q - cw)
-    rg = dprt(gq, **kw)                           # (q+1, q), once
+    rg = _operator(gq.shape, gq.dtype, knobs)(gq)
 
     t = tq.shape[-3]
     stack = tq.reshape(-1, q, q)                  # (B*T or T, q, q)
-    rt = dprt_batched(stack, **kw)                # one fused call per stack
+    rt = _operator(stack.shape, stack.dtype, knobs)(stack)  # one fused call
     rc = circ_conv1d_exact(rt, rg)                # broadcast over the stack
-    outs = idprt_batched(rc, **kw)                # (B*T or T, q, q)
+    inv = _operator((rc.shape[0], q, q), rc.dtype, knobs).inverse
+    outs = inv(rc)                                # (B*T or T, q, q)
 
     oh, ow = block + ch - 1, block + cw - 1       # useful tile output
     tile_out = outs[..., :oh, :ow]
@@ -202,10 +215,23 @@ def _linear_conv_blocked(f: jnp.ndarray, g: jnp.ndarray, block: int,
     return lin[..., : ah + ch - 1, : aw + cw - 1]
 
 
-@functools.partial(jax.jit, static_argnames=("method", "strip_rows",
-                                             "m_block", "block_size"))
+@functools.partial(jax.jit, static_argnames=("knobs", "block_size"))
+def _linear_conv2d_jit(f: jnp.ndarray, g: jnp.ndarray, knobs: tuple,
+                       block_size: Optional[int]) -> jnp.ndarray:
+    ah, aw = f.shape[-2:]
+    ch, cw = g.shape[-2:]
+    out_h, out_w = ah + ch - 1, aw + cw - 1
+    if block_size is not None:
+        return _linear_conv_blocked(f, g, block_size, knobs)
+    p = next_prime(max(out_h, out_w))
+    fp = G.pad2d(f, p - ah, p - aw)
+    gp = G.pad2d(g, p - ch, p - cw)
+    res = _circ_prime(fp, gp, knobs)
+    return res[..., :out_h, :out_w]
+
+
 def linear_conv2d_dprt(f: jnp.ndarray, g: jnp.ndarray,
-                       method: str = "horner",
+                       method: Optional[str] = None,
                        strip_rows: Optional[int] = None,
                        m_block: Optional[int] = None,
                        block_size: Optional[int] = None) -> jnp.ndarray:
@@ -219,19 +245,11 @@ def linear_conv2d_dprt(f: jnp.ndarray, g: jnp.ndarray,
     kernel ``g`` at the tile prime instead of one giant image prime --
     the companion paper's resource-fitting scheme (bounded working set,
     batched tile stack through the plan dispatch).  ``f`` may be a
-    (B, H, W) stack in either route.
+    (B, H, W) stack in either route.  Unset knobs resolve against the
+    ambient :func:`repro.radon.config` scope.
     """
-    ah, aw = f.shape[-2:]
-    ch, cw = g.shape[-2:]
-    out_h, out_w = ah + ch - 1, aw + cw - 1
-    if block_size is not None:
-        return _linear_conv_blocked(f, g, block_size, method,
-                                    strip_rows, m_block)
-    p = next_prime(max(out_h, out_w))
-    fp = G.pad2d(f, p - ah, p - aw)
-    gp = G.pad2d(g, p - ch, p - cw)
-    res = _circ_prime(fp, gp, method, strip_rows, m_block)
-    return res[..., :out_h, :out_w]
+    knobs = _resolve_knobs(method, strip_rows, m_block)
+    return _linear_conv2d_jit(f, g, knobs, block_size)
 
 
 def linear_conv2d_direct(f: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:

@@ -27,9 +27,23 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .dprt import dprt, dprt_batched, is_prime
+from .dprt import is_prime
 
 __all__ = ["dft2_via_dprt", "dft2_via_dprt_batched", "dft2_reference"]
+
+
+def _resolve_knobs(method, strip_rows, m_block, batch_impl=None) -> tuple:
+    """Full ambient-knob snapshot (see ``ambient.snapshot_knobs``),
+    taken OUTSIDE the jit boundaries below so the whole scope is part
+    of each trace-cache key."""
+    from repro.radon import ambient  # lazy: radon imports repro.core
+    return ambient.snapshot_knobs(method, strip_rows, m_block, batch_impl)
+
+
+def _dprt_stage(f, knobs: tuple):
+    """The integer DPRT stage through the radon operator surface."""
+    from repro.radon import operator_for  # lazy: radon imports repro.core
+    return operator_for(f.shape, f.dtype, knobs)(f)
 
 
 def _slice_scatter(rhat: jnp.ndarray, n: int) -> jnp.ndarray:
@@ -52,34 +66,41 @@ def _proj_fft(r: jnp.ndarray) -> jnp.ndarray:
                                 else jnp.float32), axis=-1)
 
 
-@functools.partial(jax.jit, static_argnames=("method", "strip_rows",
-                                             "m_block"))
-def dft2_via_dprt(f: jnp.ndarray, method: str = "horner",
+@functools.partial(jax.jit, static_argnames=("knobs",))
+def _dft2_jit(f, knobs):
+    # f is (N, N) or a (B, N, N) stack; N is always the trailing axis
+    r = _dprt_stage(f, knobs)                  # (…, N+1, N) exact ints
+    return _slice_scatter(_proj_fft(r), f.shape[-1])
+
+
+def dft2_via_dprt(f: jnp.ndarray, method: Optional[str] = None,
                   strip_rows: Optional[int] = None,
                   m_block: Optional[int] = None) -> jnp.ndarray:
-    """(N, N) real/int image -> (N, N) complex 2-D DFT, via N+1 1-D FFTs."""
+    """(N, N) real/int image -> (N, N) complex 2-D DFT, via N+1 1-D FFTs.
+
+    The DPRT stage runs through the :mod:`repro.radon` operator surface;
+    unset knobs resolve against the ambient :func:`repro.radon.config`
+    scope (resolved before the trace cache, so scopes never replay
+    stale knobs).
+    """
     n = f.shape[0]
     if f.ndim != 2 or f.shape[1] != n or not is_prime(n):
         # the m -> <-m*v>_N bijection needs prime N; no embedding here
         # (padding would change the spectrum, unlike the DPRT round trip)
         raise ValueError(f"slice-theorem DFT needs a square prime-N image, "
                          f"got {f.shape}")
-    r = dprt(f, method=method, strip_rows=strip_rows,
-             m_block=m_block)                      # (N+1, N) exact ints
-    return _slice_scatter(_proj_fft(r), n)
+    return _dft2_jit(f, _resolve_knobs(method, strip_rows, m_block))
 
 
-@functools.partial(jax.jit, static_argnames=("method", "strip_rows",
-                                             "m_block", "batch_impl"))
-def dft2_via_dprt_batched(f: jnp.ndarray, method: str = "horner",
+def dft2_via_dprt_batched(f: jnp.ndarray, method: Optional[str] = None,
                           strip_rows: Optional[int] = None,
                           m_block: Optional[int] = None,
-                          batch_impl: str = "auto") -> jnp.ndarray:
+                          batch_impl: Optional[str] = None) -> jnp.ndarray:
     """(B, N, N) stack -> (B, N, N) complex 2-D DFTs.
 
-    The integer DPRT stage is batched through the plan dispatch (one
-    fused pallas_call for ``method="pallas"``); the float FFT + slice
-    scatter stages are vectorized across the batch.
+    The integer DPRT stage is batched through the radon operator
+    surface (one fused pallas_call for ``method="pallas"``); the float
+    FFT + slice scatter stages are vectorized across the batch.
     """
     if f.ndim != 3:
         raise ValueError(f"dft2_via_dprt_batched needs (B, N, N), "
@@ -87,9 +108,8 @@ def dft2_via_dprt_batched(f: jnp.ndarray, method: str = "horner",
     n = f.shape[-1]
     if not is_prime(n):
         raise ValueError(f"slice-theorem DFT needs prime N, got {n}")
-    r = dprt_batched(f, method=method, strip_rows=strip_rows,
-                     m_block=m_block, batch_impl=batch_impl)
-    return _slice_scatter(_proj_fft(r), n)
+    return _dft2_jit(f, _resolve_knobs(method, strip_rows, m_block,
+                                       batch_impl))
 
 
 def dft2_reference(f: jnp.ndarray) -> jnp.ndarray:

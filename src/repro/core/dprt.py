@@ -47,7 +47,6 @@ Definitions (N prime):
 """
 from __future__ import annotations
 
-import functools
 import math
 from typing import Literal, Optional
 
@@ -228,87 +227,98 @@ def skew_sum(g: jnp.ndarray, sign: int, method: Method = "horner",
 
 
 # ---------------------------------------------------------------------------
-# public transforms (thin wrappers over the cached plan layer)
+# public transforms: thin deprecation shims over repro.radon operators
+#
+# The per-call kwarg surface below predates the operator API; it now
+# resolves its knobs (explicit > ambient radon.config scope > legacy
+# default) and routes through the SAME cached, differentiable,
+# trace-counted appliers as `radon.DPRT(...)`.  New code should build
+# operators instead -- these wrappers warn once per process when the
+# legacy knob plumbing is used.
 # ---------------------------------------------------------------------------
-_PLAN_KNOBS = ("method", "strip_rows", "m_block", "batch_impl",
-               "block_rows", "block_batch", "mesh")
+_LEGACY_KNOB_WARNED = False
 
 
-def _resolve_ambient_mesh(method, mesh):
-    """Resolve an ambient `with mesh:` context BEFORE the jit cache.
-
-    The mesh is a static jit argument, so resolving it out here makes
-    the ambient context part of the trace-cache key -- a trace taken
-    outside a mesh is never replayed inside one (or vice versa).
-    """
-    if method == "auto" and mesh is None:
-        from .plan import _active_mesh
-        return _active_mesh()
-    return mesh
-
-
-@functools.partial(jax.jit, static_argnames=_PLAN_KNOBS)
-def _dprt_jit(f, method, strip_rows, m_block, batch_impl, block_rows,
-              block_batch, mesh):
-    from .plan import get_plan  # lazy: plan imports this module
-    plan = get_plan(f.shape, f.dtype, method, strip_rows=strip_rows,
-                    m_block=m_block, batch_impl=batch_impl,
-                    block_rows=block_rows, block_batch=block_batch,
-                    mesh=mesh)
-    return plan.forward(f)
-
-
-@functools.partial(jax.jit, static_argnames=_PLAN_KNOBS)
-def _idprt_jit(r, method, strip_rows, m_block, batch_impl, block_rows,
-               block_batch, mesh):
-    from .plan import get_plan  # lazy: plan imports this module
-    n = r.shape[-1]
-    shape = (n, n) if r.ndim == 2 else (r.shape[0], n, n)
-    plan = get_plan(shape, r.dtype, method, strip_rows=strip_rows,
-                    m_block=m_block, batch_impl=batch_impl,
-                    block_rows=block_rows, block_batch=block_batch,
-                    mesh=mesh)
-    return plan.inverse(r)
+def _warn_legacy_knobs() -> None:
+    global _LEGACY_KNOB_WARNED
+    if _LEGACY_KNOB_WARNED:
+        return
+    _LEGACY_KNOB_WARNED = True
+    import sys
+    import warnings
+    # point the warning at the caller's code, not at this module's
+    # internals: skip however many shim frames (dprt -> dprt_batched
+    # etc.) sit between here and the first out-of-module frame
+    stacklevel, frame = 1, sys._getframe()
+    while frame is not None and frame.f_code.co_filename == __file__:
+        frame = frame.f_back
+        stacklevel += 1
+    warnings.warn(
+        "passing method=/strip_rows=/m_block=/... per call to "
+        "repro.core.dprt functions is deprecated: build an operator once "
+        "with repro.radon.DPRT(shape, dtype, method=..., ...) or set an "
+        "ambient scope with repro.radon.config(...). The kwargs keep "
+        "working (this warns once per process).",
+        DeprecationWarning, stacklevel=stacklevel)
 
 
-def dprt(f: jnp.ndarray, method: Method = "horner",
+def _legacy_operator(shape, dtype, method, strip_rows, m_block, batch_impl,
+                     block_rows, block_batch, mesh):
+    """Resolve legacy per-call knobs into a cached radon operator."""
+    if any(k is not None for k in (method, strip_rows, m_block, block_rows,
+                                   block_batch, mesh)) or batch_impl not in (
+                                       None, "auto"):
+        _warn_legacy_knobs()
+    from repro.radon import DPRT, ambient  # lazy: radon imports this module
+    # legacy default was method="horner"; ambient scopes override it
+    return DPRT(shape, dtype,
+                method=ambient.resolve("method", method, "horner"),
+                strip_rows=strip_rows, m_block=m_block,
+                batch_impl=batch_impl, block_rows=block_rows,
+                block_batch=block_batch, mesh=mesh)
+
+
+def dprt(f: jnp.ndarray, method: Optional[Method] = None,
          strip_rows: Optional[int] = None,
          m_block: Optional[int] = None,
-         batch_impl: str = "auto",
+         batch_impl: Optional[str] = None,
          block_rows: Optional[int] = None,
          block_batch: Optional[int] = None,
          mesh=None) -> jnp.ndarray:
     """Forward DPRT: (H, W) image -> (P+1, P) projections. Exact for ints.
 
-    Any geometry is accepted: square prime-N images transform natively
-    (P = N); everything else is zero-embedded into the smallest prime
-    P >= max(H, W).  A ``(B, H, W)`` stack transforms batched (for
-    ``method="pallas"``: ONE fused pallas_call).  ``method="auto"``
-    selects the best registered backend; ``block_rows``/``block_batch``
-    stream the work in bounded-memory blocks (paper Sec. III-C); use
-    :func:`repro.core.plan.get_plan` directly when you need the
+    Deprecation shim over ``repro.radon.DPRT(f.shape, f.dtype, ...)``;
+    same numerics, same caches, and now differentiable (`jax.grad` /
+    `jax.jvp` hit the exact adjoint rules).  Any geometry is accepted:
+    square prime-N images transform natively (P = N); everything else is
+    zero-embedded into the smallest prime P >= max(H, W).  A
+    ``(B, H, W)`` stack transforms batched (for ``method="pallas"``: ONE
+    fused pallas_call).  Unset knobs resolve against the ambient
+    :func:`repro.radon.config` scope, then the legacy default
+    (``horner``); use the operator's ``.inverse`` when you need the
     crop-back inverse of a padded geometry.
     """
-    mesh = _resolve_ambient_mesh(method, mesh)
-    return _dprt_jit(f, method, strip_rows, m_block, batch_impl,
-                     block_rows, block_batch, mesh)
+    op = _legacy_operator(f.shape, f.dtype, method, strip_rows, m_block,
+                          batch_impl, block_rows, block_batch, mesh)
+    return op(f)
 
 
-def idprt(r: jnp.ndarray, method: Method = "horner",
+def idprt(r: jnp.ndarray, method: Optional[Method] = None,
           strip_rows: Optional[int] = None,
           m_block: Optional[int] = None,
-          batch_impl: str = "auto",
+          batch_impl: Optional[str] = None,
           block_rows: Optional[int] = None,
           block_batch: Optional[int] = None,
           mesh=None) -> jnp.ndarray:
     """Inverse DPRT: (N+1, N) projections -> (N, N) image.
 
+    Deprecation shim over ``repro.radon.DPRT((N, N), ...).inverse``.
     Exact integer reconstruction: the bracketed sum is always divisible
     by N (property-tested), so integer inputs round-trip bit-for-bit.
     Batched ``(B, N+1, N)`` stacks are accepted.  Projections always
     live in the prime domain; to recover the original (H, W) of an
-    embedded image, call ``plan.inverse`` on the plan that produced the
-    projections (it crops the recorded padding).
+    embedded image, call ``.inverse`` on the operator/plan that produced
+    the projections (it crops the recorded padding).
     """
     if r.ndim not in (2, 3) or r.shape[-2] != r.shape[-1] + 1:
         raise ValueError(
@@ -316,14 +326,15 @@ def idprt(r: jnp.ndarray, method: Method = "horner",
     n = r.shape[-1]
     if not is_prime(n):
         raise ValueError(f"iDPRT needs prime N, got N={n}")
-    mesh = _resolve_ambient_mesh(method, mesh)
-    return _idprt_jit(r, method, strip_rows, m_block, batch_impl,
-                      block_rows, block_batch, mesh)
+    shape = (n, n) if r.ndim == 2 else (r.shape[0], n, n)
+    op = _legacy_operator(shape, r.dtype, method, strip_rows, m_block,
+                          batch_impl, block_rows, block_batch, mesh)
+    return op.inverse(r)
 
 
-def dprt_batched(f: jnp.ndarray, method: Method = "horner",
+def dprt_batched(f: jnp.ndarray, method: Optional[Method] = None,
                  strip_rows: Optional[int] = None,
-                 batch_impl: str = "auto",
+                 batch_impl: Optional[str] = None,
                  m_block: Optional[int] = None,
                  block_batch: Optional[int] = None,
                  mesh=None) -> jnp.ndarray:
@@ -342,9 +353,9 @@ def dprt_batched(f: jnp.ndarray, method: Method = "horner",
                 batch_impl=batch_impl, block_batch=block_batch, mesh=mesh)
 
 
-def idprt_batched(r: jnp.ndarray, method: Method = "horner",
+def idprt_batched(r: jnp.ndarray, method: Optional[Method] = None,
                   strip_rows: Optional[int] = None,
-                  batch_impl: str = "auto",
+                  batch_impl: Optional[str] = None,
                   m_block: Optional[int] = None,
                   block_batch: Optional[int] = None,
                   mesh=None) -> jnp.ndarray:

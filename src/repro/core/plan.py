@@ -30,16 +30,27 @@ Two layers live here:
    and ``block_batch`` streams batched stacks through the fused Pallas
    kernel in bounded-size chunks via `lax.map`.
 
-Plans are cached by (shape, dtype, method, knobs, mesh) via
-``functools.lru_cache`` -- building one is pure Python shape math, so
-repeat traffic on the same geometry (the serving scenario) hits the
-cache; see :func:`plan_cache_info`.
+Plans are cached by (shape, dtype, method, knobs, mesh) in a *bounded*
+LRU cache -- building one is pure Python shape math, so repeat traffic
+on the same geometry (the serving scenario) hits the cache; see
+:func:`plan_cache_info` (which also reports evictions) and the
+``REPRO_PLAN_CACHE_MAXSIZE`` environment variable.
+
+:class:`RadonPlan` is registered as a JAX **pytree with zero leaves**
+(the whole plan is static aux data), so plans can be closed over,
+passed as `jit`/`vmap`/`shard_map` arguments, and nested in argument
+pytrees without ever retracing: two calls with the same plan produce
+the same treedef and hit the same executable.  The differentiable /
+AOT-compiled operator surface on top of plans lives in
+:mod:`repro.radon`.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
-import functools
 import math
+import os
+import threading
 from typing import Callable, Optional, Tuple
 
 import jax
@@ -61,6 +72,7 @@ __all__ = [
     "get_plan",
     "plan_cache_info",
     "plan_cache_clear",
+    "set_plan_cache_maxsize",
     "dispatch_skew_sum",
 ]
 
@@ -85,6 +97,7 @@ class Backend:
     inverse: Callable
     forward_batched: Optional[Callable] = None
     inverse_batched: Optional[Callable] = None
+    skew_batched: Optional[Callable] = None  # (B, N, N) stacks in one call
     batched_native: bool = False
     needs_strip_rows: bool = False
     takes_m_block: bool = False
@@ -218,6 +231,43 @@ def _make_inverse(skew: Callable) -> Callable:
 
 
 # ---------------------------------------------------------------------------
+# exact transposes (adjoints) of the two transforms
+#
+# The forward DPRT A : R^{NxN} -> R^{(N+1)xN} is linear, and so is the
+# inverse B = A^{-1}.  Working out <A f, r> = <f, A^T r> entrywise:
+#
+#   (A^T r)[i, j]  = sum_{m<N} r(m, <j - m*i>_N) + r(N, i)
+#                  = skew_sum(r[:N], -1)[i, j] + r(N, i)
+#   (B^T g)        = ( [skew_sum(g, +1) ; row-sums of g] - total(g)*E00 ) / N
+#                  = ( A g - total(g) * (e_0 1^T) ) / N
+#
+# i.e. both adjoints are built from the SAME registry skew-sum primitive
+# as the transforms themselves (with the sign flipped), so an "exact
+# adjoint through backend X" is exact for every registered backend,
+# including the fused Pallas kernels.  These epilogues are
+# rank-polymorphic: they accept (N+1, N) / (N, N) or batched stacks.
+# ---------------------------------------------------------------------------
+def _adjoint_epilogue(z: jnp.ndarray, r: jnp.ndarray, n: int) -> jnp.ndarray:
+    """z = skew_sum(r[..., :N, :], -1); add the row-sum row's transpose."""
+    return z + r[..., n, :].astype(z.dtype)[..., :, None]
+
+
+def _inverse_adjoint_epilogue(core: jnp.ndarray, g: jnp.ndarray,
+                              n: int) -> jnp.ndarray:
+    """core = skew_sum(g, +1); build (A g - total(g) E00) / N."""
+    acc = core.dtype
+    rowsum = g.astype(acc).sum(axis=-1)[..., None, :]      # (…, 1, N)
+    out = jnp.concatenate([core, rowsum], axis=-2)          # = A g
+    total = g.astype(acc).sum(axis=(-2, -1))
+    out = out.at[..., 0, :].add(-total[..., None])
+    if jnp.issubdtype(acc, jnp.integer):
+        # matches the inverse's floor-division convention; the true
+        # adjoint of the float inverse is the float path below
+        return out // n
+    return out / n
+
+
+# ---------------------------------------------------------------------------
 # built-in backends
 # ---------------------------------------------------------------------------
 def _gather_skew(g, sign, *, strip_rows=None, m_block=None, mesh=None):
@@ -239,6 +289,11 @@ def _strips_skew(g, sign, *, strip_rows=None, m_block=None, mesh=None):
 def _pallas_skew(g, sign, *, strip_rows=None, m_block=None, mesh=None):
     from repro.kernels.ops import skew_sum_pallas  # lazy: no import cycle
     return skew_sum_pallas(g, sign, strip_rows=strip_rows, m_block=m_block)
+
+
+# the pallas skew wrapper accepts (N, N) and (B, N, N) alike, so the
+# batched-native adjoint datapaths reuse the same adapter
+_pallas_skew_batched = _pallas_skew
 
 
 def _pallas_forward(f, *, strip_rows=None, m_block=None, mesh=None):
@@ -321,6 +376,7 @@ register_backend(Backend(
     inverse=_pallas_inverse,
     forward_batched=_pallas_forward,   # same wrappers take (B, N, N)
     inverse_batched=_pallas_inverse,
+    skew_batched=_pallas_skew_batched,
     batched_native=True,
     takes_m_block=True,
     dtype_kinds=("i", "u", "f"),
@@ -411,6 +467,11 @@ class RadonPlan:
     block_rows: Optional[int] = None
     block_batch: Optional[int] = None
     mesh: Optional[object] = None
+    # part of the plan's identity (eq/hash) so the per-plan caches
+    # downstream (jitted appliers, AOT executables, trace counters) are
+    # exactly as granular as the plan cache itself: evicting one
+    # dtype's plan can never drop a different dtype's live state
+    dtype_name: Optional[str] = None
 
     @property
     def backend(self) -> Backend:
@@ -442,6 +503,20 @@ class RadonPlan:
             z = _blocked_skew_sum(r[:n], -1, self.block_rows, acc)
             return _inverse_epilogue(z, r, n)
         return self.backend.inverse(r, **self._knobs())
+
+    def _skew_prime(self, x: jnp.ndarray, sign: int) -> jnp.ndarray:
+        if self.block_rows is not None:
+            return _blocked_skew_sum(x, sign, self.block_rows,
+                                     accum_dtype_for(x.dtype))
+        return self.backend.skew_sum(x, sign, **self._knobs())
+
+    def _adjoint_prime(self, r: jnp.ndarray) -> jnp.ndarray:
+        n = self.geometry.prime
+        return _adjoint_epilogue(self._skew_prime(r[:n], -1), r, n)
+
+    def _inverse_adjoint_prime(self, g: jnp.ndarray) -> jnp.ndarray:
+        return _inverse_adjoint_epilogue(self._skew_prime(g, +1), g,
+                                         self.geometry.prime)
 
     # -- batched stacks ----------------------------------------------------
     def _stack(self, xb: jnp.ndarray, native: Optional[Callable],
@@ -490,6 +565,61 @@ class RadonPlan:
         native = be.inverse_batched if be.batched_native else None
         return G.crop(self._stack(r, native, self._inverse_prime), g)
 
+    def adjoint(self, r: jnp.ndarray) -> jnp.ndarray:
+        """Exact transpose of :meth:`forward`: (…, P+1, P) -> (…, H, W).
+
+        ``adjoint`` is A^T for the *linear map* the plan's forward
+        realizes (embed -> transform), so its adjoint crops back:
+        crop == embed^T.  Distinct from :meth:`inverse` -- A^T A != I --
+        and the VJP rule :mod:`repro.radon.autodiff` installs on every
+        backend's forward.
+        """
+        g = self.geometry
+        if r.shape != g.transform_shape:
+            raise ValueError(
+                f"plan adjoint expects projections {g.transform_shape}, "
+                f"got {r.shape}")
+        if not g.batched:
+            return G.crop(self._adjoint_prime(r), g)
+        be = self.backend
+        native = None
+        if be.skew_batched is not None and self.block_rows is None:
+            n = g.prime
+
+            def native(rb, **knobs):
+                z = be.skew_batched(rb[:, :n], -1, **knobs)
+                return _adjoint_epilogue(z, rb, n)
+
+        return G.crop(self._stack(r, native, self._adjoint_prime), g)
+
+    def inverse_adjoint(self, f: jnp.ndarray) -> jnp.ndarray:
+        """Exact transpose of :meth:`inverse`: (…, H, W) -> (…, P+1, P).
+
+        (A^{-1})^T = (A^T)^{-1}; realized as (A g - total(g) E00) / N
+        from the same backend skew-sum, so the VJP through the inverse
+        stays on the selected backend too.  Integer inputs follow the
+        inverse's floor-division convention; use floats for the true
+        adjoint (AD always does).
+        """
+        g = self.geometry
+        if f.shape != g.image_shape:
+            raise ValueError(
+                f"plan inverse_adjoint expects image {g.image_shape}, "
+                f"got {f.shape}")
+        fp = G.embed(f, g)                  # embed == crop^T
+        if not g.batched:
+            return self._inverse_adjoint_prime(fp)
+        be = self.backend
+        native = None
+        if be.skew_batched is not None and self.block_rows is None:
+            n = g.prime
+
+            def native(fb, **knobs):
+                return _inverse_adjoint_epilogue(
+                    be.skew_batched(fb, +1, **knobs), fb, n)
+
+        return self._stack(fp, native, self._inverse_adjoint_prime)
+
     def describe(self) -> dict:
         g = self.geometry
         return {
@@ -497,6 +627,7 @@ class RadonPlan:
             "prime": g.prime,
             "pad": (g.pad_rows, g.pad_cols),
             "native": g.native,
+            "dtype": self.dtype_name,
             "method": self.method,
             "requested_method": self.requested_method,
             "strip_rows": self.strip_rows,
@@ -507,14 +638,136 @@ class RadonPlan:
         }
 
 
+# RadonPlan is a pytree with ZERO leaves: the whole plan is static aux
+# data.  Plans therefore cross jit/vmap/shard_map boundaries as
+# arguments or closures without contributing tracers, and the treedef
+# (== the plan, by hash/eq of the frozen dataclass) becomes part of the
+# trace-cache key -- same plan, same executable, no retrace.
+jax.tree_util.register_pytree_node(
+    RadonPlan,
+    lambda plan: ((), plan),
+    lambda plan, _: plan,
+)
+
+
 # ---------------------------------------------------------------------------
-# plan construction + cache
+# plan construction + cache (bounded LRU)
 # ---------------------------------------------------------------------------
-@functools.lru_cache(maxsize=512)
+PlanCacheInfo = collections.namedtuple(
+    "PlanCacheInfo", ["hits", "misses", "maxsize", "currsize", "evictions"])
+
+
+def _env_cache_maxsize() -> Optional[int]:
+    """``REPRO_PLAN_CACHE_MAXSIZE``: plans kept live (<= 0 => unbounded)."""
+    raw = os.environ.get("REPRO_PLAN_CACHE_MAXSIZE", "512")
+    try:
+        size = int(raw)
+    except ValueError:
+        raise ValueError(
+            f"REPRO_PLAN_CACHE_MAXSIZE must be an integer, got {raw!r}")
+    return None if size <= 0 else size
+
+
+class _PlanLRU:
+    """A small LRU with an eviction counter (``functools.lru_cache``
+    reports hits/misses but not evictions, which is the number a
+    long-running serve process actually alarms on).
+
+    Eviction hooks let the downstream per-plan caches (the jitted
+    differentiable appliers and AOT executables in :mod:`repro.radon`)
+    release their -- much heavier -- state in lockstep, so bounding THIS
+    cache actually bounds the process."""
+
+    def __init__(self, maxsize: Optional[int]):
+        self.maxsize = maxsize
+        self._data: "collections.OrderedDict" = collections.OrderedDict()
+        self._lock = threading.Lock()
+        self._evict_hooks: list = []
+        self.hits = self.misses = self.evictions = 0
+
+    def add_evict_hook(self, fn: Callable) -> None:
+        """``fn(plan)`` is called for every plan dropped from the cache
+        (eviction, resize, or clear)."""
+        self._evict_hooks.append(fn)
+
+    def _shrink_locked(self) -> list:
+        dropped = []
+        while self.maxsize is not None and len(self._data) > self.maxsize:
+            dropped.append(self._data.popitem(last=False)[1])
+            self.evictions += 1
+        return dropped
+
+    def _fire(self, dropped: list) -> None:
+        for plan in dropped:        # outside the lock: hooks may be slow
+            for fn in self._evict_hooks:
+                fn(plan)
+
+    def get_or_build(self, key, builder: Callable):
+        with self._lock:
+            if key in self._data:
+                self._data.move_to_end(key)
+                self.hits += 1
+                return self._data[key]
+        value = builder()          # build outside the lock (pure python)
+        with self._lock:
+            if key in self._data:  # racer built it first: keep theirs
+                self._data.move_to_end(key)
+                return self._data[key]
+            self.misses += 1
+            self._data[key] = value
+            dropped = self._shrink_locked()
+        self._fire(dropped)
+        return value
+
+    def info(self) -> PlanCacheInfo:
+        with self._lock:
+            return PlanCacheInfo(self.hits, self.misses, self.maxsize,
+                                 len(self._data), self.evictions)
+
+    def clear(self) -> None:
+        with self._lock:
+            dropped = list(self._data.values())
+            self._data.clear()
+        self._fire(dropped)
+
+    def resize(self, maxsize: Optional[int]) -> None:
+        with self._lock:
+            self.maxsize = maxsize
+            dropped = self._shrink_locked()
+        self._fire(dropped)
+
+
+_PLAN_CACHE = _PlanLRU(_env_cache_maxsize())
+
+
+def add_plan_evict_hook(fn: Callable) -> None:
+    """Register ``fn(plan)`` to run whenever a plan leaves the cache --
+    the mechanism the radon layer uses to drop jitted appliers and AOT
+    executables for geometries the bounded cache has let go."""
+    _PLAN_CACHE.add_evict_hook(fn)
+
+
+def set_plan_cache_maxsize(maxsize: Optional[int]) -> None:
+    """Re-bound the plan cache (None or <= 0 => unbounded); evicts LRU
+    entries immediately if the new bound is tighter."""
+    if maxsize is not None and maxsize <= 0:
+        maxsize = None
+    _PLAN_CACHE.resize(maxsize)
+
+
 def _cached_plan(shape: tuple, dtype_name: str, method: str,
                  strip_rows: Optional[int], m_block: Optional[int],
                  batch_impl: str, block_rows: Optional[int],
                  block_batch: Optional[int], mesh) -> RadonPlan:
+    key = (shape, dtype_name, method, strip_rows, m_block, batch_impl,
+           block_rows, block_batch, mesh)
+    return _PLAN_CACHE.get_or_build(key, lambda: _build_plan(*key))
+
+
+def _build_plan(shape: tuple, dtype_name: str, method: str,
+                strip_rows: Optional[int], m_block: Optional[int],
+                batch_impl: str, block_rows: Optional[int],
+                block_batch: Optional[int], mesh) -> RadonPlan:
     geom = G.normalize_geometry(shape)
     dtype = jnp.dtype(dtype_name)
     requested = method
@@ -536,7 +789,8 @@ def _cached_plan(shape: tuple, dtype_name: str, method: str,
     return RadonPlan(geometry=geom, method=method, requested_method=requested,
                      strip_rows=strip_rows, m_block=m_block,
                      batch_impl=batch_impl, block_rows=block_rows,
-                     block_batch=block_batch, mesh=mesh)
+                     block_batch=block_batch, mesh=mesh,
+                     dtype_name=dtype.name)
 
 
 def get_plan(shape, dtype, method: str = "auto", *,
@@ -565,12 +819,13 @@ def get_plan(shape, dtype, method: str = "auto", *,
                         mesh)
 
 
-def plan_cache_info():
-    return _cached_plan.cache_info()
+def plan_cache_info() -> PlanCacheInfo:
+    """(hits, misses, maxsize, currsize, evictions) of the plan cache."""
+    return _PLAN_CACHE.info()
 
 
 def plan_cache_clear() -> None:
-    _cached_plan.cache_clear()
+    _PLAN_CACHE.clear()
 
 
 def dispatch_skew_sum(g: jnp.ndarray, sign: int, method: str = "horner",

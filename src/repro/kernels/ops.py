@@ -38,7 +38,11 @@ def _auto_interpret(interpret: Optional[bool]) -> bool:
 def _resolve_blocks(n: int, strip_rows: Optional[int],
                     m_block: Optional[int], dtype) -> tuple[int, int]:
     # delegate to the shared resolver so the plan layer ("auto") and
-    # direct pallas calls agree on block shapes
+    # direct pallas calls agree on block shapes.  Deliberately does NOT
+    # consult the ambient radon.config scope: these wrappers may run
+    # inside a caller's jit trace, where a scope read would be baked
+    # into the cached executable and replayed after the scope exits.
+    # Ambient knobs apply at (eager) plan/operator construction instead.
     return resolve_blocks(n, jnp.dtype(accum_dtype_for(dtype)).itemsize,
                           strip_rows, m_block)
 
@@ -47,8 +51,13 @@ def skew_sum_pallas(g: jnp.ndarray, sign: int = 1,
                     strip_rows: Optional[int] = None,
                     m_block: Optional[int] = None,
                     interpret: Optional[bool] = None) -> jnp.ndarray:
-    """Bare (N, N) skew-sum; kept for the core-mode tests and callers."""
-    h, mb = _resolve_blocks(g.shape[0], strip_rows, m_block, g.dtype)
+    """Bare skew-sum: (N, N), or a (B, N, N) stack in ONE pallas_call.
+
+    The batched form serves the plan layer's batched-native adjoint
+    datapath (exact VJPs through ``method="pallas"``) as well as the
+    core-mode tests.
+    """
+    h, mb = _resolve_blocks(g.shape[-1], strip_rows, m_block, g.dtype)
     return skew_sum_pallas_raw(g, sign=sign, strip_rows=h, m_block=mb,
                                interpret=_auto_interpret(interpret))
 

@@ -287,17 +287,23 @@ def skew_sum_pallas_raw(g: jnp.ndarray, sign: int = 1, strip_rows: int = 16,
                         step_impl: str | None = None) -> jnp.ndarray:
     """Bare skew_sum via the strip kernel (core mode, no fused epilogue).
 
-    g: (N, N), N prime.  Returns (N, N) in the accumulator dtype with
-    out[m, d] = sum_i g(i, <d + sign*m*i>_N).  Wrapped-duplicate
-    direction rows in the final m-block are masked (never computed as
-    "useful" output) and sliced away.
+    g: (N, N) or a batched (B, N, N) stack, N prime.  Returns the same
+    rank in the accumulator dtype with
+    out[..., m, d] = sum_i g(..., i, <d + sign*m*i>_N); a stack runs in
+    ONE pallas_call via the kernel's leading batch grid dimension (this
+    is the datapath the exact-adjoint/VJP rules ride).  Wrapped-
+    duplicate direction rows in the final m-block are masked (never
+    computed as "useful" output) and sliced away.
     """
-    n = g.shape[0]
-    out = _pallas_skew_call(g.astype(accum_dtype_for(g.dtype))[None], sign=sign,
+    single = g.ndim == 2
+    gb = g[None] if single else g
+    n = gb.shape[-1]
+    out = _pallas_skew_call(gb.astype(accum_dtype_for(g.dtype)), sign=sign,
                             mode="core", strip_rows=strip_rows,
                             m_block=m_block, interpret=interpret,
                             step_impl=step_impl)
-    return out[0, :n, :n]
+    out = out[:, :n, :n]
+    return out[0] if single else out
 
 
 @functools.partial(jax.jit,

@@ -5,12 +5,16 @@
                   batches of images in, DPRT (or DPRT-domain
                   convolution) out, batch sharded across the mesh.
 
-The radon service resolves ``--method`` through the transform-plan
-registry (:mod:`repro.core.plan`) -- any registered backend plus
-``auto`` -- and accepts arbitrary ``--n`` (non-prime sizes are
-zero-embedded into the next prime and cropped back by the plan, so the
-round trip stays bit-exact).  ``--strip-rows`` / ``--m-block`` /
-``--batch-impl`` / ``--block-batch`` plumb straight into the plan.
+The radon service is built on the :mod:`repro.radon` operator API:
+``--method`` resolves through the backend registry (any registered
+backend plus ``auto``), arbitrary ``--n`` is accepted (non-prime sizes
+are zero-embedded into the next prime and cropped back by the operator,
+so the round trip stays bit-exact), and ``--warmup`` AOT-compiles the
+forward/inverse executables before the timing loop (``op.compile()``,
+cached per geometry), which together with the zero-leaf pytree plans
+gives the zero-retrace steady state -- asserted by a retrace guard
+around the timed section.  ``--strip-rows`` / ``--m-block`` /
+``--batch-impl`` / ``--block-batch`` plumb straight into the operator.
 """
 from __future__ import annotations
 
@@ -21,11 +25,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import radon
 from repro.configs import get_config, get_smoke_config
 from repro.configs.radon_251 import config as radon_config, \
     smoke_config as radon_smoke
 from repro.core.plan import available_backends, backend_capabilities, \
-    get_backend, get_plan
+    get_backend
 from repro.data.synthetic import TokenStream, radon_images
 from repro.launch.mesh import make_local_mesh
 from repro.models import Model
@@ -72,37 +77,49 @@ def serve_lm(args):
 
 def serve_radon(args):
     rcfg = radon_smoke() if args.smoke else radon_config()
-    n = args.n or rcfg.n                       # any size; plan embeds
+    n = args.n or rcfg.n                       # any size; operator embeds
     imgs = jnp.asarray(radon_images(n, args.batch or rcfg.batch,
                                     kind="phantom"))
-    plan = get_plan(imgs.shape, imgs.dtype, args.method,
+    op = radon.DPRT(imgs.shape, imgs.dtype, args.method,
                     strip_rows=args.strip_rows, m_block=args.m_block,
                     batch_impl=args.batch_impl,
                     block_batch=args.block_batch)
-    fwd = jax.jit(plan.forward)
-    inv = jax.jit(plan.inverse)
-    fwd(imgs).block_until_ready()              # warmup/compile
-    t0 = time.perf_counter()
-    r = fwd(imgs)
-    r.block_until_ready()
-    t1 = time.perf_counter()
-    back = inv(r)
-    back.block_until_ready()
-    t2 = time.perf_counter()
-    exact = bool((back == imgs).all())         # plan crops the embedding
+    inv = op.inverse
+    if args.warmup:
+        # AOT: build + compile both executables before any traffic; the
+        # compiled calls bypass tracing entirely (cached per geometry)
+        tw = time.perf_counter()
+        fwd_call, inv_call = op.compile(), inv.compile()
+        print(f"[serve-radon] warmup: AOT-compiled forward+inverse for "
+              f"{op.shape_in} in {1e3*(time.perf_counter()-tw):.0f}ms")
+    else:
+        fwd_call, inv_call = op, inv
+        # warm BOTH datapaths so the timed section measures steady
+        # state, not the inverse's first trace+compile
+        inv_call(fwd_call(imgs)).block_until_ready()
+    # steady state must not retrace: one geometry, one executable
+    with radon.retrace_guard(max_traces=0):
+        t0 = time.perf_counter()
+        r = fwd_call(imgs)
+        r.block_until_ready()
+        t1 = time.perf_counter()
+        back = inv_call(r)
+        back.block_until_ready()
+        t2 = time.perf_counter()
+    exact = bool((back == imgs).all())         # operator crops the embedding
     b = imgs.shape[0]
-    print(f"[serve-radon] N={n} (prime P={plan.geometry.prime}) batch={b} "
-          f"method={args.method}->{plan.method}: "
+    print(f"[serve-radon] N={n} (prime P={op.plan.geometry.prime}) batch={b} "
+          f"method={args.method}->{op.plan.method}: "
           f"forward {1e3*(t1-t0):.1f}ms "
           f"({b/(t1-t0):.1f} img/s), inverse {1e3*(t2-t1):.1f}ms, "
-          f"round-trip exact={exact}")
+          f"round-trip exact={exact}, traces={op.trace_count}")
     assert exact, "DPRT round trip must be bit-exact"
     return r
 
 
 def list_backends():
-    cols = ("name", "batched_native", "needs_strip_rows", "takes_m_block",
-            "mesh_aware", "dtypes", "note")
+    cols = ("name", "priority", "batched_native", "needs_strip_rows",
+            "takes_m_block", "mesh_aware", "dtypes", "note")
     for row in backend_capabilities():
         print("  ".join(f"{c}={row[c]}" for c in cols))
 
@@ -134,6 +151,10 @@ def main(argv=None):
     ap.add_argument("--block-batch", type=int, default=None,
                     help="stream the batch through the backend in chunks "
                          "of this many images (bounded memory)")
+    ap.add_argument("--warmup", action="store_true",
+                    help="AOT-compile (op.lower().compile(), cached per "
+                         "geometry) the forward+inverse executables before "
+                         "the timing loop")
     ap.add_argument("--list-backends", action="store_true",
                     help="print the backend capability table and exit")
     ap.add_argument("--prompt-len", type=int, default=32)

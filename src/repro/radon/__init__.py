@@ -1,0 +1,63 @@
+"""``repro.radon`` -- the stable public operator API for the DPRT.
+
+The paper's architecture is a geometry-fixed datapath: one adder-tree /
+shift-register fabric serves every image of a given N.  This package is
+the software analogue as a *public surface*: explicit operator objects
+over cached, pytree-registered plans, with exact autodiff and
+AOT-compiled serving.
+
+Quickstart
+----------
+    from repro import radon
+
+    op = radon.DPRT((512, 512), jnp.int32)       # any geometry; auto backend
+    r = op(img)                                  # (…, P+1, P) projections
+    f = op.inverse(r)                            # bit-exact reconstruction
+    g = jax.grad(lambda x: loss(op(x)))(imgf)    # exact adjoint VJP
+    exe = op.compile()                           # AOT executable, cached
+
+    with radon.config(method="pallas", m_block=16):
+        ...                                      # ambient knob defaults
+
+Surface
+-------
+* :func:`DPRT` / :class:`RadonOperator` / :class:`CompositeOperator` --
+  operator objects: ``op(f)``, ``op.inverse``, ``op.T`` (exact adjoint,
+  distinct from the inverse), ``@`` composition, ``lower()``/
+  ``compile()`` AOT.
+* :class:`config` -- ambient knob scopes (method/strip_rows/m_block/…).
+* :func:`retrace_guard` / :func:`trace_count` -- the zero-retrace
+  serving property as an assertion.
+* plan layer re-exports (``get_plan``, ``plan_cache_info`` with its
+  eviction counter, registry introspection) for advanced callers.
+* ``python -m repro.radon.selfcheck`` -- API/perf health smoke.
+
+The PR-2-era per-call kwarg surface on :mod:`repro.core.dprt` remains
+as thin deprecation shims over this package.
+"""
+from repro.core.plan import (Backend, RadonPlan, available_backends,
+                             backend_capabilities, get_backend, get_plan,
+                             plan_cache_clear, plan_cache_info,
+                             register_backend, select_backend,
+                             set_plan_cache_maxsize)
+
+from .ambient import CONFIG_KEYS, config, current_config
+from .autodiff import (RetraceError, reset_trace_counts, retrace_guard,
+                       trace_count, trace_counts)
+from .operators import (DPRT, CompositeOperator, RadonOperator,
+                        aot_cache_clear, aot_cache_info, operator_for)
+
+__all__ = [
+    # operators
+    "DPRT", "RadonOperator", "CompositeOperator", "operator_for",
+    "aot_cache_info", "aot_cache_clear",
+    # ambient config
+    "config", "current_config", "CONFIG_KEYS",
+    # trace accounting
+    "retrace_guard", "trace_count", "trace_counts", "reset_trace_counts",
+    "RetraceError",
+    # plan layer
+    "Backend", "RadonPlan", "available_backends", "backend_capabilities",
+    "get_backend", "get_plan", "plan_cache_clear", "plan_cache_info",
+    "register_backend", "select_backend", "set_plan_cache_maxsize",
+]

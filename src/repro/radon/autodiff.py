@@ -1,0 +1,211 @@
+"""Exact autodiff + trace accounting for the four plan datapaths.
+
+The DPRT and its inverse are *linear* maps, so their derivatives are
+known in closed form: the JVP of a linear operator is the operator
+itself, and the VJP is its transpose.  This module installs those rules
+once, at the plan layer, so ``jax.grad``/``jax.jvp`` through ANY
+registered backend -- including the fused Pallas kernels, whose raw
+``pallas_call`` JAX cannot transpose -- is exact:
+
+* each of the four datapaths (``forward`` / ``inverse`` / ``adjoint`` /
+  ``inverse_adjoint`` on :class:`repro.core.plan.RadonPlan`) is wrapped
+  in a :func:`jax.custom_jvp` whose tangent is emitted through
+  :func:`jax.custom_derivatives.linear_call`;
+* ``linear_call`` carries the *explicit transpose* -- the mathematically
+  paired datapath, built from the same backend registry skew-sum as the
+  primal (see the adjoint algebra in :mod:`repro.core.plan`) -- so
+  reverse-mode transposition routes through the registry instead of
+  trying to differentiate kernel internals;
+* forward-mode needs no transposition at all: the tangent IS the
+  operator applied to the input tangent, by linearity.
+
+The primal path is untouched (no ``linear_call`` in an undifferentiated
+jaxpr), so serving traffic pays zero overhead for differentiability.
+
+Trace accounting
+----------------
+Every jitted datapath bumps a per-``(plan, kind, aval)`` counter *at
+trace time* (the wrapped body only executes while JAX is tracing).
+:func:`trace_count` exposes the counters and :func:`retrace_guard` turns
+"this geometry must compile exactly once" from a hope into an assertion
+-- the serving regression the pytree-registered plans exist to prevent.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.custom_derivatives import linear_call
+
+from repro.core.plan import add_plan_evict_hook
+
+# One lock for every per-plan cache in the radon layer (_JITTED,
+# _TRACE_COUNTS here; _AOT_CACHE in operators.py): plan-cache eviction
+# hooks fire outside the plan cache's own lock and may race concurrent
+# serving threads inserting into these dicts.  RLock because a guard
+# violation raises while the lock is held by the same thread's bump.
+_CACHE_LOCK = threading.RLock()
+
+__all__ = [
+    "KINDS",
+    "TRANSPOSE_OF",
+    "INVERSE_OF",
+    "apply_plan",
+    "jitted_apply",
+    "trace_count",
+    "trace_counts",
+    "reset_trace_counts",
+    "retrace_guard",
+    "RetraceError",
+]
+
+#: the four linear datapaths a plan exposes, and their algebra
+KINDS = ("forward", "inverse", "adjoint", "inverse_adjoint")
+TRANSPOSE_OF = {"forward": "adjoint", "adjoint": "forward",
+                "inverse": "inverse_adjoint", "inverse_adjoint": "inverse"}
+# (A^T)^-1 == (A^-1)^T, so inversion swaps within the transposed pair
+INVERSE_OF = {"forward": "inverse", "inverse": "forward",
+              "adjoint": "inverse_adjoint", "inverse_adjoint": "adjoint"}
+
+
+def _primal(plan, kind: str, x: jnp.ndarray) -> jnp.ndarray:
+    return getattr(plan, kind)(x)
+
+
+# ---------------------------------------------------------------------------
+# trace accounting
+# ---------------------------------------------------------------------------
+class RetraceError(RuntimeError):
+    """A geometry exceeded its allowed trace count inside a guard."""
+
+
+_TRACE_COUNTS: dict = {}
+_GUARDS: list = []
+
+
+def _note_trace(plan, kind: str, x) -> None:
+    key = (plan, kind, tuple(x.shape), jnp.dtype(x.dtype).name)
+    with _CACHE_LOCK:
+        _TRACE_COUNTS[key] = _TRACE_COUNTS.get(key, 0) + 1
+        for limit, baseline in _GUARDS:
+            fresh = _TRACE_COUNTS[key] - baseline.get(key, 0)
+            if fresh > limit:
+                raise RetraceError(
+                    f"{kind} DPRT for shape {tuple(x.shape)} "
+                    f"{jnp.dtype(x.dtype).name} traced {fresh} times inside "
+                    f"a retrace_guard(max_traces={limit}) -- a cached plan/"
+                    f"operator should compile once per geometry")
+
+
+def trace_counts() -> dict:
+    """All counters: {(plan, kind, shape, dtype_name): traces}.
+
+    Counters live exactly as long as their plan stays in the bounded
+    plan cache; eviction drops them with the jitted appliers.
+    """
+    with _CACHE_LOCK:
+        return dict(_TRACE_COUNTS)
+
+
+def trace_count(plan=None, kind: Optional[str] = None) -> int:
+    """Total traces, optionally filtered by plan and/or datapath kind."""
+    total = 0
+    for (p, k, _shape, _dt), n in trace_counts().items():
+        if plan is not None and p != plan:
+            continue
+        if kind is not None and k != kind:
+            continue
+        total += n
+    return total
+
+
+def reset_trace_counts() -> None:
+    with _CACHE_LOCK:
+        _TRACE_COUNTS.clear()
+
+
+@contextlib.contextmanager
+def retrace_guard(max_traces: int = 1):
+    """Raise :class:`RetraceError` if any (plan, kind, geometry) traces
+    more than ``max_traces`` times inside the scope.
+
+    Wrap a serving loop's steady state in ``retrace_guard()`` to assert
+    the zero-retrace property instead of discovering compile storms in
+    a latency dashboard.
+    """
+    with _CACHE_LOCK:
+        frame = (int(max_traces), dict(_TRACE_COUNTS))
+        _GUARDS.append(frame)
+    try:
+        yield
+    finally:
+        with _CACHE_LOCK:
+            _GUARDS.remove(frame)
+
+
+# ---------------------------------------------------------------------------
+# the differentiable, jitted datapaths
+# ---------------------------------------------------------------------------
+_JITTED: dict = {}
+
+
+def _drop_plan(plan) -> None:
+    """Plan-cache eviction hook: release the jitted appliers (and their
+    compiled executables) AND the trace counters of a plan the bounded
+    cache let go, so the plan cache's bound actually bounds process
+    memory (an evicted-then-rebuilt geometry restarts at one trace)."""
+    with _CACHE_LOCK:
+        for key in [k for k in _JITTED if k[0] == plan]:
+            del _JITTED[key]
+        for key in [k for k in _TRACE_COUNTS if k[0] == plan]:
+            del _TRACE_COUNTS[key]
+
+
+add_plan_evict_hook(_drop_plan)
+
+
+def jitted_apply(plan, kind: str):
+    """The jitted, differentiable callable for one (plan, datapath).
+
+    Cached per (plan, kind), so every consumer -- operator objects, the
+    legacy ``dprt``/``idprt`` wrappers, serve -- shares one trace cache
+    per geometry.  Entries are dropped in lockstep with the bounded
+    plan cache (see :func:`repro.core.plan.add_plan_evict_hook`), so
+    this cache cannot outgrow the plan cache's bound times four.
+    """
+    with _CACHE_LOCK:
+        cached = _JITTED.get((plan, kind))
+    if cached is not None:
+        return cached
+    if kind not in KINDS:
+        raise ValueError(f"unknown datapath kind {kind!r}; one of {KINDS}")
+    tkind = TRANSPOSE_OF[kind]
+
+    @jax.custom_jvp
+    def apply(x):
+        _note_trace(plan, kind, x)
+        return _primal(plan, kind, x)
+
+    @apply.defjvp
+    def _apply_jvp(primals, tangents):
+        (x,), (t,) = primals, tangents
+        # linear operator: tangent_out = A @ tangent, staged through
+        # linear_call so reverse-mode transposes to the explicit
+        # registry-built adjoint instead of differentiating kernels
+        tan = linear_call(lambda _res, v: _primal(plan, kind, v),
+                          lambda _res, ct: _primal(plan, tkind, ct),
+                          (), t)
+        return apply(x), tan
+
+    with _CACHE_LOCK:
+        # a racing builder may have won; keep the first so both callers
+        # share one trace cache
+        return _JITTED.setdefault((plan, kind), jax.jit(apply))
+
+
+def apply_plan(plan, kind: str, x: jnp.ndarray) -> jnp.ndarray:
+    """Run one datapath of ``plan`` on ``x``: jitted + differentiable."""
+    return jitted_apply(plan, kind)(x)

@@ -1,0 +1,352 @@
+"""First-class linear-operator objects over cached transform plans.
+
+``op = radon.DPRT(shape, dtype)`` builds (or fetches -- plans and trace
+caches are shared) the forward DPRT operator for one input geometry.
+Operators are immutable views of a ``(plan, datapath)`` pair and expose
+the full linear-operator algebra:
+
+    op(f)            # apply: (…, H, W) -> (…, P+1, P), differentiable
+    op.inverse       # the exact inverse transform (crops the embedding)
+    op.T             # the exact adjoint -- A^T, NOT the inverse
+    op.inverse.T     # adjoint of the inverse == (A^T)^-1
+    op2 @ op1        # composition (applied right-to-left)
+    op.lower()       # AOT: trace+lower for the declared input aval
+    op.compile()     # AOT: cached per-geometry compiled executable
+    op.as_matrix()   # dense (out_size, in_size) matrix (small N; tests)
+
+Every application routes through :mod:`repro.radon.autodiff`, so
+``jax.grad``/``jax.jvp`` are exact for every registered backend and
+each geometry traces exactly once no matter how many operators,
+legacy-wrapper calls, or serve workers touch it.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dprt import accum_dtype_for
+from repro.core.plan import RadonPlan, add_plan_evict_hook, get_plan
+
+from . import ambient
+from .autodiff import (_CACHE_LOCK, INVERSE_OF, TRANSPOSE_OF, jitted_apply,
+                       trace_count)
+
+__all__ = ["DPRT", "RadonOperator", "CompositeOperator", "operator_for",
+           "aot_cache_info", "aot_cache_clear"]
+
+#: (plan, kind, dtype) -- or a tuple of (plan, kind) pairs for
+#: composites -- -> jax compiled executable; the per-geometry AOT cache
+#: behind ``op.compile()`` (and ``serve --warmup``).  Entries drop in
+#: lockstep with plan-cache evictions, like the jitted appliers.
+_AOT_CACHE: dict = {}
+
+
+def _drop_plan_executables(plan) -> None:
+    def involves(key) -> bool:
+        if isinstance(key[0], tuple):   # composite: ((plan, kind, dt), …)
+            return any(p == plan for p, _kind, _dt in key)
+        return key[0] == plan
+    with _CACHE_LOCK:
+        for key in [k for k in _AOT_CACHE if involves(k)]:
+            del _AOT_CACHE[key]
+
+
+add_plan_evict_hook(_drop_plan_executables)
+
+
+def aot_cache_info() -> dict:
+    with _CACHE_LOCK:
+        return {"currsize": len(_AOT_CACHE),
+                "keys": sorted(str(k[1]) for k in _AOT_CACHE)}
+
+
+def aot_cache_clear() -> None:
+    with _CACHE_LOCK:
+        _AOT_CACHE.clear()
+
+
+class RadonOperator:
+    """One linear datapath of a :class:`~repro.core.plan.RadonPlan`.
+
+    ``kind`` is one of ``forward`` / ``inverse`` / ``adjoint`` /
+    ``inverse_adjoint``; ``dtype`` is the *image* dtype the operator was
+    declared for (transform-domain inputs/outputs use its accumulator
+    dtype, exactly as the transforms themselves do).
+    """
+
+    __slots__ = ("plan", "kind", "dtype")
+
+    def __init__(self, plan: RadonPlan, kind: str, dtype):
+        if kind not in TRANSPOSE_OF:
+            raise ValueError(f"unknown operator kind {kind!r}")
+        object.__setattr__(self, "plan", plan)
+        object.__setattr__(self, "kind", kind)
+        object.__setattr__(self, "dtype", jnp.dtype(dtype))
+
+    def __setattr__(self, name, value):
+        raise AttributeError("RadonOperator is immutable")
+
+    # -- shapes / dtypes ---------------------------------------------------
+    @property
+    def _image_side(self) -> bool:
+        """True when the INPUT lives in image space (H, W)."""
+        return self.kind in ("forward", "inverse_adjoint")
+
+    @property
+    def shape_in(self) -> Tuple[int, ...]:
+        g = self.plan.geometry
+        return g.image_shape if self._image_side else g.transform_shape
+
+    @property
+    def shape_out(self) -> Tuple[int, ...]:
+        g = self.plan.geometry
+        return g.transform_shape if self._image_side else g.image_shape
+
+    @property
+    def dtype_in(self):
+        # forward consumes raw images; every other datapath consumes
+        # transform-domain / cotangent values, which live in the
+        # accumulator dtype the transforms emit
+        if self.kind == "forward":
+            return self.dtype
+        return jnp.dtype(accum_dtype_for(self.dtype))
+
+    @property
+    def dtype_out(self):
+        return jnp.dtype(accum_dtype_for(self.dtype))
+
+    # -- application -------------------------------------------------------
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        return jitted_apply(self.plan, self.kind)(x)
+
+    # -- algebra -----------------------------------------------------------
+    @property
+    def T(self) -> "RadonOperator":
+        """The exact adjoint (transpose).  ``op.T`` satisfies
+        ``<op(x), y> == <x, op.T(y)>`` -- it is NOT the inverse."""
+        return RadonOperator(self.plan, TRANSPOSE_OF[self.kind], self.dtype)
+
+    @property
+    def inverse(self) -> "RadonOperator":
+        """The exact inverse transform (bit-exact round trip on ints)."""
+        return RadonOperator(self.plan, INVERSE_OF[self.kind], self.dtype)
+
+    def __matmul__(self, other):
+        if isinstance(other, CompositeOperator):
+            return CompositeOperator((self,) + other.ops)
+        if isinstance(other, RadonOperator):
+            return CompositeOperator((self, other))
+        return NotImplemented
+
+    # -- AOT ---------------------------------------------------------------
+    def _input_aval(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape_in, self.dtype_in)
+
+    def lower(self):
+        """Trace + lower this operator for its declared input aval
+        (``jax.jit(...).lower``); ``.compile()`` the result for an AOT
+        executable, or use :meth:`compile` for the cached one."""
+        return jitted_apply(self.plan, self.kind).lower(self._input_aval())
+
+    def compile(self):
+        """The AOT-compiled executable for this geometry, built at most
+        once per (plan, datapath, dtype) process-wide.  The returned
+        executable is callable and never retraces -- the serve path's
+        steady state."""
+        key = (self.plan, self.kind, self.dtype_in.name)
+        with _CACHE_LOCK:
+            exe = _AOT_CACHE.get(key)
+        if exe is None:
+            built = self.lower().compile()
+            with _CACHE_LOCK:
+                exe = _AOT_CACHE.setdefault(key, built)
+        return exe
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def trace_count(self) -> int:
+        """Traces taken for this (plan, datapath) so far (all geometries
+        of the plan's shape; exactly 1 after any number of same-shape
+        calls)."""
+        return trace_count(self.plan, self.kind)
+
+    def as_matrix(self) -> jnp.ndarray:
+        """Dense (out_size, in_size) matrix of this linear map.
+
+        Materializes one basis vector per input element -- O(P^4) memory
+        -- so this is for small primes (tests, reference checks) only.
+        """
+        size_in = 1
+        for s in self.shape_in:
+            size_in *= s
+        basis = jnp.eye(size_in, dtype=self.dtype_in)
+        cols = jax.vmap(lambda e: self(e.reshape(self.shape_in)).ravel())(
+            basis)
+        return cols.T  # vmap rows are images of basis vectors == columns
+
+    def describe(self) -> dict:
+        d = dict(self.plan.describe())
+        d.update(kind=self.kind, dtype=self.dtype.name,
+                 shape_in=self.shape_in, shape_out=self.shape_out)
+        return d
+
+    def __repr__(self) -> str:
+        return (f"RadonOperator({self.kind}, {self.shape_in}->"
+                f"{self.shape_out}, {self.dtype.name}, "
+                f"method={self.plan.method!r})")
+
+    # operators are value objects: equal views of equal plans compare ==
+    def __eq__(self, other):
+        return (isinstance(other, RadonOperator)
+                and self.plan == other.plan and self.kind == other.kind
+                and self.dtype == other.dtype)
+
+    def __hash__(self):
+        return hash((self.plan, self.kind, self.dtype))
+
+
+class CompositeOperator:
+    """Right-to-left composition of operators: ``(g @ f)(x) == g(f(x))``.
+
+    Supports the same algebra (``.T`` reverses and transposes,
+    ``.inverse`` reverses and inverts) plus AOT lowering of the fused
+    pipeline.  Shape chaining is validated at construction.
+    """
+
+    __slots__ = ("ops",)
+
+    def __init__(self, ops: Tuple):
+        if not ops:
+            raise ValueError("CompositeOperator needs at least one operator")
+        for outer, inner in zip(ops[:-1], ops[1:]):
+            if outer.shape_in != inner.shape_out:
+                raise ValueError(
+                    f"cannot compose {outer!r} after {inner!r}: "
+                    f"{inner.shape_out} does not feed {outer.shape_in}")
+        object.__setattr__(self, "ops", tuple(ops))
+
+    def __setattr__(self, name, value):
+        raise AttributeError("CompositeOperator is immutable")
+
+    @property
+    def shape_in(self):
+        return self.ops[-1].shape_in
+
+    @property
+    def shape_out(self):
+        return self.ops[0].shape_out
+
+    @property
+    def dtype_in(self):
+        return self.ops[-1].dtype_in
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        for op in reversed(self.ops):
+            x = op(x)
+        return x
+
+    @property
+    def T(self) -> "CompositeOperator":
+        return CompositeOperator(tuple(op.T for op in reversed(self.ops)))
+
+    @property
+    def inverse(self) -> "CompositeOperator":
+        return CompositeOperator(
+            tuple(op.inverse for op in reversed(self.ops)))
+
+    def __matmul__(self, other):
+        if isinstance(other, CompositeOperator):
+            return CompositeOperator(self.ops + other.ops)
+        if isinstance(other, RadonOperator):
+            return CompositeOperator(self.ops + (other,))
+        return NotImplemented
+
+    def lower(self):
+        spec = jax.ShapeDtypeStruct(self.shape_in, self.dtype_in)
+        return jax.jit(self.__call__).lower(spec)
+
+    def compile(self):
+        # dtype is part of the key: plans are dtype-agnostic (equal
+        # across dtypes of one geometry) but compiled executables are not
+        key = tuple((op.plan, op.kind, op.dtype_in.name)
+                    for op in self.ops)
+        with _CACHE_LOCK:
+            exe = _AOT_CACHE.get(key)
+        if exe is None:
+            built = self.lower().compile()
+            with _CACHE_LOCK:
+                exe = _AOT_CACHE.setdefault(key, built)
+        return exe
+
+    def as_matrix(self) -> jnp.ndarray:
+        mats = [op.as_matrix() for op in self.ops]
+        out = mats[-1]
+        for m in reversed(mats[:-1]):
+            out = m @ out
+        return out
+
+    def __repr__(self) -> str:
+        return " @ ".join(repr(op) for op in self.ops)
+
+    def __eq__(self, other):
+        return (isinstance(other, CompositeOperator)
+                and self.ops == other.ops)
+
+    def __hash__(self):
+        return hash(self.ops)
+
+
+# operators cross jit boundaries as zero-leaf pytrees, like their plans
+jax.tree_util.register_pytree_node(
+    RadonOperator,
+    lambda op: ((), op),
+    lambda op, _: op,
+)
+jax.tree_util.register_pytree_node(
+    CompositeOperator,
+    lambda op: ((), op),
+    lambda op, _: op,
+)
+
+
+def DPRT(shape, dtype=jnp.int32, method: Optional[str] = None, *,
+         strip_rows: Optional[int] = None,
+         m_block: Optional[int] = None,
+         batch_impl: Optional[str] = None,
+         block_rows: Optional[int] = None,
+         block_batch: Optional[int] = None,
+         mesh=None) -> RadonOperator:
+    """The forward DPRT operator for one input geometry.
+
+    ``shape`` is ``(H, W)`` or ``(B, H, W)`` -- any size; non-prime
+    geometries are zero-embedded into the next prime and ``op.inverse``
+    crops back (bit-exact round trip for integer images).  Knobs left
+    unset resolve against the ambient :func:`repro.radon.config` scope,
+    then fall back to ``method="auto"`` (the registry's best backend for
+    the shape/dtype/mesh).
+
+    The returned operator is a cheap immutable view: plans, traces and
+    AOT executables are cached per geometry process-wide, so building
+    the "same" operator twice costs a dict lookup and shares all
+    compilation state.
+    """
+    plan = get_plan(
+        tuple(int(s) for s in shape), dtype,
+        ambient.resolve("method", method, "auto"),
+        strip_rows=ambient.resolve("strip_rows", strip_rows),
+        m_block=ambient.resolve("m_block", m_block),
+        batch_impl=ambient.resolve("batch_impl", batch_impl, "auto"),
+        block_rows=ambient.resolve("block_rows", block_rows),
+        block_batch=ambient.resolve("block_batch", block_batch),
+        mesh=ambient.resolve("mesh", mesh))
+    return RadonOperator(plan, "forward", dtype)
+
+
+def operator_for(shape, dtype, knobs: tuple) -> RadonOperator:
+    """The cached forward operator for one geometry from an
+    :func:`repro.radon.ambient.snapshot_knobs` tuple -- the shared
+    builder for call sites (``core/conv``, ``core/dft``) that carry the
+    full knob snapshot through their own jit static arguments."""
+    return DPRT(shape, dtype, **ambient.knobs_kwargs(knobs))

@@ -1,0 +1,112 @@
+"""API/perf health smoke: ``python -m repro.radon.selfcheck``.
+
+One plan per registered (non-mesh) backend is round-tripped bit-exactly,
+its gradient is checked against the explicit adjoint, a retrace guard
+verifies the one-trace-per-geometry property, and one operator is
+AOT-compiled.  With ``--bench`` (or via ``python -m benchmarks.run
+--check``, which calls :func:`run` with the bench already handled), the
+perf regression guard runs too, so API health and performance gate
+together in CI.
+
+Exit code 0 == healthy.  Keep this cheap: it is the first thing a
+deploy pipeline runs.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["run", "main"]
+
+_N = 13  # small prime: fast under CPU interpret, still exercises blocks
+
+
+def _check(label: str, ok: bool, detail: str = "") -> bool:
+    print(f"[selfcheck] {'ok  ' if ok else 'FAIL'} {label}"
+          + (f" ({detail})" if detail else ""))
+    return ok
+
+
+def run(run_bench: bool = False) -> int:
+    """Run the API health checks; returns a process exit code."""
+    from repro.core.plan import available_backends, get_backend
+    from . import DPRT, config, retrace_guard
+
+    rng = np.random.default_rng(0)
+    img_i = jnp.asarray(rng.integers(0, 256, (_N, _N)), jnp.int32)
+    img_f = img_i.astype(jnp.float32)
+    ok = True
+
+    for name in available_backends():
+        be = get_backend(name)
+        if be.mesh_aware:
+            continue  # needs a multi-device mesh; covered by tests
+        op = DPRT(img_i.shape, img_i.dtype, method=name)
+        back = op.inverse(op(img_i))
+        ok &= _check(f"{name}: round trip bit-exact",
+                     bool((back == img_i).all()),
+                     f"plan method={op.plan.method}")
+        if be.supports_dtype(jnp.float32):
+            opf = DPRT(img_f.shape, img_f.dtype, method=name)
+            grad = jax.grad(lambda x, o=opf: o(x).sum())(img_f)
+            want = opf.T(jnp.ones(opf.shape_out, jnp.float32))
+            ok &= _check(f"{name}: grad == explicit adjoint",
+                         bool((grad == want).all()))
+
+    # one trace per geometry, enforced
+    op = DPRT(img_i.shape, img_i.dtype)
+    op(img_i)  # first trace happens outside the guard
+    try:
+        with retrace_guard(max_traces=0):
+            for _ in range(3):
+                op(img_i + 1)
+        ok &= _check("steady state: zero retraces across repeated calls",
+                     True)
+    except Exception as e:  # RetraceError or anything tracing raised
+        ok &= _check("steady state: zero retraces across repeated calls",
+                     False, repr(e))
+
+    # AOT executable serves without tracing
+    exe = op.compile()
+    ok &= _check("AOT compile serves the same bits",
+                 bool((exe(img_i) == op(img_i)).all()))
+
+    # ambient config reaches plan resolution
+    with config(method="gather"):
+        ok &= _check("ambient config resolves method",
+                     DPRT((7, 7), jnp.int32).plan.method == "gather")
+
+    if run_bench:
+        try:
+            from benchmarks import check_regression
+        except ImportError:
+            print("[selfcheck] skip perf guard (benchmarks package not "
+                  "on path; run from the repo root)")
+        else:
+            code = 0
+            try:
+                check_regression.main([])
+            except SystemExit as e:
+                code = int(e.code or 0)
+            ok &= _check("perf regression guard", code == 0,
+                         f"exit={code}")
+
+    print(f"[selfcheck] {'PASS' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--bench", action="store_true",
+                    help="also run benchmarks.check_regression (fresh "
+                         "DPRT shoot-out vs the committed baseline)")
+    args = ap.parse_args(argv)
+    return run(run_bench=args.bench)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
