@@ -1,0 +1,135 @@
+"""Mesh-distributed DPRT shoot-out: legacy ``sharded`` (per-device
+Horner scan + alignment gather) vs ``sharded_pallas`` (per-device fused
+SFDPRT Pallas kernel, one pallas_call + one psum) at the paper's N=251.
+
+Runs in a fresh subprocess with ``XLA_FLAGS=--xla_force_host_platform_
+device_count=8`` (the main bench process must keep its single default
+device), so the rows are measurable on any CPU host -- including CI and
+1-device laptops.  Emitted rows carry ``devices=8`` so the regression
+guard can SKIP them (with a warning, not a failure) in processes where
+the mesh cannot be reproduced; see ``check_regression.py``.
+
+Per-call times are the MIN over many alternating iterations: the mesh
+path is collective-dominated and forced-host CPU timing noise is large,
+so the minimum -- the deterministic floor -- is the robust estimator
+for regression gating.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+
+from .common import emit
+
+N = 251
+BATCH = 16
+DEVICES = 8
+
+_SUBPROC = r"""
+import json, time
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.distributed import (dprt_sharded, dprt_sharded_pallas,
+                                    dprt_batch_sharded)
+from repro.core.plan import get_plan
+
+n, batch = %(n)d, %(batch)d
+mesh1 = jax.make_mesh((8,), ("model",))
+mesh2 = jax.make_mesh((2, 4), ("data", "model"))
+rng = np.random.default_rng(0)
+f = jnp.asarray(rng.integers(0, 256, (n, n)), jnp.int32)
+fb = jnp.asarray(rng.integers(0, 256, (batch, n, n)), jnp.int32)
+
+def percall_min(fn, *args, iters=20):
+    jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return min(ts) * 1e6
+
+rows = {}
+legacy = jax.jit(lambda x: dprt_sharded(x, mesh1))
+pallas = jax.jit(lambda x: dprt_sharded_pallas(x, mesh1))
+assert (np.asarray(legacy(f)) == np.asarray(pallas(f))).all()
+# alternate the two so load noise hits both equally
+rows["sharded"] = percall_min(legacy, f)
+rows["sharded_pallas"] = percall_min(pallas, f)
+rows["sharded_2nd"] = percall_min(legacy, f)
+rows["sharded_pallas_2nd"] = percall_min(pallas, f)
+
+# batched: legacy = batch-only sharding (per-device horner lax.map);
+# pallas = 2-D mesh, batch over data AND row strips over model, one
+# fused kernel call per device shard
+blegacy = jax.jit(lambda x: dprt_batch_sharded(x, mesh2))
+bplan = get_plan(fb.shape, fb.dtype, "auto", mesh=mesh2)
+assert bplan.method == "sharded_pallas", bplan.method
+bpallas = jax.jit(bplan.forward)
+assert (np.asarray(blegacy(fb)) == np.asarray(bpallas(fb))).all()
+rows["batched_sharded"] = percall_min(blegacy, fb, iters=10)
+rows["batched_sharded_pallas"] = percall_min(bpallas, fb, iters=10)
+print("BENCH_JSON:" + json.dumps(rows))
+"""
+
+
+def main() -> None:
+    if jax.default_backend() != "cpu":
+        print("# skip sharded rows: forced-host mesh bench is CPU-only "
+              f"(current backend: {jax.default_backend()})",
+              file=sys.stderr)
+        return
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = (os.path.join(repo, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    code = _SUBPROC % {"n": N, "batch": BATCH}
+    try:
+        r = subprocess.run([sys.executable, "-c", code],
+                           capture_output=True, text=True, cwd=repo,
+                           timeout=1800, env=env)
+    except (OSError, subprocess.TimeoutExpired) as e:
+        print(f"# skip sharded rows: subprocess failed ({e})",
+              file=sys.stderr)
+        return
+    if r.returncode != 0:
+        print(f"# skip sharded rows: subprocess exited {r.returncode}\n"
+              f"# {r.stderr.strip().splitlines()[-1] if r.stderr else ''}",
+              file=sys.stderr)
+        return
+    payload = next((line[len("BENCH_JSON:"):]
+                    for line in r.stdout.splitlines()
+                    if line.startswith("BENCH_JSON:")), None)
+    if payload is None:
+        print("# skip sharded rows: no payload from subprocess",
+              file=sys.stderr)
+        return
+    t = json.loads(payload)
+    # the alternating pairs guard against one-sided load spikes: keep
+    # the min of the two passes per backend
+    leg = min(t["sharded"], t["sharded_2nd"])
+    pal = min(t["sharded_pallas"], t["sharded_pallas_2nd"])
+    emit(f"dprt_impl/sharded{DEVICES}/N{N}", leg,
+         "legacy per-device horner + psum (forced-host 8-device mesh)",
+         method="sharded", n=N, batch=1, devices=DEVICES)
+    emit(f"dprt_impl/sharded_pallas{DEVICES}/N{N}", pal,
+         f"per-shard fused kernel + psum speedup_vs_sharded={leg/pal:.2f}",
+         method="sharded_pallas", n=N, batch=1, devices=DEVICES)
+    bleg, bpal = t["batched_sharded"], t["batched_sharded_pallas"]
+    emit(f"dprt_impl/batched{BATCH}_sharded{DEVICES}/N{N}", bleg,
+         f"imgs_per_s={BATCH / (bleg / 1e6):.1f} batch-only data sharding",
+         method="sharded", n=N, batch=BATCH, devices=DEVICES)
+    emit(f"dprt_impl/batched{BATCH}_sharded_pallas{DEVICES}/N{N}", bpal,
+         f"imgs_per_s={BATCH / (bpal / 1e6):.1f} 2-D mesh data x model "
+         f"speedup_vs_sharded={bleg/bpal:.2f}",
+         method="sharded_pallas", n=N, batch=BATCH, devices=DEVICES)
+
+
+if __name__ == "__main__":
+    main()

@@ -18,7 +18,10 @@ the equivalent baseline row when one exists (``auto`` resolves to the
 fused pallas backend, so it is gated against ``pallas_fused``) and are
 otherwise reported as NEW without failing the guard.  A baseline
 recorded on a different jax backend (cpu vs tpu) is incomparable: the
-guard reports SKIPPED and passes.
+guard reports SKIPPED and passes.  Likewise, a baseline row whose
+backend is unavailable in the current process -- e.g. the sharded mesh
+rows (``devices`` metadata) on a host that cannot spawn the forced-host
+8-device subprocess -- is SKIPPED with a warning, never failed.
 
 The default tolerance is deliberately loose (1.5x): CPU-interpret
 timings on shared machines are noisy, and the guard's job is to catch
@@ -58,9 +61,40 @@ def _baseline_row(baseline_rows: dict, name: str):
     return None, None
 
 
+def _unavailable_reason(row: dict):
+    """Why a baseline row cannot be (re)measured in this process, or
+    ``None`` if it should have been.  Mesh rows (``devices`` metadata)
+    need either enough visible devices or a CPU host that can force
+    them in a subprocess; rows naming an unregistered backend cannot
+    run at all."""
+    import jax
+    method = row.get("method")
+    if method and method != "auto":
+        try:
+            from repro.core.plan import available_backends
+            if method not in available_backends():
+                return f"backend {method!r} not registered"
+        except ImportError:  # guard must stay runnable standalone
+            pass
+    devices = int(row.get("devices", 1))
+    if devices > len(jax.devices()) and jax.default_backend() != "cpu":
+        return (f"needs {devices} devices, {len(jax.devices())} visible "
+                f"(non-CPU backend cannot force host devices)")
+    if devices > 1:
+        # measurable via the forced-host subprocess bench -- but that
+        # bench warns and emits nothing when the subprocess fails, so a
+        # missing mesh row is an environment limitation, not a perf
+        # regression
+        return f"forced-host {devices}-device subprocess unavailable here"
+    return None
+
+
 def compare(baseline: dict, fresh_rows: list, tol: float) -> tuple:
     """Returns (report_lines, regressions).  A regression is a matched
-    row whose fresh/baseline time ratio exceeds ``tol``."""
+    row whose fresh/baseline time ratio exceeds ``tol``.  Baseline rows
+    that were not measured AND cannot run in the current process (e.g.
+    sharded mesh rows on a host without the forced-device subprocess)
+    are reported as SKIPPED -- a warning, never a failure."""
     lines, regressions = [], []
     seen = set()
     for row in fresh_rows:
@@ -79,7 +113,12 @@ def compare(baseline: dict, fresh_rows: list, tol: float) -> tuple:
         if ratio > tol:
             regressions.append((row["name"], ratio))
     for name in sorted(set(baseline["rows"]) - seen):
-        lines.append(f"MISSING  {name}: baseline row not measured this run")
+        reason = _unavailable_reason(baseline["rows"][name])
+        if reason is not None:
+            lines.append(f"SKIPPED  {name}: {reason}")
+        else:
+            lines.append(f"MISSING  {name}: baseline row not measured "
+                         f"this run")
     return lines, regressions
 
 
@@ -120,10 +159,11 @@ def main(argv=None) -> None:
                     help="baseline JSON (default: repo BENCH_dprt.json)")
     args = ap.parse_args(argv)
 
-    from . import bench_dprt_impl
+    from . import bench_dprt_impl, bench_dprt_sharded
     start = len(common.ROWS)
     print("name,us_per_call,derived")
     bench_dprt_impl.main()
+    bench_dprt_sharded.main()   # warns + emits nothing where unavailable
     fresh = [r for r in common.ROWS[start:]
              if r["name"].startswith("dprt_impl/")]
     raise SystemExit(run_guard(fresh, args.baseline, args.tol))

@@ -3,9 +3,9 @@
 The SFDPRT computes per-strip *partial* DPRTs and accumulates them in
 MEM_OUT (eq. 8).  Across a TPU pod the same algebra shards: each device
 owns a contiguous block of image rows (a "super-strip"), computes its
-partial skew-sum locally (Horner shift-and-add, zero inter-device
-traffic), applies its alignment roll, and the partial results are
-combined with one collective:
+partial skew-sum locally with zero inter-device traffic, applies its
+alignment roll, and the partial results are combined with one
+collective:
 
 * ``psum``          -> every device holds the full (N+1, N) transform
                        (MEM_OUT replicated), or
@@ -13,19 +13,31 @@ combined with one collective:
                        (MEM_OUT sharded; 1/devices the collective bytes,
                        the beyond-paper option used by the perf pass).
 
-Image *batches* shard trivially over the data axes on top of this.
+Image *batches* shard over the data axes on top of this (2-D
+``data x model`` meshes: batch shards over ``data``, row super-strips
+over ``model``).
 
-This module is registered as the ``"sharded"`` backend in the transform
-plan registry (:mod:`repro.core.plan`) -- declared mesh-aware, so
-``method="auto"`` routes here whenever a mesh is passed (or an ambient
-``with mesh:`` context is active) and every public entry point accepts
-``method="sharded", mesh=...`` without importing this module directly.
+Two shard-local datapaths are registered in the transform plan registry
+(:mod:`repro.core.plan`):
+
+* ``"sharded"``         -- the legacy path: per-device Horner
+  shift-and-add scan (:func:`repro.core.dprt.strip_partial`) plus an
+  explicit alignment gather.
+* ``"sharded_pallas"``  -- each device runs the fused SFDPRT Pallas
+  kernel (:func:`repro.kernels.skew_sum_pallas_strip`) over its local
+  row strip or batch shard: the hoisted roll-select-ladder datapath of
+  PR 1 with the device's first global row folded into the alignment
+  ladder (one ``pallas_call`` per shard, batched stacks native).  All
+  four plan datapaths (forward / inverse / adjoint / inverse_adjoint)
+  ride this skew-sum, so ``jax.grad`` and ``op.T`` stay exact through
+  the distributed path.  Declared mesh-aware with higher priority than
+  ``"sharded"``, so ``method="auto"`` under a mesh resolves here.
 """
 from __future__ import annotations
 
 import functools
 import math
-from typing import Literal
+from typing import Literal, Optional
 
 import jax
 import jax.numpy as jnp
@@ -37,11 +49,66 @@ except ImportError:  # pragma: no cover
 
 from .dprt import (accum_dtype_for, align_partial, is_prime, strip_partial)
 
-__all__ = ["dprt_sharded", "idprt_sharded", "dprt_batch_sharded"]
+__all__ = [
+    "dprt_sharded",
+    "idprt_sharded",
+    "dprt_batch_sharded",
+    "idprt_batch_sharded",
+    "skew_sum_sharded_pallas",
+    "dprt_sharded_pallas",
+    "idprt_sharded_pallas",
+    "batch_partition_spec",
+]
 
 Reduce = Literal["psum", "psum_scatter"]
 
+#: axes a batch may shard over (leading mesh axes of the standard
+#: production meshes); the row super-strips take the remaining axis.
+BATCH_AXES = ("pod", "data")
 
+
+def _shard_map(fn, mesh, in_specs, out_specs):
+    """shard_map without the replication checker: ``pallas_call`` has no
+    replication rule (jax asks for ``check_rep=False``), and the psum'd
+    outputs below are replicated by construction."""
+    try:
+        return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+    except TypeError:  # pragma: no cover - newer jax renamed the flag
+        return shard_map(fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_vma=False)
+
+
+def _row_axis(mesh: Mesh) -> str:
+    """Row-sharding axis: 'model' if present, else the mesh's last axis
+    (leading axes are batch/data axes by convention)."""
+    if "model" in mesh.shape:
+        return "model"
+    return tuple(mesh.shape)[-1]
+
+
+def _batch_axes(mesh: Mesh, row_axis: str) -> tuple:
+    """Data axes a batched stack shards over (never the row axis)."""
+    return tuple(a for a in BATCH_AXES
+                 if a in mesh.shape and a != row_axis)
+
+
+def _bspec(baxes: tuple):
+    """PartitionSpec entry for a batch dim sharded over ``baxes``."""
+    return (baxes if len(baxes) > 1 else baxes[0]) if baxes else None
+
+
+def batch_partition_spec(mesh: Mesh) -> P:
+    """The mesh-natural PartitionSpec of a (B, rows, N) stack: batch over
+    the mesh's data axes, rows/lanes unsharded.  The single convention
+    point shared by the shard_map in/out specs here and the operator
+    layer's AOT input shardings (``RadonOperator.input_sharding``)."""
+    return P(_bspec(_batch_axes(mesh, _row_axis(mesh))), None, None)
+
+
+# ---------------------------------------------------------------------------
+# legacy "sharded" backend: per-device Horner scan + alignment gather
+# ---------------------------------------------------------------------------
 def _skew_sum_local(g_local: jnp.ndarray, n: int, sign: int, axis: str,
                     rows_per_dev: int) -> jnp.ndarray:
     """Partial skew-sum of this device's row block, aligned to global rows."""
@@ -107,25 +174,177 @@ def idprt_sharded(r: jnp.ndarray, mesh: Mesh, axis: str = "model",
     return num / n
 
 
+def _batch_shard(xb: jnp.ndarray, mesh: Mesh, batch_axes) -> tuple:
+    """Constrain a stack's leading axis onto the mesh's data axes."""
+    axes = tuple(a for a in batch_axes if a in mesh.shape)
+    if not axes:
+        return xb, None
+    spec = P(axes if len(axes) > 1 else axes[0], None, None)
+    return jax.lax.with_sharding_constraint(
+        xb, NamedSharding(mesh, spec)), spec
+
+
 def dprt_batch_sharded(fb: jnp.ndarray, mesh: Mesh,
-                       batch_axes=("pod", "data"),
+                       batch_axes=BATCH_AXES,
                        method: str = "horner") -> jnp.ndarray:
     """DPRT of a batch of images, batch sharded over the data axes.
 
     This is the FPGA-coprocessor service pattern of Sec. V-B scaled out:
     every device transforms its own images; no collectives at all.
     """
-    from .dprt import dprt_batched  # local import to avoid cycle
+    from .plan import get_plan  # local import to avoid cycle
 
-    axes = tuple(a for a in batch_axes if a in mesh.shape)
-    if not axes:
+    fb, spec = _batch_shard(fb, mesh, batch_axes)
+    out = get_plan(fb.shape, fb.dtype, method).forward(fb)
+    if spec is None:
         # mesh has no data axis to shard the batch over (e.g. a pure
         # "model" mesh): every device computes the full batch locally
-        return dprt_batched(fb, method=method)
-    sharding = NamedSharding(mesh, P(axes if len(axes) > 1 else axes[0],
-                                     None, None))
-    fb = jax.lax.with_sharding_constraint(fb, sharding)
-    out = dprt_batched(fb, method=method)
-    return jax.lax.with_sharding_constraint(
-        out, NamedSharding(mesh, P(axes if len(axes) > 1 else axes[0],
-                                   None, None)))
+        return out
+    return jax.lax.with_sharding_constraint(out, NamedSharding(mesh, spec))
+
+
+def idprt_batch_sharded(rb: jnp.ndarray, mesh: Mesh,
+                        batch_axes=BATCH_AXES,
+                        method: str = "horner") -> jnp.ndarray:
+    """Inverse DPRT of a (B, N+1, N) stack, batch sharded over the data
+    axes -- the missing mirror of :func:`dprt_batch_sharded`: every
+    device reconstructs its own images, no collectives at all."""
+    from .plan import get_plan  # local import to avoid cycle
+
+    n = rb.shape[-1]
+    if rb.ndim != 3 or rb.shape[-2] != n + 1 or not is_prime(n):
+        raise ValueError(
+            f"idprt_batch_sharded needs (B, N+1, N), N prime: {rb.shape}")
+    rb, spec = _batch_shard(rb, mesh, batch_axes)
+    out = get_plan((rb.shape[0], n, n), rb.dtype, method).inverse(rb)
+    if spec is None:
+        return out
+    return jax.lax.with_sharding_constraint(out, NamedSharding(mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# "sharded_pallas" backend: per-shard fused SFDPRT kernel + one collective
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit,
+                   static_argnames=("mesh", "mode", "sign", "axis",
+                                    "batch_axes", "reduce", "strip_rows",
+                                    "m_block"))
+def _sharded_pallas_partials(g: jnp.ndarray, mesh: Mesh, mode: str = "core",
+                             sign: int = 1,
+                             axis: Optional[str] = None,
+                             batch_axes: Optional[tuple] = None,
+                             reduce: Reduce = "psum",
+                             strip_rows: Optional[int] = None,
+                             m_block: Optional[int] = None) -> jnp.ndarray:
+    """Shared mesh datapath: per-device fused kernel + one collective.
+
+    Rows of ``g`` (…, rows, N) shard over the mesh's row axis, a batch
+    dim over its data axes.  Inside ``shard_map`` every device runs ONE
+    fused Pallas kernel call over its local (B_local, rows_per_dev, N)
+    block: the hoisted binary roll-select-ladder datapath with the
+    device's first global row (``axis_index * rows_per_dev``, a traced
+    value) folded into the alignment ladder.  ``mode="core"`` computes
+    the bare skew-sum partial; ``mode="forward"`` additionally fuses
+    the R(N, d) row-sum epilogue in-kernel at global lane positions, so
+    the full forward transform is exactly one kernel + one collective.
+    One ``psum`` (replicated MEM_OUT) or ``psum_scatter`` (output rows
+    stay sharded over the row axis) assembles eq. 8.
+    """
+    from repro.kernels.ops import (dprt_pallas_strip,  # no import cycle
+                                   skew_sum_pallas_strip)
+
+    n = g.shape[-1]
+    rows = g.shape[-2]
+    out_rows = n + 1 if mode == "forward" else n
+    batched = g.ndim == 3
+    if axis is None:
+        axis = _row_axis(mesh)
+    baxes = () if not batched else (
+        _batch_axes(mesh, axis) if batch_axes is None
+        else tuple(a for a in batch_axes if a in mesh.shape and a != axis))
+    devs = mesh.shape[axis]
+    rows_per_dev = math.ceil(rows / devs)
+    pad = [(0, 0)] * g.ndim
+    pad[-2] = (0, devs * rows_per_dev - rows)
+    b = g.shape[0] if batched else None
+    if baxes:
+        bdevs = math.prod(mesh.shape[a] for a in baxes)
+        pad[0] = (0, math.ceil(b / bdevs) * bdevs - b)
+    gp = jnp.pad(g, pad)
+
+    out_pad = math.ceil(out_rows / devs) * devs
+
+    def local(gl):
+        r = jax.lax.axis_index(axis)
+        off = r * rows_per_dev
+        if mode == "forward":
+            part = dprt_pallas_strip(gl, row_offset=off,
+                                     strip_rows=strip_rows, m_block=m_block)
+        else:
+            part = skew_sum_pallas_strip(gl, sign, row_offset=off,
+                                         strip_rows=strip_rows,
+                                         m_block=m_block)
+        if reduce == "psum":
+            return jax.lax.psum(part, axis)
+        ppad = [(0, 0)] * part.ndim
+        ppad[-2] = (0, out_pad - out_rows)
+        part = jnp.pad(part, ppad)
+        return jax.lax.psum_scatter(part, axis,
+                                    scatter_dimension=part.ndim - 2,
+                                    tiled=True)
+
+    bspec = (_bspec(baxes),) if batched else ()
+    row_spec = None if reduce == "psum" else axis
+    fn = _shard_map(local, mesh,
+                    in_specs=P(*bspec, axis, None),
+                    out_specs=P(*bspec, row_spec, None))
+    out = fn(gp)[..., :out_rows, :]
+    return out[:b] if batched and baxes else out
+
+
+def skew_sum_sharded_pallas(g: jnp.ndarray, mesh: Mesh, sign: int = 1,
+                            axis: Optional[str] = None,
+                            batch_axes: Optional[tuple] = None,
+                            reduce: Reduce = "psum",
+                            strip_rows: Optional[int] = None,
+                            m_block: Optional[int] = None) -> jnp.ndarray:
+    """skew_sum of (rows, N) -- or a (B, rows, N) stack -- with rows
+    sharded over the mesh's row axis and the batch over its data axes;
+    one fused Pallas kernel call per device, one collective."""
+    return _sharded_pallas_partials(g, mesh, mode="core", sign=sign,
+                                    axis=axis, batch_axes=batch_axes,
+                                    reduce=reduce, strip_rows=strip_rows,
+                                    m_block=m_block)
+
+
+def dprt_sharded_pallas(f: jnp.ndarray, mesh: Mesh,
+                        reduce: Reduce = "psum",
+                        strip_rows: Optional[int] = None,
+                        m_block: Optional[int] = None) -> jnp.ndarray:
+    """Forward DPRT of (N, N) -- or a (B, N, N) stack -- via the
+    per-shard fused kernel: the R(N, d) row-sum epilogue runs in-kernel
+    at global lane positions, so the whole distributed forward is one
+    pallas_call per device plus one ``psum``/``psum_scatter``."""
+    n = f.shape[-1]
+    if f.shape[-2] != n or not is_prime(n):
+        raise ValueError(f"DPRT needs prime (…, N, N), got {f.shape}")
+    return _sharded_pallas_partials(f, mesh, mode="forward", reduce=reduce,
+                                    strip_rows=strip_rows, m_block=m_block)
+
+
+def idprt_sharded_pallas(r: jnp.ndarray, mesh: Mesh,
+                         reduce: Reduce = "psum",
+                         strip_rows: Optional[int] = None,
+                         m_block: Optional[int] = None) -> jnp.ndarray:
+    """Inverse DPRT of (N+1, N) -- or a (B, N+1, N) stack -- via the
+    per-shard Pallas path (CRS core per device; the -S + R(N, i) and
+    exact divide-by-N epilogue needs the *global* sums, so it runs
+    post-collective -- O(N^2) elementwise on the assembled result)."""
+    n = r.shape[-1]
+    if r.shape[-2] != n + 1 or not is_prime(n):
+        raise ValueError(
+            f"iDPRT input must be (…, N+1, N), N prime: {r.shape}")
+    from .plan import _inverse_epilogue  # lazy: no cycle
+    z = skew_sum_sharded_pallas(r[..., :n, :], mesh, sign=-1, reduce=reduce,
+                                strip_rows=strip_rows, m_block=m_block)
+    return _inverse_epilogue(z, r, n)

@@ -18,8 +18,10 @@ strategies that mirror the paper's architecture space:
   (batch, m-block, strip) grid with hoisted binary roll-select ladders
   and the forward/inverse epilogues fused in-kernel; block shapes come
   from the ``repro.kernels.tuning`` table unless given explicitly.
-* ``sharded`` -- the shard_map super-strip path
-  (:mod:`repro.core.distributed`); needs ``mesh=``.
+* ``sharded`` / ``sharded_pallas`` -- the shard_map super-strip paths
+  (:mod:`repro.core.distributed`); need ``mesh=``.  ``sharded_pallas``
+  runs the fused Pallas kernel per device shard (one kernel call + one
+  collective) and is the ``method="auto"`` pick under a mesh.
 
 Method dispatch lives in :mod:`repro.core.plan` (the backend registry);
 this module owns the transform *primitives* (Horner scans, strip
@@ -54,7 +56,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-Method = Literal["auto", "gather", "horner", "strips", "pallas", "sharded"]
+Method = Literal["auto", "gather", "horner", "strips", "pallas", "sharded",
+                 "sharded_pallas"]
 
 __all__ = [
     "is_prime",
@@ -270,9 +273,13 @@ def _legacy_operator(shape, dtype, method, strip_rows, m_block, batch_impl,
                                        None, "auto"):
         _warn_legacy_knobs()
     from repro.radon import DPRT, ambient  # lazy: radon imports this module
-    # legacy default was method="horner"; ambient scopes override it
+    # legacy default was method="horner" -- EXCEPT under a mesh (explicit
+    # or ambient), where "auto" routes to the mesh-aware registry pick
+    # (sharded_pallas / sharded); ambient scopes override either default
+    mesh = ambient.resolve("mesh", mesh)
+    fallback = "horner" if mesh is None else "auto"
     return DPRT(shape, dtype,
-                method=ambient.resolve("method", method, "horner"),
+                method=ambient.resolve("method", method, fallback),
                 strip_rows=strip_rows, m_block=m_block,
                 batch_impl=batch_impl, block_rows=block_rows,
                 block_batch=block_batch, mesh=mesh)

@@ -3,8 +3,9 @@
 Two layers live here:
 
 1. **Backend registry.**  Each transform strategy (``gather`` /
-   ``horner`` / ``strips`` / ``pallas`` / the ``sharded`` shard_map path
-   from :mod:`repro.core.distributed`) registers a :class:`Backend`
+   ``horner`` / ``strips`` / ``pallas`` / the ``sharded`` and
+   ``sharded_pallas`` shard_map paths from
+   :mod:`repro.core.distributed`) registers a :class:`Backend`
    object declaring its capabilities -- batched-native, needs
    ``strip_rows``, takes ``m_block``, mesh-aware, supported dtype kinds
    -- plus uniform callables for the skew-sum core and the full
@@ -171,28 +172,28 @@ def select_backend(n: int, dtype, batch: Optional[int] = None,
                    mesh=None) -> str:
     """``method="auto"``: best registered backend for the call site.
 
-    An explicit mesh routes to the mesh-aware backend; otherwise the
-    highest-priority backend whose dtype capability matches wins -- with
-    the shipped registry that is the fused ``pallas`` kernel for every
-    int/float image, falling back to ``horner``.  Block shapes come from
-    :mod:`repro.kernels.tuning` at plan-build time.  (Ambient
-    ``with mesh:`` contexts are resolved by the *callers* --
-    :func:`get_plan` and the public transform wrappers -- before any
-    cache, so a cached decision is never pinned to a stale context.)
+    An explicit mesh routes to the highest-priority mesh-aware backend
+    whose dtype capability matches (with the shipped registry:
+    ``sharded_pallas`` -- the per-shard fused-kernel path -- for every
+    int/float image, falling back to the legacy ``sharded``); otherwise
+    the highest-priority non-mesh backend wins -- the fused ``pallas``
+    kernel for every int/float image, falling back to ``horner``.
+    Block shapes come from :mod:`repro.kernels.tuning` at plan-build
+    time.  (Ambient ``with mesh:`` contexts are resolved by the
+    *callers* -- :func:`get_plan` and the public transform wrappers --
+    before any cache, so a cached decision is never pinned to a stale
+    context.)
     """
-    if mesh is not None:
-        for name in available_backends():
-            if _REGISTRY[name].mesh_aware:
-                return name
     best = None
     for name in available_backends():
         b = _REGISTRY[name]
-        if b.mesh_aware or not b.supports_dtype(dtype):
+        if b.mesh_aware != (mesh is not None) or not b.supports_dtype(dtype):
             continue
         if best is None or b.priority > best.priority:
             best = b
     if best is None:
-        raise ValueError(f"no registered backend supports dtype {dtype}")
+        raise ValueError(f"no registered backend supports dtype {dtype}"
+                         + (" under a mesh" if mesh is not None else ""))
     return best.name
 
 
@@ -200,16 +201,21 @@ def select_backend(n: int, dtype, batch: Optional[int] = None,
 # shared transform epilogues (the only copies in the repo)
 # ---------------------------------------------------------------------------
 def _attach_row_sum(core: jnp.ndarray, f: jnp.ndarray) -> jnp.ndarray:
-    """Append the R(N, d) = sum_j f(d, j) projection row."""
-    last = f.astype(core.dtype).sum(axis=-1)
-    return jnp.concatenate([core, last[None, :]], axis=0)
+    """Append the R(N, d) = sum_j f(d, j) projection row.
+
+    Rank-polymorphic: (N, N) images or (…, N, N) stacks alike (the
+    batched-native mesh backends ride the same epilogue)."""
+    last = f.astype(core.dtype).sum(axis=-1)[..., None, :]
+    return jnp.concatenate([core, last], axis=-2)
 
 
 def _inverse_epilogue(z: jnp.ndarray, r: jnp.ndarray, n: int) -> jnp.ndarray:
-    """-S + R(N, i) correction and the exact divide-by-N (paper eq. 3-4)."""
+    """-S + R(N, i) correction and the exact divide-by-N (paper eq. 3-4).
+
+    Rank-polymorphic: accepts (N+1, N) or batched (…, N+1, N) stacks."""
     acc = z.dtype
-    s = r[0].astype(acc).sum()
-    num = z - s + r[n].astype(acc)[:, None]
+    s = r[..., 0, :].astype(acc).sum(axis=-1)[..., None, None]
+    num = z - s + r[..., n, :].astype(acc)[..., :, None]
     if jnp.issubdtype(acc, jnp.integer):
         return num // n
     return num / n
@@ -344,6 +350,32 @@ def _sharded_forward_batched(fb, *, strip_rows=None, m_block=None, mesh=None):
     return dprt_batch_sharded(fb, _require_mesh(mesh))
 
 
+def _sharded_inverse_batched(rb, *, strip_rows=None, m_block=None, mesh=None):
+    from .distributed import idprt_batch_sharded
+    return idprt_batch_sharded(rb, _require_mesh(mesh))
+
+
+# the sharded_pallas entry points accept (N, N) and (B, N, N) alike, so
+# one adapter each serves the single-image AND batched-native datapaths
+def _sharded_pallas_skew(g, sign, *, strip_rows=None, m_block=None,
+                         mesh=None):
+    from .distributed import skew_sum_sharded_pallas
+    return skew_sum_sharded_pallas(g, _require_mesh(mesh), sign=sign,
+                                   strip_rows=strip_rows, m_block=m_block)
+
+
+def _sharded_pallas_forward(f, *, strip_rows=None, m_block=None, mesh=None):
+    from .distributed import dprt_sharded_pallas
+    return dprt_sharded_pallas(f, _require_mesh(mesh),
+                               strip_rows=strip_rows, m_block=m_block)
+
+
+def _sharded_pallas_inverse(r, *, strip_rows=None, m_block=None, mesh=None):
+    from .distributed import idprt_sharded_pallas
+    return idprt_sharded_pallas(r, _require_mesh(mesh),
+                                strip_rows=strip_rows, m_block=m_block)
+
+
 register_backend(Backend(
     name="gather",
     skew_sum=_gather_skew,
@@ -389,9 +421,26 @@ register_backend(Backend(
     forward=_sharded_forward,
     inverse=_sharded_inverse,
     forward_batched=_sharded_forward_batched,
+    inverse_batched=_sharded_inverse_batched,
     mesh_aware=True,
-    priority=0,  # only reachable via mesh= / active mesh
-    note="shard_map super-strips + one psum (core/distributed.py)",
+    priority=0,  # mesh-only; sharded_pallas outranks it under auto
+    note="legacy shard_map super-strips (Horner scan) + one psum",
+))
+register_backend(Backend(
+    name="sharded_pallas",
+    skew_sum=_sharded_pallas_skew,
+    forward=_sharded_pallas_forward,
+    inverse=_sharded_pallas_inverse,
+    forward_batched=_sharded_pallas_forward,   # same wrappers take (B, …)
+    inverse_batched=_sharded_pallas_inverse,
+    skew_batched=_sharded_pallas_skew,
+    batched_native=True,
+    takes_m_block=True,
+    mesh_aware=True,
+    dtype_kinds=("i", "u", "f"),
+    priority=20,  # mesh-only: beats legacy "sharded" under method="auto"
+    note="per-shard fused SFDPRT pallas kernel + one psum "
+         "(mesh data x model; core/distributed.py)",
 ))
 
 
@@ -542,11 +591,10 @@ class RadonPlan:
         if not g.batched:
             return self._forward_prime(fp)
         be = self.backend
-        if be.mesh_aware:
-            if be.forward_batched is None:
-                raise ValueError(f"{be.name} has no batched forward")
-            return be.forward_batched(fp, **self._knobs())
-        native = be.forward_batched if be.batched_native else None
+        if be.mesh_aware and be.forward_batched is None:
+            raise ValueError(f"{be.name} has no batched forward")
+        native = (be.forward_batched
+                  if be.batched_native or be.mesh_aware else None)
         return self._stack(fp, native, self._forward_prime)
 
     def inverse(self, r: jnp.ndarray) -> jnp.ndarray:
@@ -559,10 +607,12 @@ class RadonPlan:
         if not g.batched:
             return G.crop(self._inverse_prime(r), g)
         be = self.backend
-        # mesh-aware backends have no batched-native inverse, so they take
-        # the generic _stack path too (map/vmap of the sharded inverse,
-        # block_batch chunking respected)
-        native = be.inverse_batched if be.batched_native else None
+        # mesh-aware backends with a batched-native inverse (both sharded
+        # paths, via dprt/idprt_batch_sharded or the per-shard kernel) go
+        # native; anything else takes the generic _stack path (map/vmap
+        # of the single-image inverse).  block_batch chunking respected.
+        native = (be.inverse_batched
+                  if be.batched_native or be.mesh_aware else None)
         return G.crop(self._stack(r, native, self._inverse_prime), g)
 
     def adjoint(self, r: jnp.ndarray) -> jnp.ndarray:

@@ -1,14 +1,20 @@
 """Pallas TPU kernels for the DPRT hot-spot (validated in interpret mode).
 
-The fused, batched SFDPRT kernel family lives in :mod:`.sfdprt`;
-:mod:`.ops` wraps it with auto block tuning (:mod:`.tuning`) and is what
-``repro.core.dprt`` dispatches to for ``method="pallas"``.
+The fused, batched SFDPRT kernel family lives in :mod:`.sfdprt`
+(including the inverse CRS core ``isfdprt_core``, folded in from the
+former ``kernels/isfdprt.py``); :mod:`.ops` wraps it with auto block
+tuning (:mod:`.tuning`) and is what ``repro.core.dprt`` dispatches to
+for ``method="pallas"``.  :func:`skew_sum_pallas_strip` is the
+shard-local entry point the mesh-distributed ``sharded_pallas`` backend
+(:mod:`repro.core.distributed`) runs per device.
 """
-from .ops import dprt_pallas, idprt_pallas, skew_sum_pallas
+from .ops import (dprt_pallas, idprt_pallas, skew_sum_pallas,
+                  skew_sum_pallas_strip)
 from .ref import dprt_ref, idprt_ref, skew_sum_ref
 from .tuning import PALLAS_TUNE, pallas_block_spec
-from .sfdprt import roll_rows_ladder_spec
+from .sfdprt import isfdprt_core, roll_rows_ladder_spec
 
 __all__ = ["dprt_pallas", "idprt_pallas", "skew_sum_pallas",
+           "skew_sum_pallas_strip", "isfdprt_core",
            "dprt_ref", "idprt_ref", "skew_sum_ref",
            "PALLAS_TUNE", "pallas_block_spec", "roll_rows_ladder_spec"]

@@ -26,7 +26,8 @@ from repro.core.dprt import accum_dtype_for, is_prime
 from .sfdprt import (dprt_pallas_raw, idprt_pallas_raw, skew_sum_pallas_raw)
 from .tuning import resolve_blocks
 
-__all__ = ["dprt_pallas", "idprt_pallas", "skew_sum_pallas"]
+__all__ = ["dprt_pallas", "idprt_pallas", "skew_sum_pallas",
+           "skew_sum_pallas_strip", "dprt_pallas_strip"]
 
 
 def _auto_interpret(interpret: Optional[bool]) -> bool:
@@ -60,6 +61,50 @@ def skew_sum_pallas(g: jnp.ndarray, sign: int = 1,
     h, mb = _resolve_blocks(g.shape[-1], strip_rows, m_block, g.dtype)
     return skew_sum_pallas_raw(g, sign=sign, strip_rows=h, m_block=mb,
                                interpret=_auto_interpret(interpret))
+
+
+def skew_sum_pallas_strip(g: jnp.ndarray, sign: int = 1, *,
+                          row_offset=0,
+                          strip_rows: Optional[int] = None,
+                          m_block: Optional[int] = None,
+                          interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Shard-local partial skew-sum: a (rows, N) or (B, rows, N) row
+    strip whose first *global* image row is ``row_offset`` (static int or
+    traced scalar, e.g. ``axis_index * rows_per_dev`` inside shard_map).
+
+    Returns the (…, N, N) partial aligned to global rows -- the fused
+    kernel's alignment roll-select ladder absorbs the offset at zero
+    extra datapath cost (eq. 7 with rH -> row_offset + rH), replacing
+    the distributed path's per-ray Horner roll loop.  Summing these
+    partials over devices (``psum``/``psum_scatter``) yields the full
+    skew-sum; block shapes default to the :mod:`.tuning` table for N.
+    """
+    n = g.shape[-1]
+    h, mb = _resolve_blocks(n, strip_rows, m_block, g.dtype)
+    return skew_sum_pallas_raw(g, sign=sign, strip_rows=h, m_block=mb,
+                               interpret=_auto_interpret(interpret),
+                               row_offset=row_offset)
+
+
+def dprt_pallas_strip(g: jnp.ndarray, *, row_offset=0,
+                      strip_rows: Optional[int] = None,
+                      m_block: Optional[int] = None,
+                      interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Shard-local partial *forward* DPRT: a (rows, N) or (B, rows, N)
+    row strip starting at global image row ``row_offset`` -> the
+    (…, N+1, N) partial transform, R(N, d) row-sum epilogue fused
+    in-kernel at the strip's global lane positions.  Summing the
+    partials over devices (one ``psum``) yields the exact full forward
+    -- the whole distributed datapath is one fused kernel call plus one
+    collective per device."""
+    n = g.shape[-1]
+    single = g.ndim == 2
+    gb = g[None] if single else g
+    h, mb = _resolve_blocks(n, strip_rows, m_block, g.dtype)
+    out = dprt_pallas_raw(gb, strip_rows=h, m_block=mb,
+                          interpret=_auto_interpret(interpret),
+                          row_offset=row_offset)
+    return out[0] if single else out
 
 
 def dprt_pallas(f: jnp.ndarray, strip_rows: Optional[int] = None,

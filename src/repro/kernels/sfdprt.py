@@ -28,14 +28,22 @@ Dataflow (per grid step):
   gather, no index arithmetic) and select per sublane on bit b.
 
 **Hoisted ladder setup.**  The per-step roll amount is constant per
-direction across all H Horner steps, so the per-bit select masks
-(``(amt >> b) & 1``) -- for both the step ladder and the alignment
-ladder R'(r,m,d) = U_r(<d + m*rH>) of eq. (7) -- are precomputed ONCE
-per (m-block, strip) by :func:`ladder_select_masks` and closed over by
-the ``fori_loop`` body.  Setup therefore costs <= ceil(log2 N)
-mask derivations plus <= ceil(log2 N) alignment rotate+select pairs per
-m-block, instead of being re-derived on every Horner cycle; the loop
-body itself is the paper's pure shift-add datapath.
+direction across all H Horner steps, so all roll machinery -- for both
+the step roll and the alignment roll R'(r,m,d) = U_r(<d + m*rH>) of
+eq. (7) -- is precomputed ONCE per (m-block, strip) and closed over by
+the ``fori_loop`` body.  On the TPU ``"ladder"`` datapath that setup is
+the per-bit select masks (``(amt >> b) & 1``, :func:`ladder_select_masks`,
+<= ceil(log2 N) mask derivations + alignment rotate+select pairs per
+m-block); on the interpret/CPU ``"permute"`` lowering the permutations
+are materialized directly in index space and the alignment is ONE
+gather.  Nothing is re-derived on a Horner cycle; the loop body itself
+is the paper's pure shift-add datapath.
+
+**Shard-local partials.**  Every mode accepts ``rows < N`` inputs plus
+a (possibly traced) ``row_offset`` scalar operand: the mesh-distributed
+backend (:mod:`repro.core.distributed`) runs this kernel per device
+over its local row super-strip, with the device's first global row
+folded into the alignment roll amount at zero extra datapath cost.
 
 **Lane padding.**  Off the interpret path the lane axis is padded to a
 multiple of 128 so Mosaic tiling is aligned; every ladder rotate slices
@@ -73,6 +81,7 @@ __all__ = [
     "skew_sum_pallas_raw",
     "dprt_pallas_raw",
     "idprt_pallas_raw",
+    "isfdprt_core",
     "roll_rows_ladder_spec",
     "ladder_select_masks",
     "apply_roll_ladder",
@@ -124,7 +133,7 @@ def apply_roll_ladder(acc: jnp.ndarray, masks, n: int) -> jnp.ndarray:
 
 def _sfdprt_kernel(f_ref, *rest, n: int, n_pad: int, h: int, m_block: int,
                    sign: int, k_steps: int, mode: str, acc_dtype,
-                   step_impl: str):
+                   step_impl: str, with_offset: bool = False):
     """One (batch, m-block, strip) grid step of the fused SFDPRT.
 
     Grid is (B, MB, K) with K innermost ("arbitrary"): for a fixed
@@ -136,12 +145,20 @@ def _sfdprt_kernel(f_ref, *rest, n: int, n_pad: int, h: int, m_block: int,
     * ``"ladder"``  -- re-apply the rotate+select ladder with the
       precomputed masks every cycle (the TPU datapath: static lane
       slices + per-sublane selects, no gathers -- Mosaic-friendly),
-    * ``"permute"`` -- run the ladder ONCE per m-block on a lane-index
-      vector (the <= ceil(log2 N) rotate+select pairs of *setup*), then
-      apply the materialized permutation with one ``take_along_axis``
-      per cycle (the interpret/CPU lowering, where a gather is cheap and
-      17 elementwise passes per cycle are not).
+    * ``"permute"`` -- materialize the step AND alignment permutations
+      directly in index space ONCE per m-block (setup only), then apply
+      one ``take_along_axis`` per cycle plus ONE for the eq. (7)
+      alignment (the interpret/CPU lowering, where a gather is cheap and
+      per-cycle -- or per-short-strip -- ladder passes are not).
+
+    ``with_offset`` threads a (1, 1) scalar operand holding the strip's
+    first *global* image row (the mesh-sharded path: each device's local
+    row block starts at ``axis_index * rows_per_dev``, a traced value).
+    The offset merely shifts the alignment ladder's roll amount
+    (eq. 7 with rH -> row_offset + rH) -- zero extra datapath work.
     """
+    rest = list(rest)
+    off_ref = rest.pop(0) if with_offset else None
     if mode == "inverse":
         corr_ref, out_ref = rest
     else:
@@ -157,18 +174,32 @@ def _sfdprt_kernel(f_ref, *rest, n: int, n_pad: int, h: int, m_block: int,
 
     # ---- hoisted ladder setup: ONCE per (m-block, strip) -----------------
     step_amt = m_vec if sign > 0 else (n - m_vec) % n
-    step_sel = ladder_select_masks(step_amt, n)
     offset = k * h                            # strip's first global row rH
-    # m_vec * offset <= N^2 < 2^31 for every supported N (N <= 46340)
-    align_amt = jnp.mod(sign * m_vec * offset, n)
-    align_sel = ladder_select_masks(align_amt, n)
+    if with_offset:                           # shard-local: + the block's
+        offset = offset + off_ref[0, 0]       # first global image row
+    # reduce the offset mod N before the multiply: the sharded offset can
+    # exceed N (row padding on the last device), so m_vec * offset alone
+    # could overflow int32 near the top-end N; with the reduction
+    # m_vec * (offset % N) <= (N-1)^2 < 2^31 for every supported N
+    align_amt = jnp.mod(sign * m_vec * (offset % n), n)
 
     if step_impl == "permute":
-        # Hoisted setup: ladder applied once to lane indices; perm[j, d] =
-        # <d + amt_j>_n (identity on the zero tail).  Horner cycles below
-        # do zero rotate+select work.
+        # Hoisted setup, interpret/CPU lowering: the step AND alignment
+        # permutations are materialized directly in index space --
+        # perm[j, d] = <d + amt_j>_n for d < n, identity on the zero
+        # tail -- so the Horner cycles below do zero rotate+select work
+        # and the eq. (7) alignment is ONE gather of the accumulator
+        # (short shard-local strips cannot amortize ladder passes over
+        # the accumulator; index setup is O(log N)-free here because a
+        # gather is cheap on this path).
         lane_iota = jax.lax.broadcasted_iota(jnp.int32, (m_block, n_pad), 1)
-        perm = apply_roll_ladder(lane_iota, step_sel, n)
+        in_tail = lane_iota >= n
+        perm = jnp.where(in_tail, lane_iota, (lane_iota + step_amt) % n)
+        align_perm = jnp.where(in_tail, lane_iota,
+                               (lane_iota + align_amt) % n)
+    else:
+        step_sel = ladder_select_masks(step_amt, n)
+        align_sel = ladder_select_masks(align_amt, n)
 
     def body(i, acc):
         # T_i = f(i, .) + roll(T_{i+1}, sign*m): one "clock cycle" -- the
@@ -185,7 +216,10 @@ def _sfdprt_kernel(f_ref, *rest, n: int, n_pad: int, h: int, m_block: int,
     acc = jax.lax.fori_loop(0, h, body, acc)
 
     # alignment roll: R'(r, m, d) = U_r(<d + sign*m*rH>_n)   (eq. 7)
-    acc = apply_roll_ladder(acc, align_sel, n)
+    if step_impl == "permute":
+        acc = jnp.take_along_axis(acc, align_perm, axis=1)
+    else:
+        acc = apply_roll_ladder(acc, align_sel, n)
     acc = jnp.where(valid, acc, zero)
 
     @pl.when(k == 0)
@@ -229,22 +263,29 @@ def _pallas_skew_call(g: jnp.ndarray, *, sign: int, mode: str,
                       strip_rows: int, m_block: int, interpret: bool,
                       corr: jnp.ndarray | None = None,
                       lane_pad: bool | None = None,
-                      step_impl: str | None = None) -> jnp.ndarray:
-    """Shared fused pallas_call: g is (B, N, N) already in the accumulator
-    dtype; returns (B, R, n_pad) with R = ceil(rows/m_block)*m_block --
-    callers slice to the logical output.
+                      step_impl: str | None = None,
+                      row_offset: jnp.ndarray | int | None = None
+                      ) -> jnp.ndarray:
+    """Shared fused pallas_call: g is (B, rows, N) already in the
+    accumulator dtype (rows == N for whole images; rows < N for a
+    shard-local row strip); returns (B, R, n_pad) with
+    R = ceil(out_rows/m_block)*m_block -- callers slice to the logical
+    output.
 
     ``lane_pad`` (default: pad iff compiled) rounds the lane axis up to a
     128-multiple for Mosaic tile alignment; it is overridable so the
     wraparound-at-logical-N path is testable in interpret mode.
     ``step_impl`` (default: "permute" in interpret mode, "ladder"
     compiled) picks the per-cycle roll realization -- see
-    :func:`_sfdprt_kernel`.
+    :func:`_sfdprt_kernel`.  ``row_offset`` (static or traced scalar)
+    is the first *global* image row of ``g``'s row block -- the
+    shard-local partial of the mesh path; it feeds the alignment ladder
+    only (core mode).
     """
-    b, _, n = g.shape
+    b, rows, n = g.shape
     acc_dtype = g.dtype
-    h = max(1, min(int(strip_rows), n))
-    k_steps = math.ceil(n / h)
+    h = max(1, min(int(strip_rows), rows))
+    k_steps = math.ceil(rows / h)
     if lane_pad is None:
         lane_pad = not interpret
     if step_impl is None:
@@ -253,9 +294,14 @@ def _pallas_skew_call(g: jnp.ndarray, *, sign: int, mode: str,
     out_rows = n + 1 if mode == "forward" else n
     r_blocks = math.ceil(out_rows / m_block)
 
-    gp = jnp.pad(g, ((0, 0), (0, k_steps * h - n), (0, n_pad - n)))
+    gp = jnp.pad(g, ((0, 0), (0, k_steps * h - rows), (0, n_pad - n)))
     in_specs = [pl.BlockSpec((1, h, n_pad), lambda bb, i, j: (bb, j, 0))]
     operands = [gp]
+    with_offset = row_offset is not None
+    if with_offset:
+        off = jnp.asarray(row_offset, jnp.int32).reshape(1, 1)
+        in_specs.append(pl.BlockSpec((1, 1), lambda bb, i, j: (0, 0)))
+        operands.append(off)
     if mode == "inverse":
         corr_p = jnp.pad(corr.astype(acc_dtype),
                          ((0, 0), (0, r_blocks * m_block - n)))[..., None]
@@ -267,7 +313,7 @@ def _pallas_skew_call(g: jnp.ndarray, *, sign: int, mode: str,
         functools.partial(_sfdprt_kernel, n=n, n_pad=n_pad, h=h,
                           m_block=m_block, sign=sign, k_steps=k_steps,
                           mode=mode, acc_dtype=acc_dtype,
-                          step_impl=step_impl),
+                          step_impl=step_impl, with_offset=with_offset),
         grid=(b, r_blocks, k_steps),
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, m_block, n_pad),
@@ -284,16 +330,22 @@ def _pallas_skew_call(g: jnp.ndarray, *, sign: int, mode: str,
                                     "interpret", "step_impl"))
 def skew_sum_pallas_raw(g: jnp.ndarray, sign: int = 1, strip_rows: int = 16,
                         m_block: int = 8, interpret: bool = True,
-                        step_impl: str | None = None) -> jnp.ndarray:
+                        step_impl: str | None = None,
+                        row_offset=None) -> jnp.ndarray:
     """Bare skew_sum via the strip kernel (core mode, no fused epilogue).
 
-    g: (N, N) or a batched (B, N, N) stack, N prime.  Returns the same
-    rank in the accumulator dtype with
-    out[..., m, d] = sum_i g(..., i, <d + sign*m*i>_N); a stack runs in
-    ONE pallas_call via the kernel's leading batch grid dimension (this
-    is the datapath the exact-adjoint/VJP rules ride).  Wrapped-
-    duplicate direction rows in the final m-block are masked (never
-    computed as "useful" output) and sliced away.
+    g: (rows, N) or a batched (B, rows, N) stack, N prime.  Returns the
+    same rank (N direction rows) in the accumulator dtype with
+    out[..., m, d] = sum_i g(..., i, <d + sign*m*(row_offset+i)>_N); a
+    stack runs in ONE pallas_call via the kernel's leading batch grid
+    dimension (this is the datapath the exact-adjoint/VJP rules ride).
+    Wrapped-duplicate direction rows in the final m-block are masked
+    (never computed as "useful" output) and sliced away.
+
+    ``rows < N`` with a (possibly traced) ``row_offset`` computes the
+    *partial* skew-sum of a row strip aligned to global rows -- the
+    shard-local entry of the mesh-distributed path (eq. 7 with the
+    device's first global row folded into the alignment ladder).
     """
     single = g.ndim == 2
     gb = g[None] if single else g
@@ -301,7 +353,7 @@ def skew_sum_pallas_raw(g: jnp.ndarray, sign: int = 1, strip_rows: int = 16,
     out = _pallas_skew_call(gb.astype(accum_dtype_for(g.dtype)), sign=sign,
                             mode="core", strip_rows=strip_rows,
                             m_block=m_block, interpret=interpret,
-                            step_impl=step_impl)
+                            step_impl=step_impl, row_offset=row_offset)
     out = out[:, :n, :n]
     return out[0] if single else out
 
@@ -311,15 +363,22 @@ def skew_sum_pallas_raw(g: jnp.ndarray, sign: int = 1, strip_rows: int = 16,
                                     "step_impl"))
 def dprt_pallas_raw(f: jnp.ndarray, strip_rows: int = 16, m_block: int = 8,
                     interpret: bool = True,
-                    step_impl: str | None = None) -> jnp.ndarray:
+                    step_impl: str | None = None,
+                    row_offset=None) -> jnp.ndarray:
     """Fused batched forward DPRT: (B, N, N) -> (B, N+1, N) in ONE
     pallas_call; the R(N, d) row-sum row is produced by the in-kernel
-    epilogue rather than a second pass over the image."""
+    epilogue rather than a second pass over the image.
+
+    With ``rows < N`` and a ``row_offset`` this is the *partial* forward
+    of a shard-local row strip: both the skew-sum directions AND the
+    fused row-sum row carry the device's global row placement, so one
+    cross-device ``psum`` of the partials is the exact full transform.
+    """
     _, _, n = f.shape
     out = _pallas_skew_call(f.astype(accum_dtype_for(f.dtype)), sign=1,
                             mode="forward", strip_rows=strip_rows,
                             m_block=m_block, interpret=interpret,
-                            step_impl=step_impl)
+                            step_impl=step_impl, row_offset=row_offset)
     return out[:, :n + 1, :n]
 
 
@@ -341,3 +400,11 @@ def idprt_pallas_raw(r: jnp.ndarray, strip_rows: int = 16, m_block: int = 8,
                             interpret=interpret, corr=corr,
                             step_impl=step_impl)
     return out[:, :n, :n]
+
+
+# The inverse core (iSFDPRT_core, paper Sec. III-C / Fig. 16) is the
+# forward skew-sum with circular *right* shifts: CRS == sign=-1.  The
+# -S / +R(N,i) correction and exact divide-by-N run in-kernel in
+# :func:`idprt_pallas_raw` (``mode="inverse"``); this alias is the bare
+# un-corrected Z for callers that want it (formerly kernels/isfdprt.py).
+isfdprt_core = functools.partial(skew_sum_pallas_raw, sign=-1)

@@ -15,6 +15,11 @@ cached per geometry), which together with the zero-leaf pytree plans
 gives the zero-retrace steady state -- asserted by a retrace guard
 around the timed section.  ``--strip-rows`` / ``--m-block`` /
 ``--batch-impl`` / ``--block-batch`` plumb straight into the operator.
+``--mesh-shape D,M`` serves through a (data, model) device mesh:
+``method=auto`` then resolves to the ``sharded_pallas`` backend (batch
+shards over ``data``, row super-strips over ``model``; one fused kernel
+call + one collective per device) and ``--warmup`` AOT-compiles the
+sharded executables before the timing loop.
 """
 from __future__ import annotations
 
@@ -75,16 +80,49 @@ def serve_lm(args):
     return gen
 
 
+def _parse_mesh_shape(spec):
+    """``--mesh-shape D,M`` -> a (data, model) mesh (or 1-D for 'D' /
+    'D,1'-style shapes); validated against the visible devices."""
+    if spec is None:
+        return None
+    try:
+        dims = tuple(int(s) for s in spec.split(","))
+    except ValueError:
+        raise SystemExit(f"--mesh-shape must be ints like '2,4': {spec!r}")
+    if not dims or any(d < 1 for d in dims) or len(dims) > 2:
+        raise SystemExit(f"--mesh-shape must be 'D' or 'D,M', got {spec!r}")
+    need = 1
+    for d in dims:
+        need *= d
+    have = len(jax.devices())
+    if need > have:
+        raise SystemExit(
+            f"--mesh-shape {spec} needs {need} devices, {have} visible "
+            f"(hint: XLA_FLAGS=--xla_force_host_platform_device_count={need}"
+            f" for a CPU smoke run)")
+    axes = ("data", "model")[:len(dims)] if len(dims) > 1 else ("model",)
+    return jax.make_mesh(dims, axes)
+
+
 def serve_radon(args):
     rcfg = radon_smoke() if args.smoke else radon_config()
     n = args.n or rcfg.n                       # any size; operator embeds
+    mesh = _parse_mesh_shape(args.mesh_shape)
+    if (args.method != "auto" and mesh is None
+            and get_backend(args.method).mesh_aware):
+        raise SystemExit(f"--method {args.method} needs --mesh-shape")
     imgs = jnp.asarray(radon_images(n, args.batch or rcfg.batch,
                                     kind="phantom"))
     op = radon.DPRT(imgs.shape, imgs.dtype, args.method,
                     strip_rows=args.strip_rows, m_block=args.m_block,
                     batch_impl=args.batch_impl,
-                    block_batch=args.block_batch)
+                    block_batch=args.block_batch, mesh=mesh)
     inv = op.inverse
+    if op.input_sharding is not None:
+        # place traffic at the operator's mesh-natural sharding (batch
+        # scattered over the data axes) so AOT executables accept it and
+        # forward -> inverse chain without any resharding
+        imgs = jax.device_put(imgs, op.input_sharding)
     if args.warmup:
         # AOT: build + compile both executables before any traffic; the
         # compiled calls bypass tracing entirely (cached per geometry)
@@ -108,8 +146,10 @@ def serve_radon(args):
         t2 = time.perf_counter()
     exact = bool((back == imgs).all())         # operator crops the embedding
     b = imgs.shape[0]
+    mesh_note = "" if mesh is None else \
+        f" mesh={dict(mesh.shape)}"
     print(f"[serve-radon] N={n} (prime P={op.plan.geometry.prime}) batch={b} "
-          f"method={args.method}->{op.plan.method}: "
+          f"method={args.method}->{op.plan.method}{mesh_note}: "
           f"forward {1e3*(t1-t0):.1f}ms "
           f"({b/(t1-t0):.1f} img/s), inverse {1e3*(t2-t1):.1f}ms, "
           f"round-trip exact={exact}, traces={op.trace_count}")
@@ -125,9 +165,9 @@ def list_backends():
 
 
 def main(argv=None):
-    # CLI surface = the registry: every non-mesh backend plus "auto"
-    methods = ["auto"] + [name for name in available_backends()
-                          if not get_backend(name).mesh_aware]
+    # CLI surface = the registry: every backend plus "auto" (mesh-aware
+    # backends additionally need --mesh-shape)
+    methods = ["auto"] + list(available_backends())
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", choices=["lm", "radon"], default="radon")
     ap.add_argument("--arch", default="tinyllama-1.1b")
@@ -151,6 +191,13 @@ def main(argv=None):
     ap.add_argument("--block-batch", type=int, default=None,
                     help="stream the batch through the backend in chunks "
                          "of this many images (bounded memory)")
+    ap.add_argument("--mesh-shape", default=None, metavar="D[,M]",
+                    help="serve through a device mesh: 'D,M' builds a "
+                         "(data, model) mesh (batch shards over data, row "
+                         "super-strips over model), 'D' a 1-D model mesh; "
+                         "method=auto then resolves to the sharded_pallas "
+                         "backend and --warmup AOT-compiles the sharded "
+                         "executables")
     ap.add_argument("--warmup", action="store_true",
                     help="AOT-compile (op.lower().compile(), cached per "
                          "geometry) the forward+inverse executables before "

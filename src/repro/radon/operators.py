@@ -141,8 +141,30 @@ class RadonOperator:
         return NotImplemented
 
     # -- AOT ---------------------------------------------------------------
+    @property
+    def input_sharding(self):
+        """The mesh-natural sharding of this operator's input (``None``
+        for non-mesh plans): batched stacks shard over the mesh's data
+        axes, everything else is replicated.  Matches the output
+        sharding of the paired datapath, so AOT-compiled forward/inverse
+        executables chain without resharding -- ``device_put`` inputs
+        here before calling a ``.compile()``d executable under a mesh."""
+        mesh = self.plan.mesh
+        if mesh is None:
+            return None
+        from jax.sharding import NamedSharding, PartitionSpec
+        from repro.core.distributed import batch_partition_spec
+        if self.plan.geometry.batched:
+            return NamedSharding(mesh, batch_partition_spec(mesh))
+        return NamedSharding(
+            mesh, PartitionSpec(*([None] * len(self.shape_in))))
+
     def _input_aval(self) -> jax.ShapeDtypeStruct:
-        return jax.ShapeDtypeStruct(self.shape_in, self.dtype_in)
+        sharding = self.input_sharding
+        if sharding is None:
+            return jax.ShapeDtypeStruct(self.shape_in, self.dtype_in)
+        return jax.ShapeDtypeStruct(self.shape_in, self.dtype_in,
+                                    sharding=sharding)
 
     def lower(self):
         """Trace + lower this operator for its declared input aval

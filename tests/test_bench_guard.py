@@ -1,0 +1,62 @@
+"""The perf regression guard must stay runnable everywhere: baseline
+rows whose backend cannot run in the current process (mesh rows needing
+forced host devices, unregistered backends) are SKIPPED with a warning,
+never failed."""
+import os
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if REPO not in sys.path:  # make the benchmarks package importable
+    sys.path.insert(0, REPO)
+
+from benchmarks import check_regression as CR  # noqa: E402
+
+
+def _baseline(rows):
+    return {"backend": "cpu", "rows": {r["name"]: r for r in rows}}
+
+
+def test_unavailable_mesh_row_skips_not_fails():
+    baseline = _baseline([
+        {"name": "dprt_impl/sharded_pallas8/N251", "us_per_call": 6000.0,
+         "method": "sharded_pallas", "devices": 8},
+        {"name": "dprt_impl/horner/N251", "us_per_call": 100.0,
+         "method": "horner"},
+    ])
+    fresh = [{"name": "dprt_impl/horner/N251", "us_per_call": 101.0}]
+    lines, regressions = CR.compare(baseline, fresh, tol=1.5)
+    assert not regressions
+    skipped = [ln for ln in lines if ln.startswith("SKIPPED")]
+    assert len(skipped) == 1 and "sharded_pallas8" in skipped[0], lines
+
+
+def test_unregistered_backend_row_skips():
+    baseline = _baseline([
+        {"name": "dprt_impl/exotic/N251", "us_per_call": 1.0,
+         "method": "no_such_backend"},
+    ])
+    lines, regressions = CR.compare(baseline, [], tol=1.5)
+    assert not regressions
+    assert any(ln.startswith("SKIPPED") and "not registered" in ln
+               for ln in lines), lines
+
+
+def test_measurable_missing_row_still_reported_missing():
+    baseline = _baseline([
+        {"name": "dprt_impl/horner/N251", "us_per_call": 100.0,
+         "method": "horner"},
+    ])
+    lines, _ = CR.compare(baseline, [], tol=1.5)
+    assert any(ln.startswith("MISSING") for ln in lines), lines
+
+
+def test_regression_still_fails():
+    baseline = _baseline([
+        {"name": "dprt_impl/horner/N251", "us_per_call": 100.0,
+         "method": "horner"},
+    ])
+    fresh = [{"name": "dprt_impl/horner/N251", "us_per_call": 250.0}]
+    lines, regressions = CR.compare(baseline, fresh, tol=1.5)
+    assert regressions and regressions[0][0] == "dprt_impl/horner/N251"

@@ -27,9 +27,10 @@ def embedded_oracle(f):
 # ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
-def test_registry_has_all_five_backends():
+def test_registry_has_all_builtin_backends():
     names = PL.available_backends()
-    for want in ("gather", "horner", "strips", "pallas", "sharded"):
+    for want in ("gather", "horner", "strips", "pallas", "sharded",
+                 "sharded_pallas"):
         assert want in names, names
 
 
@@ -39,8 +40,12 @@ def test_registry_capability_declarations():
     assert PL.get_backend("strips").needs_strip_rows
     assert PL.get_backend("sharded").mesh_aware
     assert not PL.get_backend("horner").needs_strip_rows
+    sp = PL.get_backend("sharded_pallas")
+    assert sp.mesh_aware and sp.batched_native and sp.takes_m_block
+    assert sp.priority > PL.get_backend("sharded").priority
     rows = {r["name"]: r for r in PL.backend_capabilities()}
     assert rows["pallas"]["batched_native"] and rows["sharded"]["mesh_aware"]
+    assert rows["sharded_pallas"]["mesh_aware"]
 
 
 def test_unknown_method_lists_backends():
@@ -237,9 +242,11 @@ from repro.core.dprt import dprt, idprt, dprt_oracle_np
 from repro.core.plan import get_plan, select_backend
 mesh = jax.make_mesh((8,), ("model",))
 f = jnp.asarray(np.random.default_rng(0).integers(0, 256, (13, 13)), jnp.int32)
-assert select_backend(13, jnp.int32, mesh=mesh) == "sharded"
+# auto under a mesh picks the highest-priority mesh-aware backend: the
+# per-shard fused-kernel path, outranking the legacy "sharded"
+assert select_backend(13, jnp.int32, mesh=mesh) == "sharded_pallas"
 plan = get_plan(f.shape, f.dtype, "auto", mesh=mesh)
-assert plan.method == "sharded", plan.method
+assert plan.method == "sharded_pallas", plan.method
 r = np.asarray(plan.forward(f))
 assert (r == dprt_oracle_np(np.asarray(f))).all()
 back = np.asarray(plan.inverse(jnp.asarray(r.astype(np.int32))))
@@ -254,13 +261,13 @@ r3 = np.asarray(dprt(f, method="auto", mesh=mesh_d))
 assert (r3 == r).all()
 
 # ambient-context resolution must not be pinned by any cache: the same
-# shape under auto picks pallas outside the mesh, sharded inside it,
-# and pallas again after the context exits
+# shape under auto picks pallas outside the mesh, sharded_pallas inside
+# it, and pallas again after the context exits
 plain = get_plan(f.shape, f.dtype, "auto")
 assert plain.method == "pallas", plain.method
 with mesh:
     inside = get_plan(f.shape, f.dtype, "auto")
-    assert inside.method == "sharded", inside.method
+    assert inside.method == "sharded_pallas", inside.method
     assert (np.asarray(dprt(f, method="auto")) == r).all()
 after = get_plan(f.shape, f.dtype, "auto")
 assert after.method == "pallas", after.method
