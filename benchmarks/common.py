@@ -17,6 +17,11 @@ BENCH_DPRT_PATH = os.path.join(
     os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
     "BENCH_dprt.json")
 
+#: row-name prefixes folded into (and regressed against) the baseline
+#: artifact: the DPRT implementation shoot-out plus the projection-
+#: pipeline conv/DFT rows.
+BENCH_PREFIXES = ("dprt_impl/", "conv/", "dft/")
+
 
 def emit(name: str, us_per_call: float, derived: str = "", **extra) -> None:
     """Record one measurement row.
@@ -30,8 +35,9 @@ def emit(name: str, us_per_call: float, derived: str = "", **extra) -> None:
     print(f"{name},{us_per_call:.2f},{derived}")
 
 
-def dump_json(path: str, prefix: Optional[str] = None) -> dict:
-    """Write recorded rows (optionally filtered by name prefix) to ``path``.
+def dump_json(path: str, prefix=None) -> dict:
+    """Write recorded rows (optionally filtered by name prefix(es)) to
+    ``path``.
 
     Returns the artifact dict: {"backend", "rows": [...]} with each row's
     structured fields intact.
@@ -46,8 +52,14 @@ def dump_json(path: str, prefix: Optional[str] = None) -> dict:
     return artifact
 
 
-def time_jax(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
-    """Median wall-time (us) of a jitted callable on current devices."""
+def time_jax(fn: Callable, *args, warmup: int = 1, iters: int = 5,
+             stat: str = "median") -> float:
+    """Wall-time (us) of a jitted callable on current devices.
+
+    ``stat="median"`` (default) suits quick sweeps; ``stat="min"`` with
+    more iters is the noise-robust statistic the conv/pipeline rows use
+    (min-of-20 per the projection-pipeline acceptance methodology).
+    """
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
     times = []
@@ -56,4 +68,6 @@ def time_jax(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
         jax.block_until_ready(fn(*args))
         times.append(time.perf_counter() - t0)
     times.sort()
+    if stat == "min":
+        return times[0] * 1e6
     return times[len(times) // 2] * 1e6

@@ -12,7 +12,10 @@ Regression workflow (see ``benchmarks/check_regression.py``):
     python -m benchmarks.run --check     # full run, COMPARES against the
                                          # committed baseline instead of
                                          # rewriting; exit 1 on slowdown
-    python -m benchmarks.check_regression  # DPRT shoot-out only + compare
+    python -m benchmarks.check_regression  # guarded rows only (DPRT
+                                         # shoot-out + conv/DFT pipelines
+                                         # + sharded where available) and
+                                         # compare
 """
 import sys
 import traceback
@@ -39,14 +42,14 @@ def main(argv=None) -> None:
             failed.append(mod)
             print(f"{mod.__name__},ERROR,", file=sys.stderr)
             traceback.print_exc()
-    if bench_dprt_impl in failed:
-        print("# BENCH_dprt.json NOT written (bench_dprt_impl failed)",
+    if bench_dprt_impl in failed or bench_conv in failed:
+        print("# BENCH_dprt.json NOT written (DPRT/conv bench failed)",
               file=sys.stderr)
     elif check:
         # guard mode: gate perf against the committed baseline AND the
         # public-API health smoke together (neither touches the baseline)
         fresh = [r for r in common.ROWS
-                 if r["name"].startswith("dprt_impl/")]
+                 if r["name"].startswith(common.BENCH_PREFIXES)]
         guard_failed = check_regression.run_guard(fresh) != 0
         import contextlib
         from repro.radon import selfcheck
@@ -59,7 +62,8 @@ def main(argv=None) -> None:
             raise SystemExit(1)
     else:
         # never clobber the committed perf baseline with partial rows
-        common.dump_json(common.BENCH_DPRT_PATH, prefix="dprt_impl/")
+        common.dump_json(common.BENCH_DPRT_PATH,
+                         prefix=common.BENCH_PREFIXES)
     if failed:
         raise SystemExit(f"{len(failed)} benchmark modules failed")
 

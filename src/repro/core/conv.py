@@ -61,22 +61,43 @@ def circ_conv1d_exact(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     a, b: (..., N) with broadcastable leading dims.
     out[..., d] = sum_t a[..., t] * b[..., <d-t>_N].  O(N^2) integer
     MACs per row -- these run on the MXU as a matmul with the circulant
-    of ``b`` (built by gather once, reused across rows).
+    of ``b``.  The circulant is only ever materialized from the
+    *unbatched* operand (convolution commutes, so a batched ``b`` swaps
+    with ``a``; two batched operands stream through `lax.map`), keeping
+    the peak intermediate at O(rows * N^2) instead of O(B * rows * N^2).
     """
     n = a.shape[-1]
     acc = accum_dtype_for(jnp.result_type(a.dtype, b.dtype))
-    d = jnp.arange(n)[:, None]
-    t = jnp.arange(n)[None, :]
-    bc = b.astype(acc)[..., (d - t) % n]  # bc[..., d, t] = b[..., <d-t>_N]
-    return jnp.einsum("...t,...dt->...d", a.astype(acc), bc)
+    out_lead = jnp.broadcast_shapes(a.shape[:-1], b.shape[:-1])
+    while a.ndim >= 3 and a.shape[0] == 1:   # size-1 batches broadcast
+        a = a[0]
+    while b.ndim >= 3 and b.shape[0] == 1:
+        b = b[0]
+    if b.ndim > a.ndim:
+        a, b = b, a              # build the circulant from the smaller side
+    if b.ndim >= 3 and b.ndim == a.ndim:   # both batched at the same
+        if a.shape[:-2] != b.shape[:-2]:   # rank: one pair live at a time
+            raise ValueError(
+                f"batched circ_conv1d operands need matching leading "
+                f"dims, got {a.shape} vs {b.shape}")
+        out = jax.lax.map(lambda ab: circ_conv1d_exact(*ab), (a, b))
+    else:  # circulant from the lower-rank side, broadcast over the rest
+        d = jnp.arange(n)[:, None]
+        t = jnp.arange(n)[None, :]
+        bc = b.astype(acc)[..., (d - t) % n]   # bc[..., d, t] = b[<d-t>]
+        out = jnp.einsum("...t,...dt->...d", a.astype(acc), bc)
+    return jnp.broadcast_to(out, (*out_lead, n))
 
 
 def _resolve_knobs(method, strip_rows, m_block) -> tuple:
     """Full ambient-knob snapshot (see ``ambient.snapshot_knobs``),
     taken OUTSIDE the jit boundaries below so the whole scope is part
-    of each trace-cache key."""
+    of each trace-cache key.  The fallback method is ``"auto"``: the
+    registry's best backend for the geometry (the fused pipeline-capable
+    Pallas kernel for int/float images)."""
     from repro.radon import ambient  # lazy: radon imports repro.core
-    return ambient.snapshot_knobs(method, strip_rows, m_block)
+    return ambient.snapshot_knobs(method, strip_rows, m_block,
+                                  fallback_method="auto")
 
 
 def _operator(shape, dtype, knobs: tuple):
@@ -85,41 +106,59 @@ def _operator(shape, dtype, knobs: tuple):
     return operator_for(shape, dtype, knobs)
 
 
-def _circ_prime(f: jnp.ndarray, g: jnp.ndarray,
-                knobs: tuple) -> jnp.ndarray:
-    """Transform-domain circular convolution of square prime operands."""
+def _use_pipeline(plan, fuse: Optional[bool]) -> bool:
+    """The staged-fallback rule: fuse when the backend declares the
+    pipeline capability (and no ``block_rows`` streaming is requested);
+    ``fuse=False`` forces the staged path, ``fuse=True`` asks for the
+    pipeline dispatch (which itself falls back to staged stages on
+    non-capable backends, bit-exactly)."""
+    if fuse is not None:
+        return bool(fuse)
+    return plan.backend.pipeline is not None and plan.block_rows is None
+
+
+def _circ_prime(f: jnp.ndarray, g: jnp.ndarray, knobs: tuple,
+                fuse: Optional[bool]) -> jnp.ndarray:
+    """Transform-domain circular convolution of square prime operands.
+
+    Fused route (pipeline-capable backends): transform, per-direction
+    1-D circular convolution and inverse as ONE kernel launch -- the
+    projections never round-trip through HBM.  A batched stack against
+    one shared kernel precomputes the kernel's projections with a single
+    small forward launch and rides the batched pipeline.  Staged route:
+    forward both operands, 1-D convolve (circulant built from the
+    unbatched side only), inverse.
+    """
+    from repro.radon import pipeline_apply  # lazy: radon imports repro.core
+
     def fwd(x):
         return _operator(x.shape, x.dtype, knobs)(x)
 
+    plan = _operator(f.shape, f.dtype, knobs).plan
+    if _use_pipeline(plan, fuse):
+        if g.ndim > f.ndim:      # convolution commutes: pipeline the stack
+            return _circ_prime(g, f, knobs, fuse)
+        if f.ndim == 3 and g.ndim == 2:
+            # one shared operand for a whole stack: its projections are
+            # computed ONCE (one small fused forward) and broadcast
+            return pipeline_apply(plan, f, "conv", fwd(g))
+        return pipeline_apply(plan, f, "conv", g)     # in-kernel operand
     rf, rg = fwd(f), fwd(g)
-    if rg.ndim > rf.ndim:
-        # convolution commutes; build the circulant from the unbatched
-        # operand so a batched g doesn't materialize a (B, N+1, N, N)
-        # circulant (~1 GB at B=16, N=251)
-        rf, rg = rg, rf
-    if rf.ndim == 3 and rg.ndim == 3:
-        if rf.shape[0] != rg.shape[0]:
-            raise ValueError(
-                f"batched operands need equal batch sizes, got "
-                f"{f.shape} vs {g.shape}")
-        # both batched: map over the batch so only one (N+1, N, N)
-        # circulant is live at a time
-        rc = jax.lax.map(lambda ab: circ_conv1d_exact(*ab), (rf, rg))
-    else:
-        rc = circ_conv1d_exact(rf, rg)      # all N+1 directions at once
+    rc = circ_conv1d_exact(rf, rg)      # all N+1 directions at once
     n = rc.shape[-1]
     shape = (n, n) if rc.ndim == 2 else (rc.shape[0], n, n)
     inv = _operator(shape, rc.dtype, knobs).inverse
     return inv(rc)
 
 
-@functools.partial(jax.jit, static_argnames=("knobs", "block_size"))
+@functools.partial(jax.jit, static_argnames=("knobs", "block_size", "fuse"))
 def _circ_conv2d_jit(f: jnp.ndarray, g: jnp.ndarray, knobs: tuple,
-                     block_size: Optional[int]) -> jnp.ndarray:
+                     block_size: Optional[int],
+                     fuse: Optional[bool]) -> jnp.ndarray:
     fh, fw = f.shape[-2:]
     if fh == fw and is_prime(fh) and block_size is None:
-        return _circ_prime(f, g, knobs)
-    lin = _linear_conv2d_jit(f, g, knobs, block_size)
+        return _circ_prime(f, g, knobs, fuse)
+    lin = _linear_conv2d_jit(f, g, knobs, block_size, fuse)
     return G.fold_mod(lin, fh, fw)
 
 
@@ -127,18 +166,26 @@ def circ_conv2d_dprt(f: jnp.ndarray, g: jnp.ndarray,
                      method: Optional[str] = None,
                      strip_rows: Optional[int] = None,
                      m_block: Optional[int] = None,
-                     block_size: Optional[int] = None) -> jnp.ndarray:
+                     block_size: Optional[int] = None,
+                     fuse: Optional[bool] = None) -> jnp.ndarray:
     """Exact 2-D circular convolution of equal-geometry integer images.
 
     Square prime (N, N) operands take the paper's direct transform-
-    domain route (either operand may be a batched (B, N, N) stack --
-    for ``method="pallas"`` one fused kernel call per stack).  Any
-    other (H, W) geometry is convolved on its true (H, W) torus by
-    folding the exact prime-embedded linear convolution -- bit-exact
-    for integers either way.  ``block_size`` streams the non-native
-    path tile-by-tile (overlap-add; see :func:`linear_conv2d_dprt`).
-    All DPRT stages run through :mod:`repro.radon` operators; unset
-    knobs resolve against the ambient :func:`repro.radon.config` scope.
+    domain route; on pipeline-capable backends (``method="auto"``
+    resolves the fused Pallas kernel for int/float images) the whole
+    transform -> per-direction 1-D convolution -> inverse chain runs as
+    ONE kernel launch with the projections resident in VMEM/registers.
+    Either operand may be a batched (B, N, N) stack.  Any other (H, W)
+    geometry is convolved on its true (H, W) torus by folding the exact
+    prime-embedded linear convolution -- bit-exact for integers on
+    every route.  ``block_size`` streams the non-native path
+    tile-by-tile (overlap-add; see :func:`linear_conv2d_dprt`).
+    ``fuse=False`` forces the staged (separate-launches) path; the
+    default fuses exactly when the resolved backend declares the
+    pipeline capability.  All DPRT stages run through
+    :mod:`repro.radon`; unset knobs resolve against the ambient
+    :func:`repro.radon.config` scope, and ``jax.grad`` is exact through
+    both routes.
     """
     fh, fw = f.shape[-2:]
     gh, gw = g.shape[-2:]
@@ -147,7 +194,7 @@ def circ_conv2d_dprt(f: jnp.ndarray, g: jnp.ndarray,
             f"circular convolution needs equal operand geometry, got "
             f"{f.shape} vs {g.shape}")
     knobs = _resolve_knobs(method, strip_rows, m_block)
-    return _circ_conv2d_jit(f, g, knobs, block_size)
+    return _circ_conv2d_jit(f, g, knobs, block_size, fuse)
 
 
 def circ_conv2d_direct(f: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
@@ -170,14 +217,18 @@ def circ_conv2d_fft(f: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:
 
 
 def _linear_conv_blocked(f: jnp.ndarray, g: jnp.ndarray, block: int,
-                         knobs: tuple) -> jnp.ndarray:
+                         knobs: tuple, fuse: Optional[bool]) -> jnp.ndarray:
     """Overlap-add linear convolution on prime-sized tiles.
 
     ``f``: (…, A_h, A_w) image(s); ``g``: one small (C_h, C_w) kernel.
     Each tile's circular convolution at q = next_prime(block + k - 1)
     IS its full linear convolution (no wraparound: q >= tile + k - 1),
     and the per-tile results overlap-add exactly to the full linear
-    convolution -- the companion paper's scalable scheme.
+    convolution -- the companion paper's scalable scheme.  On pipeline-
+    capable backends the whole tile stack rides the batched fused
+    pipeline: the kernel's projections are computed once (one small
+    forward launch) and every tile's transform -> 1-D conv -> inverse
+    runs as one batched kernel launch.
     """
     if g.ndim != 2:
         raise ValueError(
@@ -194,10 +245,15 @@ def _linear_conv_blocked(f: jnp.ndarray, g: jnp.ndarray, block: int,
 
     t = tq.shape[-3]
     stack = tq.reshape(-1, q, q)                  # (B*T or T, q, q)
-    rt = _operator(stack.shape, stack.dtype, knobs)(stack)  # one fused call
-    rc = circ_conv1d_exact(rt, rg)                # broadcast over the stack
-    inv = _operator((rc.shape[0], q, q), rc.dtype, knobs).inverse
-    outs = inv(rc)                                # (B*T or T, q, q)
+    stack_op = _operator(stack.shape, stack.dtype, knobs)
+    if _use_pipeline(stack_op.plan, fuse):
+        from repro.radon import pipeline_apply    # lazy: radon -> core
+        outs = pipeline_apply(stack_op.plan, stack, "conv", rg)
+    else:
+        rt = stack_op(stack)                      # one fused forward call
+        rc = circ_conv1d_exact(rt, rg)            # broadcast over the stack
+        inv = _operator((rc.shape[0], q, q), rc.dtype, knobs).inverse
+        outs = inv(rc)                            # (B*T or T, q, q)
 
     oh, ow = block + ch - 1, block + cw - 1       # useful tile output
     tile_out = outs[..., :oh, :ow]
@@ -215,18 +271,19 @@ def _linear_conv_blocked(f: jnp.ndarray, g: jnp.ndarray, block: int,
     return lin[..., : ah + ch - 1, : aw + cw - 1]
 
 
-@functools.partial(jax.jit, static_argnames=("knobs", "block_size"))
+@functools.partial(jax.jit, static_argnames=("knobs", "block_size", "fuse"))
 def _linear_conv2d_jit(f: jnp.ndarray, g: jnp.ndarray, knobs: tuple,
-                       block_size: Optional[int]) -> jnp.ndarray:
+                       block_size: Optional[int],
+                       fuse: Optional[bool]) -> jnp.ndarray:
     ah, aw = f.shape[-2:]
     ch, cw = g.shape[-2:]
     out_h, out_w = ah + ch - 1, aw + cw - 1
     if block_size is not None:
-        return _linear_conv_blocked(f, g, block_size, knobs)
+        return _linear_conv_blocked(f, g, block_size, knobs, fuse)
     p = next_prime(max(out_h, out_w))
     fp = G.pad2d(f, p - ah, p - aw)
     gp = G.pad2d(g, p - ch, p - cw)
-    res = _circ_prime(fp, gp, knobs)
+    res = _circ_prime(fp, gp, knobs, fuse)
     return res[..., :out_h, :out_w]
 
 
@@ -234,7 +291,8 @@ def linear_conv2d_dprt(f: jnp.ndarray, g: jnp.ndarray,
                        method: Optional[str] = None,
                        strip_rows: Optional[int] = None,
                        m_block: Optional[int] = None,
-                       block_size: Optional[int] = None) -> jnp.ndarray:
+                       block_size: Optional[int] = None,
+                       fuse: Optional[bool] = None) -> jnp.ndarray:
     """Exact full linear convolution of arbitrary rectangular operands.
 
     Whole-image route: zero-pad both operands to the next prime that
@@ -244,12 +302,14 @@ def linear_conv2d_dprt(f: jnp.ndarray, g: jnp.ndarray,
     ``block_size``-square tiles and convolves each against the (small)
     kernel ``g`` at the tile prime instead of one giant image prime --
     the companion paper's resource-fitting scheme (bounded working set,
-    batched tile stack through the plan dispatch).  ``f`` may be a
-    (B, H, W) stack in either route.  Unset knobs resolve against the
-    ambient :func:`repro.radon.config` scope.
+    batched tile stack riding the fused pipeline).  ``f`` may be a
+    (B, H, W) stack in either route.  On pipeline-capable backends each
+    route's transform -> 1-D conv -> inverse chain is a single kernel
+    launch (``fuse=False`` forces the staged path).  Unset knobs resolve
+    against the ambient :func:`repro.radon.config` scope.
     """
     knobs = _resolve_knobs(method, strip_rows, m_block)
-    return _linear_conv2d_jit(f, g, knobs, block_size)
+    return _linear_conv2d_jit(f, g, knobs, block_size, fuse)
 
 
 def linear_conv2d_direct(f: jnp.ndarray, g: jnp.ndarray) -> jnp.ndarray:

@@ -35,9 +35,14 @@ __all__ = ["dft2_via_dprt", "dft2_via_dprt_batched", "dft2_reference"]
 def _resolve_knobs(method, strip_rows, m_block, batch_impl=None) -> tuple:
     """Full ambient-knob snapshot (see ``ambient.snapshot_knobs``),
     taken OUTSIDE the jit boundaries below so the whole scope is part
-    of each trace-cache key."""
+    of each trace-cache key.  Fallback ``"auto"``: the registry's best
+    backend -- the fused Pallas kernel for int/float images, so the DFT's
+    whole exact-integer stage is ONE kernel launch with in-kernel
+    epilogues (the projection-pipeline dispatch rule; backends without
+    the fused kernels keep their staged datapaths, bit-identically)."""
     from repro.radon import ambient  # lazy: radon imports repro.core
-    return ambient.snapshot_knobs(method, strip_rows, m_block, batch_impl)
+    return ambient.snapshot_knobs(method, strip_rows, m_block, batch_impl,
+                                  fallback_method="auto")
 
 
 def _dprt_stage(f, knobs: tuple):

@@ -57,6 +57,7 @@ __all__ = [
     "skew_sum_sharded_pallas",
     "dprt_sharded_pallas",
     "idprt_sharded_pallas",
+    "projection_pipeline_sharded",
     "batch_partition_spec",
 ]
 
@@ -225,6 +226,28 @@ def idprt_batch_sharded(rb: jnp.ndarray, mesh: Mesh,
 # ---------------------------------------------------------------------------
 # "sharded_pallas" backend: per-shard fused SFDPRT kernel + one collective
 # ---------------------------------------------------------------------------
+def _shard_layout(g: jnp.ndarray, mesh: Mesh, axis: Optional[str],
+                  batch_axes: Optional[tuple]) -> tuple:
+    """The single convention point for laying a (…, rows, N) input onto
+    a mesh: resolves the row axis and batch axes, pads rows to a
+    devs-multiple and the batch to a data-devices multiple, and returns
+    ``(gp, axis, baxes, devs, rows_per_dev, b)`` -- shared by every
+    per-shard kernel datapath so the padding rules cannot diverge."""
+    batched = g.ndim == 3
+    if axis is None:
+        axis = _row_axis(mesh)
+    baxes = () if not batched else (
+        _batch_axes(mesh, axis) if batch_axes is None
+        else tuple(a for a in batch_axes if a in mesh.shape and a != axis))
+    devs = mesh.shape[axis]
+    rows_per_dev = math.ceil(g.shape[-2] / devs)
+    pad = [(0, 0)] * g.ndim
+    pad[-2] = (0, devs * rows_per_dev - g.shape[-2])
+    b = g.shape[0] if batched else None
+    if baxes:
+        bdevs = math.prod(mesh.shape[a] for a in baxes)
+        pad[0] = (0, math.ceil(b / bdevs) * bdevs - b)
+    return jnp.pad(g, pad), axis, baxes, devs, rows_per_dev, b
 @functools.partial(jax.jit,
                    static_argnames=("mesh", "mode", "sign", "axis",
                                     "batch_axes", "reduce", "strip_rows",
@@ -254,23 +277,10 @@ def _sharded_pallas_partials(g: jnp.ndarray, mesh: Mesh, mode: str = "core",
                                    skew_sum_pallas_strip)
 
     n = g.shape[-1]
-    rows = g.shape[-2]
     out_rows = n + 1 if mode == "forward" else n
     batched = g.ndim == 3
-    if axis is None:
-        axis = _row_axis(mesh)
-    baxes = () if not batched else (
-        _batch_axes(mesh, axis) if batch_axes is None
-        else tuple(a for a in batch_axes if a in mesh.shape and a != axis))
-    devs = mesh.shape[axis]
-    rows_per_dev = math.ceil(rows / devs)
-    pad = [(0, 0)] * g.ndim
-    pad[-2] = (0, devs * rows_per_dev - rows)
-    b = g.shape[0] if batched else None
-    if baxes:
-        bdevs = math.prod(mesh.shape[a] for a in baxes)
-        pad[0] = (0, math.ceil(b / bdevs) * bdevs - b)
-    gp = jnp.pad(g, pad)
+    gp, axis, baxes, devs, rows_per_dev, b = _shard_layout(
+        g, mesh, axis, batch_axes)
 
     out_pad = math.ceil(out_rows / devs) * devs
 
@@ -348,3 +358,118 @@ def idprt_sharded_pallas(r: jnp.ndarray, mesh: Mesh,
     z = skew_sum_sharded_pallas(r[..., :n, :], mesh, sign=-1, reduce=reduce,
                                 strip_rows=strip_rows, m_block=m_block)
     return _inverse_epilogue(z, r, n)
+
+
+# ---------------------------------------------------------------------------
+# mesh-composed projection-domain pipeline (fused conv / filter)
+# ---------------------------------------------------------------------------
+@functools.partial(jax.jit,
+                   static_argnames=("mesh", "op", "axis", "batch_axes",
+                                    "strip_rows", "m_block"))
+def projection_pipeline_sharded(f: jnp.ndarray, mesh: Mesh, op: str = "conv",
+                                operand: Optional[jnp.ndarray] = None,
+                                axis: Optional[str] = None,
+                                batch_axes: Optional[tuple] = None,
+                                strip_rows: Optional[int] = None,
+                                m_block: Optional[int] = None) -> jnp.ndarray:
+    """The fused projection pipeline on a mesh: per shard, TWO kernel
+    launches with a SINGLE collective between forward and inverse.
+
+    Every O(N^3) stage shards: device r forward-transforms its local row
+    super-strip (one fused kernel, eq. 7 alignment at its global row
+    offset), a ``psum_scatter`` re-shards the summed projections over
+    *directions* -- the one collective between forward and inverse --
+    and the per-shard tail kernel applies the per-direction epilogue
+    (1-D circular convolution / pointwise multiply) and the inverse
+    ladder for its direction shard only.  A final ``psum`` of the
+    (N, N) image partials plus the tiny -S + R'(N, i) / N correction
+    (which must wait for the global sums) assembles the reconstruction.
+
+    ``operand``: conv operand as a replicated (N, N) image (its full
+    projections are computed once via :func:`dprt_sharded_pallas`) or
+    projections/weights (…, N+1, N); a batched operand shards over the
+    data axes with the image batch.  Exact for integers, like every
+    other datapath here.
+    """
+    from repro.kernels.ops import (dprt_pallas_strip,   # no import cycle
+                                   pipeline_tail_pallas)
+
+    n = f.shape[-1]
+    if f.shape[-2] != n or not is_prime(n):
+        raise ValueError(f"pipeline needs prime (…, N, N), got {f.shape}")
+    acc = accum_dtype_for(f.dtype)
+    batched = f.ndim == 3
+    gp, axis, baxes, devs, rows_per_dev, b = _shard_layout(
+        f, mesh, axis, batch_axes)
+    dirs_pad = math.ceil((n + 1) / devs) * devs
+    dirs_loc = dirs_pad // devs
+
+    wp = None
+    w_batched = False
+    if op != "none":
+        if operand is None:
+            raise ValueError(f"pipeline op {op!r} needs an operand")
+        if op == "conv" and operand.shape[-2:] == (n, n):
+            # one sharded forward (kernel + psum) turns the image operand
+            # into its replicated projections
+            operand = dprt_sharded_pallas(operand, mesh,
+                                          strip_rows=strip_rows,
+                                          m_block=m_block)
+        wp = operand.astype(acc)
+        w_batched = wp.ndim == 3 and batched and wp.shape[0] == f.shape[0]
+        if w_batched and baxes:
+            bdevs = math.prod(mesh.shape[a] for a in baxes)
+            wpad = [(0, math.ceil(b / bdevs) * bdevs - b), (0, 0), (0, 0)]
+            wp = jnp.pad(wp, wpad)
+        elif wp.ndim == 3 and not w_batched:
+            if wp.shape[0] != 1:    # same contract as the unsharded path
+                raise ValueError(
+                    f"batched pipeline operand must match the stack batch "
+                    f"({f.shape[0] if batched else 'unbatched'}), got "
+                    f"{operand.shape}")
+            wp = wp[0]
+
+    bspec = (_bspec(baxes),) if batched else ()
+
+    def local(gl, wl):
+        r = jax.lax.axis_index(axis)
+        part = dprt_pallas_strip(gl, row_offset=r * rows_per_dev,
+                                 strip_rows=strip_rows, m_block=m_block)
+        ppad = [(0, 0)] * part.ndim
+        ppad[-2] = (0, dirs_pad - (n + 1))
+        part = jnp.pad(part, ppad)
+        # THE collective between forward and inverse: re-shard the summed
+        # projections over directions (1/devs the bytes of a full psum)
+        rc_loc = jax.lax.psum_scatter(part, axis,
+                                      scatter_dimension=part.ndim - 2,
+                                      tiled=True)
+        z, aux = pipeline_tail_pallas(rc_loc, op, wl,
+                                      row_offset=r * dirs_loc, n=n,
+                                      m_block=None)
+        return jax.lax.psum((z, aux), axis)
+
+    if op == "none":
+        def local1(gl):
+            return local(gl, None)
+        fn = _shard_map(local1, mesh,
+                        in_specs=P(*bspec, axis, None),
+                        out_specs=(P(*bspec, None, None),
+                                   P(*bspec, None, None)))
+        z, aux = fn(gp)
+    else:
+        wspec = P(_bspec(baxes), None, None) if w_batched else P(None, None)
+        fn = _shard_map(local, mesh,
+                        in_specs=(P(*bspec, axis, None), wspec),
+                        out_specs=(P(*bspec, None, None),
+                                   P(*bspec, None, None)))
+        z, aux = fn(gp, wp)
+
+    if batched and baxes:
+        z, aux = z[:b], aux[:b]
+    # deferred correction: needs the globally summed Z / aux rows
+    s = aux[..., 0, :n].sum(axis=-1)[..., None, None]
+    cn = aux[..., 1, :n][..., :, None]
+    num = z[..., :n, :n] - s + cn
+    if jnp.issubdtype(acc, jnp.integer):
+        return num // n
+    return num / n

@@ -99,6 +99,13 @@ class Backend:
     forward_batched: Optional[Callable] = None
     inverse_batched: Optional[Callable] = None
     skew_batched: Optional[Callable] = None  # (B, N, N) stacks in one call
+    #: fused projection-domain pipeline (forward -> per-direction op ->
+    #: inverse without materializing the projections): callable
+    #: ``(fp, op, operand, operand_form, *, strip_rows, m_block, mesh)``
+    #: on prime-domain inputs.  ``None`` means the dispatch runs the
+    #: STAGED fallback (forward, 1-D stage, inverse as separate steps) --
+    #: the rule every backend without the capability inherits.
+    pipeline: Optional[Callable] = None
     batched_native: bool = False
     needs_strip_rows: bool = False
     takes_m_block: bool = False
@@ -148,6 +155,7 @@ def backend_capabilities() -> list:
             "needs_strip_rows": b.needs_strip_rows,
             "takes_m_block": b.takes_m_block,
             "mesh_aware": b.mesh_aware,
+            "pipeline": b.pipeline is not None,
             "dtypes": "any" if b.dtype_kinds is None
                       else ",".join(b.dtype_kinds),
             "priority": b.priority,
@@ -312,6 +320,16 @@ def _pallas_inverse(r, *, strip_rows=None, m_block=None, mesh=None):
     return idprt_pallas(r, strip_rows=strip_rows, m_block=m_block)
 
 
+def _pallas_pipeline(fp, op, operand, operand_form, *, strip_rows=None,
+                     m_block=None, mesh=None):
+    # m_block here is the PIPELINE direction block (its own tune table),
+    # distinct from the transform kernels' m_block; plan-level callers
+    # pass None and let the pipeline table decide
+    from repro.kernels.ops import projection_pipeline_pallas
+    return projection_pipeline_pallas(fp, op, operand,
+                                      operand_form=operand_form)
+
+
 def _require_mesh(mesh):
     if mesh is None:
         raise ValueError(
@@ -376,6 +394,15 @@ def _sharded_pallas_inverse(r, *, strip_rows=None, m_block=None, mesh=None):
                                 strip_rows=strip_rows, m_block=m_block)
 
 
+def _sharded_pallas_pipeline(fp, op, operand, operand_form, *,
+                             strip_rows=None, m_block=None, mesh=None):
+    from .distributed import projection_pipeline_sharded
+    return projection_pipeline_sharded(fp, _require_mesh(mesh), op=op,
+                                       operand=operand,
+                                       strip_rows=strip_rows,
+                                       m_block=m_block)
+
+
 register_backend(Backend(
     name="gather",
     skew_sum=_gather_skew,
@@ -409,6 +436,7 @@ register_backend(Backend(
     forward_batched=_pallas_forward,   # same wrappers take (B, N, N)
     inverse_batched=_pallas_inverse,
     skew_batched=_pallas_skew_batched,
+    pipeline=_pallas_pipeline,
     batched_native=True,
     takes_m_block=True,
     dtype_kinds=("i", "u", "f"),
@@ -434,6 +462,7 @@ register_backend(Backend(
     forward_batched=_sharded_pallas_forward,   # same wrappers take (B, …)
     inverse_batched=_sharded_pallas_inverse,
     skew_batched=_sharded_pallas_skew,
+    pipeline=_sharded_pallas_pipeline,
     batched_native=True,
     takes_m_block=True,
     mesh_aware=True,
@@ -473,6 +502,27 @@ def _blocked_skew_sum(gmat: jnp.ndarray, sign: int, block_rows: int,
     acc0 = jnp.zeros((n, n), acc_dtype)
     acc, _ = jax.lax.scan(step, acc0, (strips, offsets))
     return acc
+
+
+def _map_chunk_pairs(fn: Callable, xb: jnp.ndarray, wb: jnp.ndarray,
+                     chunk: int) -> jnp.ndarray:
+    """`_map_chunks` for a paired (image stack, batched operand): both
+    chunk together so e.g. a fused conv against per-image kernels keeps
+    the ``block_batch`` memory bound."""
+    b = xb.shape[0]
+    chunk = int(chunk)
+    if chunk < 1:
+        raise ValueError(f"block_batch must be >= 1, got {chunk}")
+    if chunk >= b:
+        return fn(xb, wb)
+    nb = math.ceil(b / chunk)
+    pad = nb * chunk - b
+    xp = jnp.pad(xb, ((0, pad),) + ((0, 0),) * (xb.ndim - 1))
+    wp = jnp.pad(wb, ((0, pad),) + ((0, 0),) * (wb.ndim - 1))
+    out = jax.lax.map(lambda xw: fn(*xw),
+                      (xp.reshape(nb, chunk, *xb.shape[1:]),
+                       wp.reshape(nb, chunk, *wb.shape[1:])))
+    return out.reshape(nb * chunk, *out.shape[2:])[:b]
 
 
 def _map_chunks(fn: Callable, xb: jnp.ndarray, chunk: int) -> jnp.ndarray:
@@ -669,6 +719,105 @@ class RadonPlan:
                     be.skew_batched(fb, +1, **knobs), fb, n)
 
         return self._stack(fp, native, self._inverse_adjoint_prime)
+
+    # -- projection-domain pipeline ----------------------------------------
+    def pipeline(self, f: jnp.ndarray, op: str = "conv",
+                 operand: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        """Fused ``inverse(per_direction_op(forward(f)))`` -- transform,
+        1-D projection-domain stage and inverse as ONE dispatch.
+
+        ``op``: ``"conv"`` (per-direction 1-D circular convolution
+        against a second operand -- exact 2-D circular convolution by the
+        paper's Sec. VI property), ``"mul"`` (pointwise projection-domain
+        multiply: the ``inv @ pointwise @ fwd`` operator fusion), or
+        ``"none"`` (the fused round trip).  ``operand`` is the conv
+        operand as a prime-domain image (``(P, P)`` shared or matching
+        ``f``'s batch) or as projections/weights (``(…, P+1, P)``), with
+        the form inferred from its trailing shape.
+
+        Backends declaring the ``pipeline`` capability run it as a single
+        kernel launch with the projections resident in VMEM/registers;
+        every other backend (and any plan streaming strips through
+        ``block_rows``) takes the STAGED fallback -- forward, exact 1-D
+        stage, inverse through the same registry -- so results are
+        bit-exact for integers either way.  ``"conv"`` needs native prime
+        geometry (zero-embedding would change the convolution's torus;
+        :mod:`repro.core.conv` folds non-native geometries before
+        dispatching here); ``"mul"``/``"none"`` fuse the literal
+        embed -> transform -> weight -> inverse -> crop composition, so
+        any geometry is accepted.
+        """
+        g = self.geometry
+        if op not in ("none", "mul", "conv"):
+            raise ValueError(f"pipeline op must be none|mul|conv: {op!r}")
+        if f.shape != g.image_shape:
+            raise ValueError(
+                f"plan built for {g.image_shape}, got image {f.shape}")
+        if op == "conv" and not g.native:
+            raise ValueError(
+                f"conv pipeline needs native square prime geometry, plan "
+                f"is {g.image_shape} embedded in P={g.prime}")
+        p = g.prime
+        operand_form = None
+        if op != "none":
+            if operand is None:
+                raise ValueError(f"pipeline op {op!r} needs an operand")
+            if op == "conv" and operand.shape[-2:] == (p, p):
+                operand_form = "image"
+            elif operand.shape[-2:] == (p + 1, p):
+                operand_form = "proj"
+            else:
+                raise ValueError(
+                    f"pipeline operand must be (…, {p}, {p}) images or "
+                    f"(…, {p + 1}, {p}) projections/weights for op={op!r}, "
+                    f"got {operand.shape}")
+            if operand.ndim == 3 and g.batch not in (None, operand.shape[0]) \
+                    and operand.shape[0] != 1:
+                raise ValueError(
+                    f"batched pipeline operand {operand.shape} does not "
+                    f"match plan batch {g.batch}")
+
+        be = self.backend
+        if be.pipeline is not None and self.block_rows is None:
+            fp = G.embed(f, g)
+            if g.batched and self.block_batch is not None:
+                if operand is None or operand.ndim == 2:
+                    out = _map_chunks(
+                        lambda chunk: be.pipeline(chunk, op, operand,
+                                                  operand_form,
+                                                  **self._knobs()),
+                        fp, self.block_batch)
+                else:   # batched operand: chunk image and operand together
+                    out = _map_chunk_pairs(
+                        lambda chunk, wch: be.pipeline(chunk, op, wch,
+                                                       operand_form,
+                                                       **self._knobs()),
+                        fp, operand, self.block_batch)
+            else:
+                out = be.pipeline(fp, op, operand, operand_form,
+                                  **self._knobs())
+            return G.crop(out, g)
+
+        # staged fallback: same three stages, separate launches
+        rf = self.forward(f)
+        if op == "conv":
+            if operand_form == "image":
+                if operand.shape == g.image_shape:
+                    rg = self.forward(operand)
+                else:  # one shared (P, P) operand for a batched plan
+                    rg = get_plan((p, p), self.dtype_name, self.method,
+                                  strip_rows=self.strip_rows,
+                                  m_block=self.m_block,
+                                  mesh=self.mesh).forward(operand)
+            else:
+                rg = operand
+            from .conv import circ_conv1d_exact  # lazy: conv imports radon
+            rc = circ_conv1d_exact(rf, rg)
+        elif op == "mul":
+            rc = rf * operand.astype(rf.dtype)
+        else:
+            rc = rf
+        return self.inverse(rc.astype(rf.dtype))
 
     def describe(self) -> dict:
         g = self.geometry

@@ -8,13 +8,17 @@ for ``method="pallas"``.  :func:`skew_sum_pallas_strip` is the
 shard-local entry point the mesh-distributed ``sharded_pallas`` backend
 (:mod:`repro.core.distributed`) runs per device.
 """
-from .ops import (dprt_pallas, idprt_pallas, skew_sum_pallas,
+from .ops import (dprt_pallas, idprt_pallas, pipeline_tail_pallas,
+                  projection_pipeline_pallas, skew_sum_pallas,
                   skew_sum_pallas_strip)
 from .ref import dprt_ref, idprt_ref, skew_sum_ref
-from .tuning import PALLAS_TUNE, pallas_block_spec
+from .tuning import PALLAS_TUNE, PIPELINE_TUNE, pallas_block_spec, \
+    pipeline_block_spec
 from .sfdprt import isfdprt_core, roll_rows_ladder_spec
 
 __all__ = ["dprt_pallas", "idprt_pallas", "skew_sum_pallas",
            "skew_sum_pallas_strip", "isfdprt_core",
+           "projection_pipeline_pallas", "pipeline_tail_pallas",
            "dprt_ref", "idprt_ref", "skew_sum_ref",
-           "PALLAS_TUNE", "pallas_block_spec", "roll_rows_ladder_spec"]
+           "PALLAS_TUNE", "pallas_block_spec", "roll_rows_ladder_spec",
+           "PIPELINE_TUNE", "pipeline_block_spec"]

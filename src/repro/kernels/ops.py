@@ -17,17 +17,20 @@ container is CPU-only), compiled Mosaic on real TPUs.
 """
 from __future__ import annotations
 
+import math
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.dprt import accum_dtype_for, is_prime
-from .sfdprt import (dprt_pallas_raw, idprt_pallas_raw, skew_sum_pallas_raw)
-from .tuning import resolve_blocks
+from .sfdprt import (PIPELINE_OPS, dprt_pallas_raw, idprt_pallas_raw,
+                     pipeline_pallas_raw, skew_sum_pallas_raw)
+from .tuning import resolve_blocks, resolve_pipeline_blocks
 
 __all__ = ["dprt_pallas", "idprt_pallas", "skew_sum_pallas",
-           "skew_sum_pallas_strip", "dprt_pallas_strip"]
+           "skew_sum_pallas_strip", "dprt_pallas_strip",
+           "projection_pipeline_pallas", "pipeline_tail_pallas"]
 
 
 def _auto_interpret(interpret: Optional[bool]) -> bool:
@@ -148,3 +151,124 @@ def idprt_pallas(r: jnp.ndarray, strip_rows: Optional[int] = None,
     out = idprt_pallas_raw(rb, strip_rows=h, m_block=mb,
                            interpret=_auto_interpret(interpret))
     return out[0] if single else out
+
+
+def _lane_batch_for(lane_batch=None) -> int:
+    """Batch-in-lanes width.  Packing LB images side by side along the
+    lane axis trades op count for tile width; measured on the 2-core
+    CPU-interpret host the per-image grid (LB=1) wins once the inverse
+    stage is output-row-blocked (wide tiles thrash L2), so LB=1 is the
+    default everywhere -- the knob stays for wider hosts / re-tuning."""
+    if lane_batch is not None:
+        return max(1, int(lane_batch))
+    return 1
+
+
+def projection_pipeline_pallas(f, op: str = "conv", operand=None,
+                               operand_form: Optional[str] = None,
+                               m_block: Optional[int] = None,
+                               group: Optional[int] = None,
+                               lane_batch: Optional[int] = None,
+                               interpret: Optional[bool] = None):
+    """Fused projection-domain pipeline: inverse(op(forward(f))) in ONE
+    ``pallas_call`` -- the projections never round-trip through HBM.
+
+    ``f``: (N, N) or a (B, N, N) stack, N prime.  ``op``:
+
+    * ``"conv"`` -- per-direction 1-D circular convolution against the
+      second operand (the paper's Sec. VI convolution property), i.e.
+      exact 2-D circular convolution.  ``operand`` is the other image
+      ((N, N) shared or (B, N, N) matched; its forward runs in-kernel)
+      or its precomputed projections ((N+1, N) / (B, N+1, N)) with
+      ``operand_form="proj"`` -- the form batched callers use so one
+      small forward launch is shared by the whole stack.
+    * ``"mul"``  -- pointwise projection-domain multiply by an
+      (N+1, N) / (B, N+1, N) weight array (``inv @ pointwise @ fwd``
+      operator fusion).
+    * ``"none"`` -- inverse(forward(f)): the fused round trip.
+
+    Returns the (…, N, N) result in the accumulator dtype; bit-exact for
+    integer inputs (both stages and the epilogue run the same exact
+    integer datapath as the staged kernels).
+    """
+    if op not in PIPELINE_OPS:
+        raise ValueError(f"pipeline op must be one of {PIPELINE_OPS}: {op!r}")
+    single = f.ndim == 2
+    fb = f[None] if single else f
+    if fb.ndim != 3 or fb.shape[-1] != fb.shape[-2]:
+        raise ValueError(f"pipeline needs (B, N, N) or (N, N), got {f.shape}")
+    n = fb.shape[-1]
+    if not is_prime(n):
+        raise ValueError(f"pipeline needs prime N, got {n}")
+    acc = accum_dtype_for(fb.dtype)
+    wb = None
+    if op != "none":
+        if operand is None:
+            raise ValueError(f"pipeline op {op!r} needs an operand")
+        wb = operand[None] if operand.ndim == 2 else operand
+        if operand_form is None:
+            operand_form = "image" if (op == "conv"
+                                       and wb.shape[-2] == n) else "proj"
+        want = (n, n) if (op == "conv" and operand_form == "image") \
+            else (n + 1, n)
+        if wb.shape[-2:] != want:
+            raise ValueError(
+                f"pipeline operand for op={op!r}/{operand_form} must be "
+                f"(…, {want[0]}, {want[1]}), got {operand.shape}")
+        if wb.shape[0] not in (1, fb.shape[0]):
+            raise ValueError(
+                f"batched pipeline operand must match the stack batch "
+                f"({fb.shape[0]}), got {operand.shape}")
+        wb = wb.astype(acc)
+    interp = _auto_interpret(interpret)
+    mb, grp = resolve_pipeline_blocks(n, jnp.dtype(acc).itemsize,
+                                      m_block, group)
+    lb = _lane_batch_for(lane_batch)
+    out, _aux = pipeline_pallas_raw(fb.astype(acc), wb, op=op,
+                                    operand_form=operand_form or "proj",
+                                    m_block=mb, group=grp, lane_batch=lb,
+                                    interpret=interp)
+    out = out[:, :n, :n]
+    return out[0] if single else out
+
+
+def pipeline_tail_pallas(rows, op: str = "conv", operand=None, *,
+                         row_offset=0, n: Optional[int] = None,
+                         m_block: Optional[int] = None,
+                         group: Optional[int] = None,
+                         lane_batch: Optional[int] = None,
+                         interpret: Optional[bool] = None):
+    """Shard-local pipeline tail: already-assembled projection rows in,
+    per-direction epilogue + inverse ladder out (correction deferred).
+
+    ``rows``: (dirs_local, N) or (B, dirs_local, N) -- this device's
+    shard of direction rows, first global direction ``row_offset``
+    (static or traced).  ``operand``: the full (N+1, N) projections /
+    weights (replicated; the kernel slices this shard's window).
+    Returns ``(z, aux)`` partials -- one cross-device ``psum`` of both
+    plus the shared -S + R'(N, i) / N epilogue reconstructs exactly;
+    see :func:`repro.core.distributed.projection_pipeline_sharded`.
+    """
+    single = rows.ndim == 2
+    rb = rows[None] if single else rows
+    if n is None:
+        n = rb.shape[-1]
+    acc = accum_dtype_for(rb.dtype)
+    interp = _auto_interpret(interpret)
+    mb, grp = resolve_pipeline_blocks(n, jnp.dtype(acc).itemsize,
+                                      m_block, group)
+    mb = min(mb, math.ceil(rb.shape[-2] / 8) * 8)
+    lb = _lane_batch_for(lane_batch)
+    wb = None
+    if op != "none":
+        wb = operand[None] if operand.ndim == 2 else operand
+        wb = wb.astype(acc)
+    z, aux = pipeline_pallas_raw(rb.astype(acc), wb, op=op,
+                                 operand_form="proj", source="proj",
+                                 m_block=mb, group=grp, lane_batch=lb,
+                                 interpret=interp, row_offset=row_offset,
+                                 n_rows=n)
+    z = z[:, :n, :n]
+    if single:
+        return z[0], aux[0]
+    return z, aux

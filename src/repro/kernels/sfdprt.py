@@ -12,6 +12,12 @@ one kernel family with three modes:
   pipelined array divider, Sec. IV-B) applied on the final strip, so the
   reconstruction never round-trips through HBM before the epilogue.
 
+A fourth family, the **projection-domain pipeline**
+(:func:`pipeline_pallas_raw`, bottom of this module), chains
+forward -> per-direction epilogue (1-D circular convolution / pointwise
+multiply) -> inverse in ONE launch -- the Sec. I/VI convolution
+application with the projections never leaving VMEM/registers.
+
 Dataflow (per grid step):
 
 * a strip of H image rows is the VMEM-resident register array
@@ -85,6 +91,8 @@ __all__ = [
     "roll_rows_ladder_spec",
     "ladder_select_masks",
     "apply_roll_ladder",
+    "pipeline_pallas_raw",
+    "PIPELINE_OPS",
 ]
 
 LANE = 128  # TPU lane width; Mosaic tiles want the last axis % 128 == 0
@@ -408,3 +416,437 @@ def idprt_pallas_raw(r: jnp.ndarray, strip_rows: int = 16, m_block: int = 8,
 # :func:`idprt_pallas_raw` (``mode="inverse"``); this alias is the bare
 # un-corrected Z for callers that want it (formerly kernels/isfdprt.py).
 isfdprt_core = functools.partial(skew_sum_pallas_raw, sign=-1)
+
+
+# ===========================================================================
+# Projection-domain pipeline: forward -> per-direction op -> inverse in ONE
+# kernel launch (the conv/DFT fusion of the paper's Sec. I/VI application).
+#
+# Grid is (lane-group, m-block): each step forward-skew-sums the whole image
+# for one block of directions (optionally the second conv operand too),
+# applies the per-direction epilogue IN REGISTERS -- a Horner-style 1-D
+# circular convolution against the operand's projections ("conv"), or a
+# pointwise projection-domain multiply ("mul") -- and immediately feeds the
+# block's direction rows through the inverse skew-sum ladder onto the full
+# output image.  The (N+1, N) projections never exist outside VMEM/registers;
+# MEM_OUT is only ever the final (N, N) image.
+#
+# The -S + R'(N, i) correction and exact /N divide need two *global* rows of
+# the convolved projections (row 0 for S, row N for the correction column);
+# they are accumulated into a tiny ``aux`` output block as their owning
+# m-blocks pass through, and the final m-block applies the whole correction
+# in-kernel -- or leaves it to the caller (``defer=True``, the mesh-sharded
+# path, where the division must wait for the cross-device ``psum``).
+#
+# **Batch-in-lanes.**  A batched stack packs ``lane_batch`` images side by
+# side along the lane axis (segment s owns lanes [s*n_pad, (s+1)*n_pad));
+# every roll/gather/select then acts per segment, so transforming LB images
+# costs the same op count as one image with LB-times-wider tiles -- the
+# layout that keeps the CPU-interpret path from paying per-image dispatch
+# overhead.  On TPU, ``lane_batch=1`` recovers the per-image grid.
+#
+# **Tail mode** (``source="proj"``).  The input rows are already-assembled
+# projection rows (a shard of directions, first global direction
+# ``row_offset``); the kernel applies the epilogue and the inverse ladder
+# for those directions only.  This is the second (per-shard) launch of the
+# mesh-distributed pipeline: forward partials are psum_scatter'd over
+# directions between the two launches -- the single collective between
+# forward and inverse.
+# ===========================================================================
+
+PIPELINE_OPS = ("none", "mul", "conv")
+
+
+def _seg_perm(amt, n: int, n_pad: int, lb: int, rows_out: int) -> jnp.ndarray:
+    """Per-segment rotation gather index for a wide (rows_out, lb*n_pad)
+    tile: idx[r, s*n_pad + d] = s*n_pad + <d + amt[r]>_n for d < n,
+    identity on each segment's zero tail.  ``amt`` is (rows_out, 1) in
+    [0, n)."""
+    d = jax.lax.broadcasted_iota(jnp.int32, (1, 1, n_pad), 2)
+    base = jax.lax.broadcasted_iota(jnp.int32, (1, lb, 1), 1) * n_pad
+    rot = d + amt[:, :, None]                 # (rows_out, 1, n_pad)
+    rot = jnp.where(rot >= n, rot - n, rot)
+    rot = jnp.where(d >= n, d, rot)
+    return jnp.broadcast_to(rot + base, (rows_out, lb, n_pad)).reshape(
+        rows_out, lb * n_pad)
+
+
+def _seg_roller(amt, n: int, n_pad: int, lb: int, rows_out: int,
+                step_impl: str):
+    """The hoisted per-step roll for a wide tile: a closure applying
+    out[r, s, d] = acc[r, s, <d + amt[r]>_n].  ``"permute"`` materializes
+    ONE gather index (interpret/CPU); ``"ladder"`` uses the binary
+    rotate+select ladder per segment (static lane slices -- Mosaic)."""
+    if step_impl == "permute":
+        idx = _seg_perm(amt, n, n_pad, lb, rows_out)
+
+        def roll(acc):
+            return jnp.take_along_axis(acc, idx, axis=1)
+    else:
+        masks = [m[:, :, None] for m in ladder_select_masks(amt, n)]
+
+        def roll(acc):
+            a3 = acc.reshape(rows_out, lb, n_pad)
+            for b, sel in enumerate(masks):
+                s = 1 << b
+                rolled = jnp.concatenate(
+                    [a3[:, :, s:n], a3[:, :, :s], a3[:, :, n:]], axis=2)
+                a3 = jnp.where(sel, rolled, a3)
+            return a3.reshape(rows_out, lb * n_pad)
+    return roll
+
+
+def _seg_roll_static(acc3: jnp.ndarray, k: int, n: int) -> jnp.ndarray:
+    """Rotate every segment of a (rows, lb, n_pad) tile right by the
+    *static* amount k at logical width n (zero tails carried through)."""
+    if k == 0:
+        return acc3
+    return jnp.concatenate(
+        [acc3[:, :, n - k:n], acc3[:, :, :n - k], acc3[:, :, n:]], axis=2)
+
+
+def _conv_epilogue(rf: jnp.ndarray, rg3: jnp.ndarray, n: int, n_pad: int,
+                   lb: int, group: int, acc_dtype) -> jnp.ndarray:
+    """In-register per-direction 1-D circular convolution (Horner form):
+
+        rc[m, s, d] = sum_t rf[m, s, t] * rg[m, s|0, <d - t>_n]
+
+    K taps are consumed per cycle against K statically pre-rotated copies
+    of the operand rows, so the loop body is K multiply-adds plus ONE
+    static rotate-by-K of the accumulator -- no gathers, no index math.
+    """
+    m_block = rf.shape[0]
+    k = max(1, min(group, n - 1))
+    rf3 = rf.reshape(m_block, lb, n_pad)
+    rgs = [rg3]
+    for _ in range(1, k):
+        rgs.append(_seg_roll_static(rgs[-1], 1, n))
+    nk = math.ceil(n / k)
+    if nk * k > n_pad:        # taps beyond the lane pad: zero (rf tail is 0)
+        rf3 = jnp.pad(rf3, ((0, 0), (0, 0), (0, nk * k - n_pad)))
+
+    def body(j, acc):
+        t0 = (nk - 1 - j) * k
+        acc = _seg_roll_static(acc, k, n)
+        fts = jax.lax.dynamic_slice(rf3, (0, 0, t0), (m_block, lb, k))
+        for u in range(k):
+            acc = acc + fts[:, :, u:u + 1] * rgs[u]
+        return acc
+
+    acc = jnp.zeros((m_block, lb, n_pad), acc_dtype)
+    return jax.lax.fori_loop(0, nk, body, acc).reshape(m_block, lb * n_pad)
+
+
+def _pipeline_kernel(*refs, n: int, n_pad: int, rows: int, m_block: int,
+                     nr_pad: int, mb_total: int, lb: int, op: str,
+                     source: str, operand_form: str, w_wide: bool,
+                     defer: bool, acc_dtype, group: int, step_impl: str,
+                     with_offset: bool):
+    """One (lane-group, m-block) grid step of the fused pipeline."""
+    refs = list(refs)
+    off_ref = refs.pop(0) if with_offset else None
+    f_ref = refs.pop(0)
+    g_ref = refs.pop(0) if (op == "conv" and operand_form == "image") else None
+    w_ref = refs.pop(0) if (op == "mul" or (op == "conv"
+                                            and operand_form == "proj")) \
+        else None
+    out_ref, aux_ref = refs
+
+    mb = pl.program_id(1)
+    zero = jnp.zeros((), acc_dtype)
+    wide = lb * n_pad
+
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (m_block, 1), 0)
+    dir0 = mb * m_block
+    if with_offset:
+        dir0 = dir0 + off_ref[0, 0]
+    grow = dir0 + row_iota                    # global direction row
+    valid_fwd = grow < n
+    m_vec = jnp.where(valid_fwd, grow, 0)
+    last = mb == mb_total - 1
+
+    # ---- forward stage: whole-rows Horner per direction block ------------
+    def fwd_of(x_ref):
+        roll = _seg_roller(m_vec, n, n_pad, lb, m_block, step_impl)
+
+        def body(i, acc):
+            row = x_ref[0, rows - 1 - i, :]
+            return roll(acc) + row[None, :].astype(acc_dtype)
+
+        acc = jax.lax.fori_loop(0, rows, body,
+                                jnp.zeros((m_block, wide), acc_dtype))
+        return jnp.where(valid_fwd, acc, zero)
+
+    def rowsum_of(x_ref):
+        # R(N, d): each image row's sum placed at its own lane -- per
+        # segment -- and dropped into the grow == n direction slot.
+        x3 = x_ref[0].reshape(rows, lb, n_pad)
+        lane = jax.lax.broadcasted_iota(jnp.int32, (rows, 1, n_pad), 2)
+        rsum = jnp.sum(jnp.where(lane < n, x3.astype(acc_dtype), zero),
+                       axis=2)[:, :, None]               # (rows, lb, 1)
+        srow = jax.lax.broadcasted_iota(jnp.int32, (rows, 1, n_pad), 0)
+        placed = jnp.sum(jnp.where(lane == srow, rsum, zero),
+                         axis=0).reshape(1, wide)        # (1, lb*n_pad)
+        return jnp.where(grow == n, placed, zero)
+
+    # the row-sum row lives in exactly one m-block; pay for its placement
+    # there alone (a traced condition in tail mode, static otherwise)
+    def with_rowsum(r, x_ref):
+        owns = jnp.logical_and(dir0 <= n, n < dir0 + m_block)
+        return jax.lax.cond(owns, lambda v: v + rowsum_of(x_ref),
+                            lambda v: v, r)
+
+    if source == "proj":
+        rf = jnp.where(grow <= n, f_ref[0].astype(acc_dtype), zero)
+    else:
+        rf = with_rowsum(fwd_of(f_ref), f_ref)
+
+    # ---- per-direction epilogue ------------------------------------------
+    def w_block3():
+        """This block's operand rows as (m_block, lb|1, n_pad).
+
+        In tail mode the operand block holds ALL direction rows (the
+        shard's window is traced), so slice at the global dir0; clamped
+        overreads only feed rows that are zero-masked through ``rf``.
+        """
+        width = wide if w_wide else n_pad
+        if source == "proj":
+            rows_w = jax.lax.dynamic_slice(w_ref[0], (dir0, 0),
+                                           (m_block, width))
+        else:           # blockspec already selected this m-block's rows
+            rows_w = w_ref[0]
+        rows_w = rows_w.astype(acc_dtype)
+        if w_wide:
+            return rows_w.reshape(m_block, lb, n_pad)
+        return rows_w[:, None, :]
+
+    if op == "conv":
+        if operand_form == "image":
+            rg3 = with_rowsum(fwd_of(g_ref), g_ref).reshape(
+                m_block, lb, n_pad)
+        else:
+            rg3 = w_block3()
+        rc = _conv_epilogue(rf, rg3, n, n_pad, lb, group, acc_dtype)
+    elif op == "mul":
+        rc = (rf.reshape(m_block, lb, n_pad) * w_block3()).reshape(
+            m_block, wide)
+    else:
+        rc = rf
+
+    # ---- stash the correction rows (row 0 -> S, row N -> column) ---------
+    aux = jnp.stack([
+        jnp.sum(jnp.where(grow == 0, rc, zero), axis=0),
+        jnp.sum(jnp.where(grow == n, rc, zero), axis=0),
+    ])
+
+    @pl.when(mb == 0)
+    def _aux_init():
+        aux_ref[0, :2] = aux
+
+    @pl.when(mb > 0)
+    def _aux_accum():
+        aux_ref[0, :2] = aux_ref[0, :2] + aux
+
+    # ---- inverse stage: this block's directions onto ALL image rows ------
+    # The output rows are processed in cache-sized sub-blocks (the same
+    # tile height the dedicated inverse kernel tunes to): one (IB, wide)
+    # accumulator + its gather index stay resident per sub-block instead
+    # of a single (nr_pad, wide) mega-tile thrashing L2.
+    rcm = jnp.where(valid_fwd, rc, zero)
+    ib_rows = min(64, nr_pad)
+    zs = []
+    for i0 in range(0, nr_pad, ib_rows):
+        rows_ib = min(ib_rows, nr_pad - i0)
+        i_iota = i0 + jax.lax.broadcasted_iota(jnp.int32, (rows_ib, 1), 0)
+        i_valid = i_iota < n
+        i_vec = jnp.where(i_valid, i_iota, 0)
+        neg_i = jnp.where(i_vec == 0, 0, n - i_vec)
+        roll_inv = _seg_roller(neg_i, n, n_pad, lb, rows_ib, step_impl)
+
+        def ibody(t, acc):
+            return roll_inv(acc) + rcm[m_block - 1 - t, :][None, :]
+
+        z = jax.lax.fori_loop(0, m_block, ibody,
+                              jnp.zeros((rows_ib, wide), acc_dtype))
+        # alignment: the Horner above assumed the block's first direction
+        # is 0; roll each output row i by <-i * dir0>_n (eq. 7, m -> i)
+        align_amt = jnp.mod(-i_vec * (dir0 % n), n)
+        z = _seg_roller(align_amt, n, n_pad, lb, rows_ib, step_impl)(z)
+        zs.append(jnp.where(i_valid, z, zero))
+    z = jnp.concatenate(zs, axis=0) if len(zs) > 1 else zs[0]
+
+    @pl.when(mb == 0)
+    def _init():
+        out_ref[0] = z
+
+    @pl.when(mb > 0)
+    def _accum():
+        out_ref[0] = out_ref[0] + z
+
+    if not defer:
+        @pl.when(last)
+        def _final():
+            # f = (Z - S + R'(N, i)) / N per segment, exact for integers
+            aux3 = aux_ref[0, :2].reshape(2, lb, n_pad)
+            lane = jax.lax.broadcasted_iota(jnp.int32, (nr_pad, 1, n_pad), 2)
+            srow = jax.lax.broadcasted_iota(jnp.int32, (nr_pad, 1, n_pad), 0)
+            s = jnp.sum(jnp.where(lane[0] < n, aux3[0], zero),
+                        axis=1)[None, :, None]            # (1, lb, 1)
+            cn = jnp.sum(jnp.where(lane == srow, aux3[1][None], zero),
+                         axis=2, keepdims=True)           # (nr_pad, lb, 1)
+            num = out_ref[0].reshape(nr_pad, lb, n_pad) - s + cn
+            if jnp.issubdtype(jnp.dtype(acc_dtype), jnp.integer):
+                res = num // n
+            else:
+                res = num / n
+            keep = (srow < n) & (lane < n)
+            out_ref[0] = jnp.where(keep, res, zero).reshape(nr_pad, wide)
+
+
+def _pack_lanes(x: jnp.ndarray, lb: int, n_pad: int) -> jnp.ndarray:
+    """(B, rows, N) -> (ceil(B/lb), rows, lb*n_pad) batch-in-lanes layout
+    (zero images pad the last group; zero lane tails pad each segment)."""
+    b, rows, n = x.shape
+    bg = math.ceil(b / lb)
+    x = jnp.pad(x, ((0, bg * lb - b), (0, 0), (0, n_pad - n)))
+    return jnp.transpose(x.reshape(bg, lb, rows, n_pad),
+                         (0, 2, 1, 3)).reshape(bg, rows, lb * n_pad)
+
+
+def _unpack_lanes(y: jnp.ndarray, b: int, lb: int, n_pad: int) -> jnp.ndarray:
+    """(BG, rows, lb*n_pad) -> (B, rows, n_pad): inverse of _pack_lanes."""
+    bg, rows, _ = y.shape
+    y = jnp.transpose(y.reshape(bg, rows, lb, n_pad), (0, 2, 1, 3))
+    return y.reshape(bg * lb, rows, n_pad)[:b]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("op", "operand_form", "source", "m_block",
+                              "group", "lane_batch", "defer", "interpret",
+                              "step_impl", "n_rows"))
+def pipeline_pallas_raw(f: jnp.ndarray, operand: jnp.ndarray | None = None,
+                        op: str = "none", operand_form: str = "proj",
+                        source: str = "image", m_block: int = 32,
+                        group: int = 4, lane_batch: int = 1,
+                        defer: bool = False, interpret: bool = True,
+                        step_impl: str | None = None,
+                        row_offset=None, n_rows: int | None = None
+                        ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """The fused projection-domain pipeline in ONE ``pallas_call``.
+
+    ``f``: (B, N, N) image stack (``source="image"``) or a (B, rows, N)
+    shard of already-assembled projection rows (``source="proj"``, first
+    global direction ``row_offset`` -- the mesh tail).  ``operand``:
+    the second conv operand as images (B|1, N, N), its projections
+    (B|1, N+1, N), or pointwise projection-domain weights (B|1, N+1, N),
+    depending on (op, operand_form); batched operands must match ``f``'s
+    batch.  Returns ``(out, aux)`` where out is (B, nr_pad, n_pad) --
+    the reconstruction (or, with ``defer=True``, the raw inverse-ladder
+    partial Z) -- and aux is (B, 2, n_pad) holding the convolved rows 0
+    and N for the deferred -S + R'(N, i) correction.  Callers slice to
+    (…, N, N).  ``n_rows`` is the transform size N when ``source="proj"``
+    rows don't imply it.
+    """
+    if op not in PIPELINE_OPS:
+        raise ValueError(f"pipeline op must be one of {PIPELINE_OPS}: {op!r}")
+    b, rows, n = f.shape
+    if source == "proj":
+        n = f.shape[-1] if n_rows is None else n_rows
+    acc_dtype = f.dtype
+    lb = max(1, min(int(lane_batch), b))
+    if step_impl is None:
+        step_impl = "permute" if interpret else "ladder"
+    lane_pad = not interpret
+    n_pad = ((n + LANE - 1) // LANE) * LANE if lane_pad else n
+    nr_pad = ((n + 7) // 8) * 8
+    bg = math.ceil(b / lb)
+    wide = lb * n_pad
+
+    if source == "proj":
+        mb_total = math.ceil(rows / m_block)
+        rows_pad = mb_total * m_block
+        fp4 = jnp.pad(f, ((0, bg * lb - b), (0, rows_pad - rows),
+                          (0, n_pad - n)))
+        fp = jnp.transpose(fp4.reshape(bg, lb, rows_pad, n_pad),
+                           (0, 2, 1, 3)).reshape(bg, rows_pad, wide)
+        in_specs = [pl.BlockSpec((1, m_block, wide),
+                                 lambda bb, i: (bb, i, 0))]
+        defer = True                      # correction needs the global psum
+    else:
+        mb_total = math.ceil((n + 1) / m_block)
+        fp = _pack_lanes(f, lb, n_pad)
+        in_specs = [pl.BlockSpec((1, rows, wide), lambda bb, i: (bb, 0, 0))]
+
+    operands = [fp]
+    with_offset = row_offset is not None
+    if with_offset:
+        off = jnp.asarray(row_offset, jnp.int32).reshape(1, 1)
+        in_specs.insert(0, pl.BlockSpec((1, 1), lambda bb, i: (0, 0)))
+        operands.insert(0, off)
+
+    w_wide = False
+    if op == "conv" and operand_form == "image":
+        gb = operand
+        if gb.shape[0] == b:
+            gp = _pack_lanes(gb, lb, n_pad)
+            in_specs.append(pl.BlockSpec((1, rows, wide),
+                                         lambda bb, i: (bb, 0, 0)))
+        else:   # one shared operand image, tiled across segments
+            gp = _pack_lanes(jnp.broadcast_to(gb, (lb, *gb.shape[1:])),
+                             lb, n_pad)
+            in_specs.append(pl.BlockSpec((1, rows, wide),
+                                         lambda bb, i: (0, 0, 0)))
+        operands.append(gp.astype(acc_dtype))
+    elif op == "mul" or (op == "conv" and operand_form == "proj"):
+        wb = operand if operand.ndim == 3 else operand[None]
+        # pad the direction rows with m_block slack so the (traced) tail
+        # window slice stays in bounds; clamped overreads feed rows that
+        # are zero-masked through rf either way
+        w_rows = math.ceil((wb.shape[1] + m_block) / m_block) * m_block
+        if wb.shape[0] == b and b > 1:
+            w_wide = True
+            wp = jnp.pad(wb, ((0, bg * lb - b), (0, w_rows - wb.shape[1]),
+                              (0, n_pad - n)))
+            wp = jnp.transpose(wp.reshape(bg, lb, w_rows, n_pad),
+                               (0, 2, 1, 3)).reshape(bg, w_rows, wide)
+            if source == "proj":
+                in_specs.append(pl.BlockSpec((1, w_rows, wide),
+                                             lambda bb, i: (bb, 0, 0)))
+            else:
+                in_specs.append(pl.BlockSpec((1, m_block, wide),
+                                             lambda bb, i: (bb, i, 0)))
+        else:
+            wp = jnp.pad(wb[0], ((0, w_rows - wb.shape[1]),
+                                 (0, n_pad - n)))[None]
+            if source == "proj":
+                in_specs.append(pl.BlockSpec((1, w_rows, n_pad),
+                                             lambda bb, i: (0, 0, 0)))
+            else:
+                in_specs.append(pl.BlockSpec((1, m_block, n_pad),
+                                             lambda bb, i: (0, i, 0)))
+        operands.append(wp.astype(acc_dtype))
+
+    try:
+        cparams = None if interpret else pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"))
+    except NameError:  # pragma: no cover
+        cparams = None
+
+    out, aux = pl.pallas_call(
+        functools.partial(
+            _pipeline_kernel, n=n, n_pad=n_pad, rows=rows,
+            m_block=m_block, nr_pad=nr_pad, mb_total=mb_total, lb=lb,
+            op=op, source=source, operand_form=operand_form, w_wide=w_wide,
+            defer=defer, acc_dtype=acc_dtype, group=group,
+            step_impl=step_impl, with_offset=with_offset),
+        grid=(bg, mb_total),
+        in_specs=in_specs,
+        out_specs=(pl.BlockSpec((1, nr_pad, wide), lambda bb, i: (bb, 0, 0)),
+                   pl.BlockSpec((1, 8, wide), lambda bb, i: (bb, 0, 0))),
+        out_shape=(jax.ShapeDtypeStruct((bg, nr_pad, wide), acc_dtype),
+                   jax.ShapeDtypeStruct((bg, 8, wide), acc_dtype)),
+        compiler_params=cparams,
+        interpret=interpret,
+    )(*operands)
+    return (_unpack_lanes(out, b, lb, n_pad),
+            _unpack_lanes(aux, b, lb, n_pad)[:, :2])

@@ -17,6 +17,7 @@ from __future__ import annotations
 import math
 
 __all__ = ["PALLAS_TUNE", "pallas_block_spec", "resolve_blocks",
+           "PIPELINE_TUNE", "pipeline_block_spec", "resolve_pipeline_blocks",
            "wasted_direction_rows"]
 
 # N: (strip_rows H, m_block M).  M multiples of 8 keep int32 sublane
@@ -95,3 +96,44 @@ def wasted_direction_rows(n: int, m_block: int, forward: bool = True) -> int:
     benchmarks so padded work is never counted as useful throughput."""
     rows = n + 1 if forward else n
     return math.ceil(rows / m_block) * m_block - rows
+
+
+# ---------------------------------------------------------------------------
+# projection-domain pipeline (fused fwd -> per-direction op -> inverse)
+# ---------------------------------------------------------------------------
+# N: (m_block M, conv tap group K).  The pipeline kernel always runs the
+# whole image as ONE strip (H = N: the conv epilogue needs each
+# direction's complete projection before it can run), so its only block
+# knobs are the direction block M and the Horner conv tap group K.
+# CPU-interpret measurements at N=251 (min-of-many, 2-core host):
+# M=64/K=4 31.2 ms vs M=32/K=8 31.9, M=128+ worse (alignment tile and
+# iota setup outgrow L2); small primes are a single m-block.  On real
+# TPUs M bounds the accumulator sublanes ((M + N_pad_rows) * N_pad *
+# itemsize VMEM per step) -- re-measure on Mosaic before trusting these.
+PIPELINE_TUNE = {
+    61: (62, 4),
+    127: (64, 4),
+    251: (64, 4),
+    509: (64, 4),
+    1021: (64, 4),
+}
+
+
+def pipeline_block_spec(n: int, itemsize: int = 4) -> tuple[int, int]:
+    """Tuned (m_block, conv tap group) for the fused pipeline kernel."""
+    if n in PIPELINE_TUNE:
+        return PIPELINE_TUNE[n]
+    if n <= 61:
+        return n + 1, 4         # one m-block covers every direction row
+    return 64, 4
+
+
+def resolve_pipeline_blocks(n: int, itemsize: int = 4,
+                            m_block=None, group=None) -> tuple[int, int]:
+    """Fill missing pipeline (m_block, group) from the table, validate."""
+    tm, tg = pipeline_block_spec(n, itemsize)
+    mb = tm if m_block is None else int(m_block)
+    k = tg if group is None else int(group)
+    if mb < 1 or k < 1:
+        raise ValueError(f"m_block/group must be >= 1, got {mb}/{k}")
+    return mb, k

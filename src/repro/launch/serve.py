@@ -159,7 +159,7 @@ def serve_radon(args):
 
 def list_backends():
     cols = ("name", "priority", "batched_native", "needs_strip_rows",
-            "takes_m_block", "mesh_aware", "dtypes", "note")
+            "takes_m_block", "mesh_aware", "pipeline", "dtypes", "note")
     for row in backend_capabilities():
         print("  ".join(f"{c}={row[c]}" for c in cols))
 

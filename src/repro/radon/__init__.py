@@ -25,6 +25,11 @@ Surface
   operator objects: ``op(f)``, ``op.inverse``, ``op.T`` (exact adjoint,
   distinct from the inverse), ``@`` composition, ``lower()``/
   ``compile()`` AOT.
+* :class:`Conv2D` / :class:`ProjectionFilter` -- the projection-domain
+  fusion surface: exact circular convolution and ``inv @ pointwise @
+  fwd`` compositions run as ONE fused kernel launch on pipeline-capable
+  backends (staged registry fallback elsewhere), with exact bilinear
+  autodiff (:mod:`repro.radon.fusion`).
 * :class:`config` -- ambient knob scopes (method/strip_rows/m_block/…).
 * :func:`retrace_guard` / :func:`trace_count` -- the zero-retrace
   serving property as an assertion.
@@ -44,13 +49,19 @@ from repro.core.plan import (Backend, RadonPlan, available_backends,
 from .ambient import CONFIG_KEYS, config, current_config
 from .autodiff import (RetraceError, reset_trace_counts, retrace_guard,
                        trace_count, trace_counts)
-from .operators import (DPRT, CompositeOperator, RadonOperator,
-                        aot_cache_clear, aot_cache_info, operator_for)
+from .fusion import flip_image, flip_lanes, pipeline_apply
+from .operators import (DPRT, CompositeOperator, Conv2D,
+                        FusedProjectionPipeline, ProjectionFilter,
+                        RadonOperator, aot_cache_clear, aot_cache_info,
+                        operator_for)
 
 __all__ = [
     # operators
-    "DPRT", "RadonOperator", "CompositeOperator", "operator_for",
+    "DPRT", "Conv2D", "ProjectionFilter", "FusedProjectionPipeline",
+    "RadonOperator", "CompositeOperator", "operator_for",
     "aot_cache_info", "aot_cache_clear",
+    # projection-domain fusion
+    "pipeline_apply", "flip_image", "flip_lanes",
     # ambient config
     "config", "current_config", "CONFIG_KEYS",
     # trace accounting

@@ -1,0 +1,176 @@
+"""Differentiable projection-pipeline appliers (the fused conv/filter path).
+
+:meth:`repro.core.plan.RadonPlan.pipeline` runs ``forward -> per-direction
+op -> inverse`` as one fused kernel launch on capable backends -- a raw
+``pallas_call`` JAX cannot transpose.  This module makes the *operation*
+differentiable anyway, exactly like :mod:`repro.radon.autodiff` does for
+the four plan datapaths: the pipeline is **bilinear** in the image and
+the operand, so its JVP is the sum of two linear terms, each staged
+through :func:`jax.custom_derivatives.linear_call` with an explicit
+transpose built from the same registry:
+
+* w.r.t. the image ``f`` (operand fixed): the transpose of circular
+  convolution is circular *correlation* -- the SAME fused pipeline with
+  the flipped operand (``flip(g)[x] = g[<-x>]``; in the projection
+  domain a lane flip, since ``R_{flip(g)}(m, d) = R_g(m, <-d>_N)``).
+  The pointwise ``"mul"`` pipeline transposes to
+  ``adjoint(w * inverse_adjoint(ct))`` -- the exact-adjoint plan
+  datapaths around the self-adjoint diagonal weight.
+* w.r.t. the operand (image fixed): commutativity (``f ** g = g ** f``)
+  gives the image-operand transpose as the flipped-image pipeline; the
+  projection/weight forms are per-direction correlations against
+  ``forward(f)`` around ``inverse_adjoint(ct)``.  Operands shared
+  across a batched plan sum their cotangent over the batch.
+
+Primal traffic pays nothing for this (no ``linear_call`` in an
+undifferentiated jaxpr), traces are counted per (plan, pipeline-op) in
+the same accounting as the plan datapaths, and cached appliers drop
+with plan-cache evictions (they live in the same store).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.custom_derivatives import SymbolicZero, linear_call
+
+from .autodiff import _CACHE_LOCK, _JITTED, _note_trace, apply_plan
+
+__all__ = ["pipeline_apply", "jitted_pipeline", "flip_image", "flip_lanes"]
+
+
+def flip_image(g: jnp.ndarray) -> jnp.ndarray:
+    """Torus flip: out[..., x, y] = g[..., <-x>_H, <-y>_W]."""
+    return jnp.roll(jnp.flip(g, (-2, -1)), (1, 1), (-2, -1))
+
+
+def flip_lanes(r: jnp.ndarray) -> jnp.ndarray:
+    """Lane flip: out[..., m, d] = r[..., m, <-d>_N] -- the projection-
+    domain image of :func:`flip_image` (R_{flip(g)}(m, d) = R_g(m, <-d>))."""
+    return jnp.roll(jnp.flip(r, -1), 1, -1)
+
+
+def _is_image_form(plan, wshape) -> bool:
+    p = plan.geometry.prime
+    return tuple(wshape[-2:]) == (p, p)
+
+
+def _sum_to_operand(ct_w: jnp.ndarray, wshape, wdtype) -> jnp.ndarray:
+    """An operand shared across a batched plan accumulates its cotangent
+    over the batch; also matches the linear input's dtype for
+    ``linear_call``'s transpose contract."""
+    while ct_w.ndim > len(wshape):
+        ct_w = ct_w.sum(axis=0)
+    return ct_w.astype(wdtype)
+
+
+def _transpose_f(plan, op: str, w, ct):
+    """ct_f = (d pipeline / d f)^T ct, built from registry datapaths."""
+    if op == "conv":
+        flip = flip_image(w) if _is_image_form(plan, w.shape) \
+            else flip_lanes(w)
+        out = plan.pipeline(ct, "conv", flip.astype(ct.dtype))
+    elif op == "mul":
+        out = apply_plan(plan, "adjoint",
+                         w.astype(ct.dtype)
+                         * apply_plan(plan, "inverse_adjoint", ct))
+    else:  # "none": (B A)^T = A^T B^T
+        out = apply_plan(plan, "adjoint",
+                         apply_plan(plan, "inverse_adjoint", ct))
+    return out.astype(ct.dtype)
+
+
+def _transpose_w(plan, op: str, f, wshape, wdtype, ct):
+    """ct_w = (d pipeline / d operand)^T ct.  Only the operand's aval
+    (shape/dtype) is captured, never the tangent tracer itself."""
+    if op == "conv" and _is_image_form(plan, wshape):
+        # commutativity: d/dg (f ** g) is h -> f ** h, whose transpose
+        # is the flipped-image pipeline again (fused on capable backends)
+        return _sum_to_operand(
+            plan.pipeline(ct, "conv", flip_image(f).astype(ct.dtype)),
+            wshape, wdtype)
+    bt = apply_plan(plan, "inverse_adjoint", ct)       # B^T ct, (…, P+1, P)
+    if op == "mul":
+        rf = apply_plan(plan, "forward", f.astype(ct.dtype))
+        return _sum_to_operand(rf * bt, wshape, wdtype)
+    # conv, projection-form operand: per-direction correlation
+    #   ct_rg[m, s] = sum_d (B^T ct)[m, d] * R_f[m, <d - s>]
+    from repro.core.conv import circ_conv1d_exact  # lazy: conv imports radon
+    rf = apply_plan(plan, "forward", f.astype(ct.dtype))
+    return _sum_to_operand(circ_conv1d_exact(bt, flip_lanes(rf)),
+                           wshape, wdtype)
+
+
+def _is_zero_tangent(t) -> bool:
+    if isinstance(t, SymbolicZero):
+        return True
+    return getattr(t, "dtype", None) == jax.dtypes.float0
+
+
+def jitted_pipeline(plan, op: str):
+    """The jitted, differentiable fused-pipeline callable for one
+    (plan, op): ``fn(f)`` for ``op="none"``, else ``fn(f, operand)``.
+    Cached in the same per-plan store as the datapath appliers, so
+    entries drop in lockstep with plan-cache evictions."""
+    key = (plan, ("pipeline", op))
+    with _CACHE_LOCK:
+        cached = _JITTED.get(key)
+    if cached is not None:
+        return cached
+
+    if op == "none":
+        @jax.custom_jvp
+        def apply(f):
+            _note_trace(plan, "pipeline:none", f)
+            return plan.pipeline(f, "none")
+
+        @apply.defjvp
+        def _jvp(primals, tangents):
+            (f,), (df,) = primals, tangents
+            tan = linear_call(lambda _r, v: plan.pipeline(v, "none"),
+                              lambda _r, ct: _transpose_f(plan, "none",
+                                                          None, ct),
+                              (), df)
+            return apply(f), tan
+    else:
+        @jax.custom_jvp
+        def apply(f, w):
+            _note_trace(plan, f"pipeline:{op}", f)
+            return plan.pipeline(f, op, w)
+
+        @apply.defjvp
+        def _jvp(primals, tangents):
+            (f, w), (df, dw) = primals, tangents
+            out = apply(f, w)
+            terms = []
+            # residuals are gradient-stopped: each bilinear term handles
+            # exactly one argument's tangent, and an un-stopped residual
+            # would make linear_call differentiate the raw kernel itself
+            if not _is_zero_tangent(df):
+                terms.append(linear_call(
+                    lambda w_, v: plan.pipeline(v, op, w_),
+                    lambda w_, ct: _transpose_f(plan, op, w_, ct),
+                    jax.lax.stop_gradient(w), df))
+            if not _is_zero_tangent(dw):
+                wshape, wdtype = tuple(dw.shape), dw.dtype
+                terms.append(linear_call(
+                    lambda f_, vw: plan.pipeline(f_, op, vw),
+                    lambda f_, ct: _transpose_w(plan, op, f_, wshape,
+                                                wdtype, ct),
+                    jax.lax.stop_gradient(f), dw))
+            tan = terms[0] if terms else jnp.zeros(out.shape, out.dtype)
+            for t in terms[1:]:
+                tan = tan + t
+            return out, tan
+
+    with _CACHE_LOCK:
+        return _JITTED.setdefault(key, jax.jit(apply))
+
+
+def pipeline_apply(plan, f: jnp.ndarray, op: str = "conv",
+                   operand: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Run the fused (or staged-fallback) projection pipeline of ``plan``
+    on ``f``: jitted, trace-counted, and exactly differentiable in both
+    the image and the operand."""
+    if op == "none":
+        return jitted_pipeline(plan, op)(f)
+    return jitted_pipeline(plan, op)(f, operand)

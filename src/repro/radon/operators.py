@@ -32,39 +32,57 @@ from repro.core.plan import RadonPlan, add_plan_evict_hook, get_plan
 from . import ambient
 from .autodiff import (_CACHE_LOCK, INVERSE_OF, TRANSPOSE_OF, jitted_apply,
                        trace_count)
+from .fusion import flip_image, pipeline_apply
 
-__all__ = ["DPRT", "RadonOperator", "CompositeOperator", "operator_for",
+__all__ = ["DPRT", "Conv2D", "ProjectionFilter", "RadonOperator",
+           "CompositeOperator", "operator_for",
            "aot_cache_info", "aot_cache_clear"]
 
-#: (plan, kind, dtype) -- or a tuple of (plan, kind) pairs for
-#: composites -- -> jax compiled executable; the per-geometry AOT cache
-#: behind ``op.compile()`` (and ``serve --warmup``).  Entries drop in
-#: lockstep with plan-cache evictions, like the jitted appliers.
+#: (plan, kind, dtype) -- or a tuple of per-operator key entries for
+#: composites (filter/conv entries are ("proj_filter"|"fused_mul"|
+#: "conv2d", …, id(array)) 4-tuples) -- -> jax compiled executable; the
+#: per-geometry AOT cache behind ``op.compile()`` (and
+#: ``serve --warmup``).  Entries drop in lockstep with plan-cache
+#: evictions, like the jitted appliers.
 _AOT_CACHE: dict = {}
+
+#: key -> arrays whose id() participates in the key.  Pinning them for
+#: the life of the cache entry keeps the id from being recycled by the
+#: allocator, so a dead weights array can never alias a live key.
+_AOT_PINS: dict = {}
 
 
 def _drop_plan_executables(plan) -> None:
     def involves(key) -> bool:
-        if isinstance(key[0], tuple):   # composite: ((plan, kind, dt), …)
-            return any(p == plan for p, _kind, _dt in key)
+        if isinstance(key[0], tuple):   # composite: one entry per operator
+            return any(plan in entry for entry in key)
         return key[0] == plan
     with _CACHE_LOCK:
         for key in [k for k in _AOT_CACHE if involves(k)]:
             del _AOT_CACHE[key]
+            _AOT_PINS.pop(key, None)
 
 
 add_plan_evict_hook(_drop_plan_executables)
 
 
+def _aot_key_label(key) -> str:
+    if isinstance(key[0], tuple):   # composite: one entry per operator
+        return "@".join(str(e[0] if isinstance(e[0], str) else e[1])
+                        for e in key)
+    return str(key[1])
+
+
 def aot_cache_info() -> dict:
     with _CACHE_LOCK:
         return {"currsize": len(_AOT_CACHE),
-                "keys": sorted(str(k[1]) for k in _AOT_CACHE)}
+                "keys": sorted(_aot_key_label(k) for k in _AOT_CACHE)}
 
 
 def aot_cache_clear() -> None:
     with _CACHE_LOCK:
         _AOT_CACHE.clear()
+        _AOT_PINS.clear()
 
 
 class RadonOperator:
@@ -134,11 +152,10 @@ class RadonOperator:
         return RadonOperator(self.plan, INVERSE_OF[self.kind], self.dtype)
 
     def __matmul__(self, other):
-        if isinstance(other, CompositeOperator):
-            return CompositeOperator((self,) + other.ops)
-        if isinstance(other, RadonOperator):
-            return CompositeOperator((self, other))
-        return NotImplemented
+        return _compose(self, other)
+
+    def _aot_key(self):
+        return (self.plan, self.kind, self.dtype_in.name)
 
     # -- AOT ---------------------------------------------------------------
     @property
@@ -229,12 +246,54 @@ class RadonOperator:
         return hash((self.plan, self.kind, self.dtype))
 
 
+def _compose(left, right):
+    """``left @ right``: flatten into one CompositeOperator (which then
+    recognizes fusible patterns)."""
+    if not (_is_operator_like(left) and _is_operator_like(right)):
+        return NotImplemented
+    lops = left.ops if isinstance(left, CompositeOperator) else (left,)
+    rops = right.ops if isinstance(right, CompositeOperator) else (right,)
+    return CompositeOperator(lops + rops)
+
+
+def _is_operator_like(x) -> bool:
+    return callable(x) and hasattr(x, "shape_in") and hasattr(x, "shape_out")
+
+
+def _fuse_ops(ops: Tuple) -> Tuple:
+    """Recognize ``inv @ pointwise @ fwd`` triples over one plan and
+    replace them with the fused projection pipeline (one kernel launch on
+    capable backends; staged fallback otherwise -- same dispatch rule as
+    everything else)."""
+    fused, i = [], 0
+    while i < len(ops):
+        a = ops[i]
+        if (i + 2 < len(ops)
+                and isinstance(a, RadonOperator) and a.kind == "inverse"
+                and isinstance(ops[i + 1], ProjectionFilter)
+                and isinstance(ops[i + 2], RadonOperator)
+                and ops[i + 2].kind == "forward"
+                and a.plan == ops[i + 2].plan
+                and tuple(ops[i + 1].weights.shape[-2:])
+                == tuple(a.plan.geometry.transform_shape[-2:])):
+            fused.append(FusedProjectionPipeline(
+                a.plan, ops[i + 1].weights, ops[i + 2].dtype))
+            i += 3
+        else:
+            fused.append(a)
+            i += 1
+    return tuple(fused)
+
+
 class CompositeOperator:
     """Right-to-left composition of operators: ``(g @ f)(x) == g(f(x))``.
 
     Supports the same algebra (``.T`` reverses and transposes,
     ``.inverse`` reverses and inverts) plus AOT lowering of the fused
-    pipeline.  Shape chaining is validated at construction.
+    pipeline.  Shape chaining is validated at construction, and
+    ``inverse @ ProjectionFilter @ forward`` triples over one plan are
+    rewritten into the fused projection-domain pipeline (a single kernel
+    launch on pipeline-capable backends).
     """
 
     __slots__ = ("ops",)
@@ -242,8 +301,10 @@ class CompositeOperator:
     def __init__(self, ops: Tuple):
         if not ops:
             raise ValueError("CompositeOperator needs at least one operator")
+        ops = _fuse_ops(tuple(ops))
         for outer, inner in zip(ops[:-1], ops[1:]):
-            if outer.shape_in != inner.shape_out:
+            if (outer.shape_in is not None and inner.shape_out is not None
+                    and outer.shape_in != inner.shape_out):
                 raise ValueError(
                     f"cannot compose {outer!r} after {inner!r}: "
                     f"{inner.shape_out} does not feed {outer.shape_in}")
@@ -279,27 +340,37 @@ class CompositeOperator:
             tuple(op.inverse for op in reversed(self.ops)))
 
     def __matmul__(self, other):
-        if isinstance(other, CompositeOperator):
-            return CompositeOperator(self.ops + other.ops)
-        if isinstance(other, RadonOperator):
-            return CompositeOperator(self.ops + (other,))
-        return NotImplemented
+        return _compose(self, other)
 
     def lower(self):
-        spec = jax.ShapeDtypeStruct(self.shape_in, self.dtype_in)
+        shape = self.shape_in
+        if shape is None:
+            # a shape-polymorphic input-side operator (ProjectionFilter):
+            # lower for its weights' own shape, the natural unbatched aval
+            inner = self.ops[-1]
+            weights = getattr(inner, "weights", None)
+            if weights is None:
+                raise ValueError(
+                    f"cannot AOT-lower a composite whose input operator "
+                    f"{inner!r} has no declared input shape")
+            shape = tuple(weights.shape)
+        spec = jax.ShapeDtypeStruct(shape, self.dtype_in)
         return jax.jit(self.__call__).lower(spec)
 
     def compile(self):
         # dtype is part of the key: plans are dtype-agnostic (equal
         # across dtypes of one geometry) but compiled executables are not
-        key = tuple((op.plan, op.kind, op.dtype_in.name)
-                    for op in self.ops)
+        key = tuple(op._aot_key() for op in self.ops)
+        pins = tuple(p for op in self.ops
+                     for p in getattr(op, "_aot_pins", lambda: ())())
         with _CACHE_LOCK:
             exe = _AOT_CACHE.get(key)
         if exe is None:
             built = self.lower().compile()
             with _CACHE_LOCK:
                 exe = _AOT_CACHE.setdefault(key, built)
+                if pins:    # keep id()-keyed arrays alive with the entry
+                    _AOT_PINS.setdefault(key, pins)
         return exe
 
     def as_matrix(self) -> jnp.ndarray:
@@ -318,6 +389,261 @@ class CompositeOperator:
 
     def __hash__(self):
         return hash(self.ops)
+
+
+class ProjectionFilter:
+    """Pointwise projection-domain filter: ``r -> weights * r``.
+
+    A diagonal (self-adjoint) linear operator on ``(…, P+1, P)``
+    projections.  On its own it is a plain elementwise multiply; its
+    value is in *composition*: ``op.inverse @ ProjectionFilter(w) @ op``
+    is recognized by :class:`CompositeOperator` and rewritten into the
+    fused projection-domain pipeline, so the filtered reconstruction
+    runs as ONE kernel launch on pipeline-capable backends (staged
+    fallback elsewhere).  Shape-polymorphic over leading batch dims
+    (``shape_in``/``shape_out`` are ``None`` wildcards for chaining).
+    """
+
+    __slots__ = ("weights",)
+
+    def __init__(self, weights):
+        weights = jnp.asarray(weights)
+        if weights.ndim not in (2, 3) or \
+                weights.shape[-2] != weights.shape[-1] + 1:
+            raise ValueError(
+                f"projection weights must be (…, P+1, P), "
+                f"got {weights.shape}")
+        object.__setattr__(self, "weights", weights)
+
+    def __setattr__(self, name, value):
+        raise AttributeError("ProjectionFilter is immutable")
+
+    shape_in = None   # polymorphic: any (…, P+1, P) matching the weights
+    shape_out = None
+
+    @property
+    def dtype_in(self):
+        return self.weights.dtype
+
+    def __call__(self, r: jnp.ndarray) -> jnp.ndarray:
+        return r * self.weights.astype(r.dtype)
+
+    @property
+    def T(self) -> "ProjectionFilter":
+        return self    # diagonal and real: self-adjoint
+
+    @property
+    def inverse(self):
+        raise TypeError(
+            "ProjectionFilter has no exact inverse (1/weights is not an "
+            "integer-exact operation); build the reciprocal filter "
+            "explicitly if that is what you mean")
+
+    def __matmul__(self, other):
+        return _compose(self, other)
+
+    def _aot_key(self):
+        return ("proj_filter", self.weights.shape,
+                self.weights.dtype.name, id(self.weights))
+
+    def _aot_pins(self):
+        return (self.weights,)
+
+    def __repr__(self) -> str:
+        return f"ProjectionFilter({self.weights.shape})"
+
+
+class FusedProjectionPipeline:
+    """``inverse @ ProjectionFilter @ forward`` collapsed onto one plan:
+    applied via the fused projection-domain pipeline (one kernel launch
+    on capable backends; staged registry fallback otherwise), with exact
+    autodiff through :mod:`repro.radon.fusion`."""
+
+    __slots__ = ("plan", "weights", "dtype")
+
+    def __init__(self, plan: RadonPlan, weights, dtype):
+        object.__setattr__(self, "plan", plan)
+        object.__setattr__(self, "weights", jnp.asarray(weights))
+        object.__setattr__(self, "dtype", jnp.dtype(dtype))
+
+    def __setattr__(self, name, value):
+        raise AttributeError("FusedProjectionPipeline is immutable")
+
+    @property
+    def shape_in(self):
+        return self.plan.geometry.image_shape
+
+    shape_out = property(lambda self: self.plan.geometry.image_shape)
+
+    @property
+    def dtype_in(self):
+        # same contract as the forward operator it swallowed: the fused
+        # pipeline consumes raw images of the plan's declared dtype (the
+        # fusion rewrite must not change a composite's input signature)
+        return jnp.dtype(self.dtype)
+
+    def __call__(self, f: jnp.ndarray) -> jnp.ndarray:
+        return pipeline_apply(self.plan, f, "mul", self.weights)
+
+    @property
+    def T(self):
+        """(B W A)^T = A^T W B^T: the exact-adjoint datapaths around the
+        self-adjoint filter (not itself a fusible pattern)."""
+        return CompositeOperator((
+            RadonOperator(self.plan, "adjoint", self.dtype),
+            ProjectionFilter(self.weights),
+            RadonOperator(self.plan, "inverse_adjoint", self.dtype)))
+
+    @property
+    def inverse(self):
+        raise TypeError(
+            "FusedProjectionPipeline (inverse @ filter @ forward) has no "
+            "exact inverse: the pointwise filter is not invertible in "
+            "exact arithmetic")
+
+    def __matmul__(self, other):
+        return _compose(self, other)
+
+    def _aot_key(self):
+        return ("fused_mul", self.plan, self.dtype.name, id(self.weights))
+
+    def _aot_pins(self):
+        return (self.weights,)
+
+    def __repr__(self) -> str:
+        return (f"FusedProjectionPipeline({self.shape_in}, "
+                f"method={self.plan.method!r})")
+
+
+class Conv2D:
+    """Exact circular 2-D convolution by a fixed kernel, as an operator.
+
+    ``Conv2D(shape, kernel)`` convolves ``(H, W)`` images (or
+    ``(B, H, W)`` stacks) with ``kernel`` on the ``(H, W)`` torus --
+    the paper's Sec. VI application surfaced as operator fusion.  On
+    square prime geometries the application is the fused projection-
+    domain pipeline (transform, per-direction 1-D convolution, and
+    inverse in ONE kernel launch on pipeline-capable backends); other
+    geometries fold the exact prime-embedded linear convolution onto
+    the torus.  ``jax.grad`` is exact in both the image and (via
+    ``kernel=``-differentiation) the kernel, through every backend.
+
+    ``op.T`` is the exact adjoint -- circular *correlation*, i.e.
+    convolution by the flipped kernel.  ``as_matrix()`` materializes the
+    dense circulant for small-N tests.
+    """
+
+    __slots__ = ("plan", "kernel", "dtype")
+
+    def __init__(self, shape, kernel, dtype=None, method: Optional[str] = None,
+                 *, strip_rows: Optional[int] = None,
+                 m_block: Optional[int] = None,
+                 batch_impl: Optional[str] = None,
+                 block_rows: Optional[int] = None,
+                 block_batch: Optional[int] = None,
+                 mesh=None):
+        kernel = jnp.asarray(kernel)
+        shape = tuple(int(s) for s in shape)
+        h, w = shape[-2:]
+        if kernel.ndim != 2 or kernel.shape[0] > h or kernel.shape[1] > w:
+            raise ValueError(
+                f"kernel must be 2-D and fit the {shape[-2:]} torus, "
+                f"got {kernel.shape}")
+        if dtype is None:
+            dtype = kernel.dtype
+        # the kernel lives zero-padded on the full (H, W) torus
+        kernel = jnp.pad(kernel.astype(dtype),
+                         ((0, h - kernel.shape[0]), (0, w - kernel.shape[1])))
+        plan = DPRT(shape, dtype, method, strip_rows=strip_rows,
+                    m_block=m_block, batch_impl=batch_impl,
+                    block_rows=block_rows, block_batch=block_batch,
+                    mesh=mesh).plan
+        object.__setattr__(self, "plan", plan)
+        object.__setattr__(self, "kernel", kernel)
+        object.__setattr__(self, "dtype", jnp.dtype(dtype))
+
+    def __setattr__(self, name, value):
+        raise AttributeError("Conv2D is immutable")
+
+    @property
+    def shape_in(self):
+        return self.plan.geometry.image_shape
+
+    shape_out = property(lambda self: self.plan.geometry.image_shape)
+
+    @property
+    def dtype_in(self):
+        return self.dtype
+
+    @property
+    def dtype_out(self):
+        return jnp.dtype(accum_dtype_for(self.dtype))
+
+    def __call__(self, f: jnp.ndarray) -> jnp.ndarray:
+        g = self.plan.geometry
+        if g.native:
+            return pipeline_apply(self.plan, f, "conv", self.kernel)
+        # non-native: the true (H, W)-torus convolution = fold of the
+        # exact linear convolution (conv.py routes its DPRT stages
+        # through the same differentiable pipeline appliers).  The
+        # plan's remaining knobs (mesh, batch/blocking) travel via an
+        # ambient scope: conv resolves them eagerly per call.
+        from repro.core.conv import circ_conv2d_dprt  # lazy: conv -> radon
+        with ambient.config(mesh=self.plan.mesh,
+                            batch_impl=self.plan.batch_impl,
+                            block_rows=self.plan.block_rows,
+                            block_batch=self.plan.block_batch):
+            return circ_conv2d_dprt(f, self.kernel,
+                                    method=self.plan.method,
+                                    strip_rows=self.plan.strip_rows,
+                                    m_block=self.plan.m_block)
+
+    @property
+    def T(self) -> "Conv2D":
+        """Circular correlation: convolution by the torus-flipped kernel
+        (same plan knobs, blocking/batching included)."""
+        return Conv2D(self.shape_in, flip_image(self.kernel), self.dtype,
+                      self.plan.method, strip_rows=self.plan.strip_rows,
+                      m_block=self.plan.m_block,
+                      batch_impl=self.plan.batch_impl,
+                      block_rows=self.plan.block_rows,
+                      block_batch=self.plan.block_batch,
+                      mesh=self.plan.mesh)
+
+    def __matmul__(self, other):
+        return _compose(self, other)
+
+    @property
+    def inverse(self):
+        raise TypeError(
+            "Conv2D has no exact inverse (deconvolution is not an "
+            "integer-exact operation)")
+
+    def as_matrix(self) -> jnp.ndarray:
+        """Dense (H*W, H*W) circulant of this convolution (small N)."""
+        size = 1
+        for s in self.shape_in:
+            size *= s
+        basis = jnp.eye(size, dtype=self.dtype)
+        cols = jax.vmap(lambda e: self(e.reshape(self.shape_in)).ravel())(
+            basis)
+        return cols.T
+
+    def _aot_key(self):
+        return ("conv2d", self.plan, self.dtype.name, id(self.kernel))
+
+    def _aot_pins(self):
+        return (self.kernel,)
+
+    def describe(self) -> dict:
+        d = dict(self.plan.describe())
+        d.update(kind="conv2d", kernel_shape=tuple(self.kernel.shape),
+                 pipeline=self.plan.backend.pipeline is not None)
+        return d
+
+    def __repr__(self) -> str:
+        return (f"Conv2D({self.shape_in}, kernel={self.kernel.shape}, "
+                f"{self.dtype.name}, method={self.plan.method!r})")
 
 
 # operators cross jit boundaries as zero-leaf pytrees, like their plans

@@ -81,6 +81,33 @@ def run(run_bench: bool = False) -> int:
             ok &= _check(f"{name}: grad == explicit adjoint",
                          bool((grad == want).all()))
 
+    # fused projection pipeline: one conv plan per capable backend --
+    # fused must equal staged bit-exactly, and the delta kernel's
+    # convolution pipeline must be the identity (a full fused
+    # transform -> 1-D conv -> inverse round trip)
+    from repro.core.conv import circ_conv2d_dprt
+    kern = jnp.asarray(rng.integers(0, 16, (_N, _N)), jnp.int32)
+    delta = jnp.zeros((_N, _N), jnp.int32).at[0, 0].set(1)
+    for name in available_backends():
+        be = get_backend(name)
+        if be.pipeline is None or be.mesh_aware:
+            continue
+        fused = circ_conv2d_dprt(img_i, kern, method=name)
+        staged = circ_conv2d_dprt(img_i, kern, method=name, fuse=False)
+        ok &= _check(f"{name}: fused conv pipeline == staged (bit-exact)",
+                     bool((fused == staged).all()))
+        ok &= _check(f"{name}: delta-kernel conv pipeline is identity",
+                     bool((circ_conv2d_dprt(img_i, delta, method=name)
+                           == img_i).all()))
+    if len(jax.devices()) > 1:
+        mesh = jax.make_mesh((len(jax.devices()),), ("model",))
+        with config(mesh=mesh):
+            fused = circ_conv2d_dprt(img_i, kern, method="sharded_pallas")
+            staged = circ_conv2d_dprt(img_i, kern, method="sharded_pallas",
+                                      fuse=False)
+        ok &= _check("sharded_pallas: fused conv pipeline == staged",
+                     bool((fused == staged).all()))
+
     # one trace per geometry, enforced
     op = DPRT(img_i.shape, img_i.dtype)
     op(img_i)  # first trace happens outside the guard

@@ -24,6 +24,15 @@ except ImportError:
     sys.modules["hypothesis.strategies"] = _shim.strategies
 
 
+def pytest_configure(config):
+    # Quick tier: `pytest -m "not slow"` skips the forced-host subprocess
+    # tests (each spawns a fresh 8-device python, ~10-60 s apiece).
+    config.addinivalue_line(
+        "markers",
+        "slow: forced-host subprocess tests (sharded meshes, int64-x64); "
+        "deselect with -m 'not slow' for the quick tier")
+
+
 def run_subprocess(code: str, devices: int = 8, timeout: int = 600,
                    extra_env=None):
     """Run python code in a fresh process with N fake host devices.

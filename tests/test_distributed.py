@@ -3,6 +3,10 @@ DPRT (legacy Horner and per-shard fused-Pallas paths), compressed
 collectives, mesh training, elastic restore."""
 import pytest
 
+# every test here spawns a forced-host multi-device
+# subprocess; `-m "not slow"` is the quick tier
+pytestmark = pytest.mark.slow
+
 
 def test_sharded_dprt_exact(subproc):
     subproc("""
@@ -233,4 +237,56 @@ for s in jax.tree.leaves(zs):
     n_data_sharded += "data" in axes
 assert n_data_sharded > 0, "ZeRO-1 sharded nothing"
 print("OK", n_data_sharded, "leaves data-sharded")
+""")
+
+
+def test_sharded_projection_pipeline_conv(subproc):
+    """Fused conv pipeline on a mesh: per-shard forward kernel, ONE
+    psum_scatter between forward and inverse, per-shard tail kernel,
+    final psum -- bit-exact vs the staged path and the dense oracle,
+    on 1-D and 2-D meshes, via the registry."""
+    subproc("""
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core.distributed import projection_pipeline_sharded
+from repro.core.conv import circ_conv2d_dprt, circ_conv2d_direct
+from repro import radon
+
+rng = np.random.default_rng(0)
+n = 13
+f = jnp.asarray(rng.integers(0, 30, (n, n)), jnp.int32)
+g = jnp.asarray(rng.integers(0, 9, (n, n)), jnp.int32)
+want = np.asarray(circ_conv2d_direct(f, g))
+
+mesh = jax.make_mesh((8,), ("model",))
+out = projection_pipeline_sharded(f, mesh, "conv", g)
+np.testing.assert_array_equal(np.asarray(out, np.int64), want)
+
+# 2-D mesh, non-divisible batch, shared AND per-image operands
+mesh2 = jax.make_mesh((2, 4), ("data", "model"))
+fb = jnp.asarray(rng.integers(0, 30, (5, n, n)), jnp.int32)
+outb = projection_pipeline_sharded(fb, mesh2, "conv", g)
+gb = jnp.asarray(rng.integers(0, 9, (5, n, n)), jnp.int32)
+outbb = projection_pipeline_sharded(fb, mesh2, "conv", gb)
+for i in range(5):
+    np.testing.assert_array_equal(
+        np.asarray(outb[i], np.int64),
+        np.asarray(circ_conv2d_direct(fb[i], g)))
+    np.testing.assert_array_equal(
+        np.asarray(outbb[i], np.int64),
+        np.asarray(circ_conv2d_direct(fb[i], gb[i])))
+
+# registry route under an ambient mesh: fused == staged bit-exactly
+with radon.config(mesh=mesh):
+    fused = circ_conv2d_dprt(f, g)            # auto -> sharded_pallas
+    staged = circ_conv2d_dprt(f, g, fuse=False)
+np.testing.assert_array_equal(np.asarray(fused), np.asarray(staged))
+np.testing.assert_array_equal(np.asarray(fused, np.int64), want)
+
+# pointwise pipeline under the mesh (all-ones == round trip)
+w = jnp.ones((n + 1, n), jnp.int32)
+np.testing.assert_array_equal(
+    np.asarray(projection_pipeline_sharded(f, mesh, "mul", w)),
+    np.asarray(f))
+print("SHARDED_PIPELINE_OK")
 """)

@@ -184,6 +184,7 @@ def test_float32_roundtrip_close():
     np.testing.assert_allclose(back, f, rtol=1e-5, atol=1e-4)
 
 
+@pytest.mark.slow
 def test_int64_accumulator_survives_x64(subproc):
     """The fused inverse must keep int64 inputs in int64 (the seed's
     idprt_pallas cast S and R(N, i) to int32 unconditionally)."""

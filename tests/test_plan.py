@@ -235,6 +235,7 @@ def test_transforms_share_the_plan_cache():
 # ---------------------------------------------------------------------------
 # sharded backend through the registry (fake multi-device subprocess)
 # ---------------------------------------------------------------------------
+@pytest.mark.slow
 def test_sharded_backend_via_registry(subproc):
     subproc("""
 import numpy as np, jax, jax.numpy as jnp

@@ -157,6 +157,7 @@ def test_grad_through_embedded_geometry():
     np.testing.assert_array_equal(grad, full[:4, :6])
 
 
+@pytest.mark.slow
 def test_sharded_backend_grad_exact(subproc):
     """The acceptance bar says EVERY registered backend: the shard_map
     path's grad must hit the exact adjoint too (fake 8-device host)."""

@@ -78,6 +78,7 @@ def test_dryrun_artifacts_complete():
     assert len(skips) == 16
 
 
+@pytest.mark.slow
 def test_dryrun_production_mesh_one_cell(subproc):
     """Actually build the 16x16 production mesh (256 fake devices) and
     compile one full-config cell in-process -- deliverable (e) smoke."""
