@@ -1,0 +1,212 @@
+"""Streamed-strip SFDPRT kernels and the direction-sharded collectives.
+
+Three questions, answered with committed rows:
+
+1. What does in-launch streaming cost when you DON'T need it?
+   ``stream/dprt_n1021_stream`` vs ``stream/dprt_n1021_whole``: the
+   N=1021 single image fits the whole-image kernel, so the streamed
+   kernel's VMEM-scratch accumulation + final flush is pure overhead --
+   the acceptance bound is 1.15x.
+2. Does the giant-N geometry actually run?  ``stream/roundtrip_n2053_
+   stream``: N=2053 forward + inverse through ONE pallas_call each
+   (min-of-1: a multi-second deterministic row, noise is compile-shaped
+   not scheduler-shaped).
+3. Do the direction-sharded collectives beat the all-directions psum
+   assembly?  ``sharded_stream/assembly_{psum8,dirsharded8}``: the
+   assembly collective itself, isolated on realistic per-shard
+   ``(B, N+1, N)`` int32 partials through the production
+   ``_reduce_partial`` helper -- old layout (psum replicates the full
+   output to every device, 8x the bytes written) vs new (psum_scatter,
+   each device keeps only its direction shard).  The full forced-host
+   round trip is compute-dominated (the per-shard kernels dwarf either
+   collective, so psum-vs-scatter is a coin flip end to end on shared
+   memory); the isolated collective is where the layout's byte savings
+   are measurable on this host, and the committed speedup is what real
+   multi-host wires amplify.  ``sharded_stream/roundtrip_dirsharded8``
+   additionally times the default-layout round trip end to end, and
+   the subprocess asserts BOTH layouts round-trip bit-exactly first.
+
+The sharded rows run in a fresh ``--xla_force_host_platform_device_
+count=8`` subprocess (same pattern and SKIP semantics as
+``bench_dprt_sharded``; rows carry ``devices=8`` so the guard skips
+them where the mesh cannot be reproduced).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+import jax
+import numpy as np
+
+from .common import emit, time_jax
+
+N_STREAM = 1021
+N_GIANT = 2053
+# N+1 = 312 = 8*39: the direction shards divide the 8-device axis with
+# no padding, so the assembly comparison is pure collective, not pad copy
+N_SHARDED = 311
+BATCH = 16
+DEVICES = 8
+
+_SUBPROC = r"""
+import json, time
+import numpy as np, jax, jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from repro.core.distributed import (_reduce_partial, _shard_map,
+                                    dprt_sharded_pallas,
+                                    idprt_sharded_pallas)
+
+n, batch, devs = %(n)d, %(batch)d, 8
+mesh = jax.make_mesh((devs,), ("model",))
+rng = np.random.default_rng(0)
+fb = jnp.asarray(rng.integers(0, 256, (batch, n, n)), jnp.int32)
+
+def roundtrip(reduce):
+    def rt(x):
+        r = dprt_sharded_pallas(x, mesh, reduce=reduce)
+        return idprt_sharded_pallas(r, mesh, reduce=reduce)
+    return jax.jit(rt)
+
+# functional gate: BOTH layouts must round-trip bit-exactly
+dirsharded = roundtrip("psum_scatter")
+assert (np.asarray(roundtrip("psum")(fb)) == np.asarray(fb)).all()
+assert (np.asarray(dirsharded(fb)) == np.asarray(fb)).all()
+
+# the assembly collective, isolated: realistic (B, N+1, N) int32
+# per-shard partials through the production _reduce_partial helper
+part = jnp.asarray(rng.integers(0, 1 << 20, (batch, n + 1, n)), jnp.int32)
+
+def assembly(reduce):
+    def local(p):
+        p = p + jax.lax.axis_index("model")  # distinct per-device partials
+        return _reduce_partial(p, "model", devs, n + 1, n + 1, reduce)
+    row = None if reduce == "psum" else "model"
+    return jax.jit(_shard_map(local, mesh, in_specs=P(None, None, None),
+                              out_specs=P(None, row, None)))
+
+fns = {"psum": assembly("psum"), "dirsharded": assembly("psum_scatter")}
+
+def percall_min(fn, *args, iters=20):
+    jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return min(ts) * 1e6
+
+# alternate the two layouts (3 rounds) so load noise hits both equally
+rows = {"psum": [], "dirsharded": []}
+for _ in range(3):
+    for k, f in fns.items():
+        rows[k].append(percall_min(f, part, iters=30))
+rows = {k: min(v) for k, v in rows.items()}
+rows["roundtrip"] = percall_min(dirsharded, fb, iters=10)
+print("BENCH_JSON:" + json.dumps(rows))
+"""
+
+
+def _local_rows() -> None:
+    import jax.numpy as jnp
+    from repro.core.plan import get_plan
+
+    rng = np.random.default_rng(0)
+    f = jnp.asarray(rng.integers(0, 256, (N_STREAM, N_STREAM)), jnp.int32)
+    whole = get_plan(f.shape, f.dtype, "pallas")
+    stream = get_plan(f.shape, f.dtype, "pallas", stream_rows=256)
+    fw = jax.jit(whole.forward)
+    fs = jax.jit(stream.forward)
+    assert (np.asarray(fw(f)) == np.asarray(fs(f))).all()
+    # alternate so load noise hits both kernels equally
+    tw = time_jax(fw, f, iters=10, stat="min")
+    ts = time_jax(fs, f, iters=10, stat="min")
+    tw = min(tw, time_jax(fw, f, iters=10, stat="min"))
+    ts = min(ts, time_jax(fs, f, iters=10, stat="min"))
+    emit(f"stream/dprt_n{N_STREAM}_whole", tw,
+         "whole-image fused kernel (single pallas_call)",
+         method="pallas", n=N_STREAM, batch=1)
+    emit(f"stream/dprt_n{N_STREAM}_stream", ts,
+         f"streamed strips, ONE launch; vs_whole=x{ts / tw:.2f} "
+         f"(acceptance <= 1.15)",
+         method="pallas", n=N_STREAM, batch=1)
+
+    g = jnp.asarray(rng.integers(0, 256, (N_GIANT, N_GIANT)), jnp.int32)
+    plan = get_plan(g.shape, g.dtype, "pallas", stream_rows=256)
+
+    def roundtrip(x):
+        return plan.inverse(plan.forward(x))
+
+    rt = jax.jit(roundtrip)
+    assert (np.asarray(rt(g)) == np.asarray(g)).all()  # also the warmup
+    t0 = time.perf_counter()
+    jax.block_until_ready(rt(g))
+    emit(f"stream/roundtrip_n{N_GIANT}_stream",
+         (time.perf_counter() - t0) * 1e6,
+         "giant-N streamed forward+inverse, one pallas_call each "
+         "(min-of-1: deterministic multi-second row)",
+         method="pallas", n=N_GIANT, batch=1, guard_tol=2.0)
+
+
+def _sharded_rows() -> None:
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=8").strip()
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = (os.path.join(repo, "src") + os.pathsep
+                         + env.get("PYTHONPATH", ""))
+    code = _SUBPROC % {"n": N_SHARDED, "batch": BATCH}
+    try:
+        r = subprocess.run([sys.executable, "-c", code],
+                           capture_output=True, text=True, cwd=repo,
+                           timeout=1800, env=env)
+    except (OSError, subprocess.TimeoutExpired) as e:
+        print(f"# skip sharded_stream rows: subprocess failed ({e})",
+              file=sys.stderr)
+        return
+    if r.returncode != 0:
+        print(f"# skip sharded_stream rows: subprocess exited "
+              f"{r.returncode}\n"
+              f"# {r.stderr.strip().splitlines()[-1] if r.stderr else ''}",
+              file=sys.stderr)
+        return
+    payload = next((line[len("BENCH_JSON:"):]
+                    for line in r.stdout.splitlines()
+                    if line.startswith("BENCH_JSON:")), None)
+    if payload is None:
+        print("# skip sharded_stream rows: no payload from subprocess",
+              file=sys.stderr)
+        return
+    t = json.loads(payload)
+    psum, dirs = t["psum"], t["dirsharded"]
+    emit(f"sharded_stream/assembly_psum{DEVICES}/N{N_SHARDED}", psum,
+         f"B={BATCH} all-directions psum assembly: full (N+1,N) output "
+         f"replicated to every device (old layout)",
+         method="sharded_pallas", n=N_SHARDED, batch=BATCH, devices=DEVICES)
+    emit(f"sharded_stream/assembly_dirsharded{DEVICES}/N{N_SHARDED}", dirs,
+         f"B={BATCH} direction-sharded psum_scatter: each device keeps "
+         f"its shard; speedup_vs_psum={psum / dirs:.2f}",
+         method="sharded_pallas", n=N_SHARDED, batch=BATCH, devices=DEVICES)
+    emit(f"sharded_stream/roundtrip_dirsharded{DEVICES}/N{N_SHARDED}",
+         t["roundtrip"],
+         f"B={BATCH} default-layout round trip (direction-sharded forward, "
+         f"inverse consuming shards in place; both layouts asserted exact)",
+         method="sharded_pallas", n=N_SHARDED, batch=BATCH, devices=DEVICES)
+
+
+def main() -> None:
+    _local_rows()
+    if jax.default_backend() != "cpu":
+        print("# skip sharded_stream rows: forced-host mesh bench is "
+              f"CPU-only (current backend: {jax.default_backend()})",
+              file=sys.stderr)
+        return
+    _sharded_rows()
+
+
+if __name__ == "__main__":
+    main()

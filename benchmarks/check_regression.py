@@ -165,12 +165,14 @@ def main(argv=None) -> None:
                     help="baseline JSON (default: repo BENCH_dprt.json)")
     args = ap.parse_args(argv)
 
-    from . import bench_conv, bench_dprt_impl, bench_dprt_sharded
+    from . import (bench_conv, bench_dprt_impl, bench_dprt_sharded,
+                   bench_stream)
     start = len(common.ROWS)
     print("name,us_per_call,derived")
     bench_dprt_impl.main()
     bench_conv.main()           # staged-vs-fused projection pipelines
     bench_dprt_sharded.main()   # warns + emits nothing where unavailable
+    bench_stream.main()         # streamed-strip + direction-sharded rows
     fresh = [r for r in common.ROWS[start:]
              if r["name"].startswith(common.BENCH_PREFIXES)]
     raise SystemExit(run_guard(fresh, args.baseline, args.tol))

@@ -18,9 +18,10 @@ BENCH_DPRT_PATH = os.path.join(
     "BENCH_dprt.json")
 
 #: row-name prefixes folded into (and regressed against) the baseline
-#: artifact: the DPRT implementation shoot-out plus the projection-
-#: pipeline conv/DFT rows.
-BENCH_PREFIXES = ("dprt_impl/", "conv/", "dft/")
+#: artifact: the DPRT implementation shoot-out, the projection-pipeline
+#: conv/DFT rows, and the streamed-strip / direction-sharded rows.
+BENCH_PREFIXES = ("dprt_impl/", "conv/", "dft/", "stream/",
+                  "sharded_stream/")
 
 
 def emit(name: str, us_per_call: float, derived: str = "", **extra) -> None:

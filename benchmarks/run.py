@@ -28,14 +28,15 @@ def main(argv=None) -> None:
     from . import (table1_forward_cycles, table2_inverse_cycles,
                    table3_resources, fig17_runtime_vs_n, fig19_20_pareto,
                    bench_conv, bench_dprt_impl, bench_dprt_sharded,
-                   bench_lm_step, roofline_report, check_regression, common)
+                   bench_stream, bench_lm_step, roofline_report,
+                   check_regression, common)
 
     print("name,us_per_call,derived")
     failed = []
     for mod in [table1_forward_cycles, table2_inverse_cycles,
                 table3_resources, fig17_runtime_vs_n, fig19_20_pareto,
                 bench_conv, bench_dprt_impl, bench_dprt_sharded,
-                bench_lm_step, roofline_report]:
+                bench_stream, bench_lm_step, roofline_report]:
         try:
             mod.main()
         except Exception:

@@ -8,10 +8,21 @@ alignment roll, and the partial results are combined with one
 collective:
 
 * ``psum``          -> every device holds the full (N+1, N) transform
-                       (MEM_OUT replicated), or
+                       (MEM_OUT replicated),
 * ``psum_scatter``  -> each device keeps only its slice of directions
                        (MEM_OUT sharded; 1/devices the collective bytes,
-                       the beyond-paper option used by the perf pass).
+                       the beyond-paper option used by the perf pass), or
+* ``ring``          -> the same direction-sharded result built from an
+                       explicit ``ppermute`` (collective_permute) ring:
+                       devices exchange one direction chunk per step and
+                       accumulate in place, so per-step wire volume is
+                       O(N^2 / devices) and never the full transform.
+
+The ``sharded_pallas`` forward now *defaults* to the direction-sharded
+layout (``psum_scatter``), and the inverse consumes that layout in
+place: its row super-strips are the forward's direction shards
+(``ceil((N+1)/devices)`` rows per device, global rows >= N masked
+in-shard), so a forward -> inverse round trip re-shards nothing.
 
 Image *batches* shard over the data axes on top of this (2-D
 ``data x model`` meshes: batch shards over ``data``, row super-strips
@@ -61,7 +72,7 @@ __all__ = [
     "batch_partition_spec",
 ]
 
-Reduce = Literal["psum", "psum_scatter"]
+Reduce = Literal["psum", "psum_scatter", "ring"]
 
 #: axes a batch may shard over (leading mesh axes of the standard
 #: production meshes); the row super-strips take the remaining axis.
@@ -115,7 +126,7 @@ def _skew_sum_local(g_local: jnp.ndarray, n: int, sign: int, axis: str,
     """Partial skew-sum of this device's row block, aligned to global rows."""
     r = jax.lax.axis_index(axis)
     u = strip_partial(g_local, n, sign=sign,
-                      acc_dtype=accum_dtype_for(g_local.dtype))
+                      acc_dtype=accum_dtype_for(g_local.dtype, n))
     return align_partial(u, r * rows_per_dev, sign=sign)
 
 
@@ -156,7 +167,7 @@ def dprt_sharded(f: jnp.ndarray, mesh: Mesh, axis: str = "model",
     if not is_prime(n):
         raise ValueError(f"DPRT needs prime N, got {n}")
     core = _skew_sum_sharded(f, mesh, axis, reduce, sign=1)
-    last = f.astype(accum_dtype_for(f.dtype)).sum(axis=1)
+    last = f.astype(accum_dtype_for(f.dtype, n)).sum(axis=1)
     return jnp.concatenate([core, last[None, :]], axis=0)
 
 
@@ -166,7 +177,7 @@ def idprt_sharded(r: jnp.ndarray, mesh: Mesh, axis: str = "model",
     n = r.shape[1]
     if r.shape[0] != n + 1 or not is_prime(n):
         raise ValueError(f"iDPRT input must be (N+1, N), N prime: {r.shape}")
-    acc = accum_dtype_for(r.dtype)
+    acc = accum_dtype_for(r.dtype, n)
     z = _skew_sum_sharded(r[:n], mesh, axis, reduce, sign=-1)
     s = r[0].astype(acc).sum()
     num = z - s + r[n].astype(acc)[:, None]
@@ -226,6 +237,52 @@ def idprt_batch_sharded(rb: jnp.ndarray, mesh: Mesh,
 # ---------------------------------------------------------------------------
 # "sharded_pallas" backend: per-shard fused SFDPRT kernel + one collective
 # ---------------------------------------------------------------------------
+def _ring_reduce_scatter(part: jnp.ndarray, axis: str,
+                         devs: int) -> jnp.ndarray:
+    """Reduce-scatter ``part`` over its row dim (-2) with an explicit
+    ``ppermute`` ring instead of ``psum_scatter``.
+
+    Device r ends holding the fully reduced chunk r (identical layout to
+    ``psum_scatter(..., tiled=True)``).  Each of the devs-1 steps moves
+    ONE chunk (rows/devs of the partial) to the right neighbour and
+    accumulates the local contribution for the chunk's eventual owner --
+    per-step wire volume is O(N^2 / devs), never the whole transform,
+    which is the layout the giant-N streamed kernels need to keep
+    per-host memory flat.  Rows of ``part`` must be a devs multiple.
+    """
+    if devs == 1:
+        return part
+    rows = part.shape[-2] // devs
+    r = jax.lax.axis_index(axis)
+
+    def chunk(i):
+        return jax.lax.dynamic_slice_in_dim(part, i * rows, rows, axis=-2)
+
+    perm = [(d, (d + 1) % devs) for d in range(devs)]
+    buf = chunk((r - 1) % devs)
+    for t in range(devs - 1):
+        buf = jax.lax.ppermute(buf, axis, perm)
+        buf = buf + chunk((r - t - 2) % devs)
+    return buf
+
+
+def _reduce_partial(part: jnp.ndarray, axis: str, devs: int,
+                    out_rows: int, out_pad: int,
+                    reduce: str) -> jnp.ndarray:
+    """Apply the configured collective to a per-device partial."""
+    if reduce == "psum":
+        return jax.lax.psum(part, axis)
+    ppad = [(0, 0)] * part.ndim
+    ppad[-2] = (0, out_pad - out_rows)
+    part = jnp.pad(part, ppad)
+    if reduce == "ring":
+        return _ring_reduce_scatter(part, axis, devs)
+    return jax.lax.psum_scatter(part, axis,
+                                scatter_dimension=part.ndim - 2,
+                                tiled=True)
+
+
+
 def _shard_layout(g: jnp.ndarray, mesh: Mesh, axis: Optional[str],
                   batch_axes: Optional[tuple]) -> tuple:
     """The single convention point for laying a (…, rows, N) input onto
@@ -251,14 +308,18 @@ def _shard_layout(g: jnp.ndarray, mesh: Mesh, axis: Optional[str],
 @functools.partial(jax.jit,
                    static_argnames=("mesh", "mode", "sign", "axis",
                                     "batch_axes", "reduce", "strip_rows",
-                                    "m_block"))
+                                    "m_block", "stream_rows",
+                                    "mask_rows_from"))
 def _sharded_pallas_partials(g: jnp.ndarray, mesh: Mesh, mode: str = "core",
                              sign: int = 1,
                              axis: Optional[str] = None,
                              batch_axes: Optional[tuple] = None,
                              reduce: Reduce = "psum",
                              strip_rows: Optional[int] = None,
-                             m_block: Optional[int] = None) -> jnp.ndarray:
+                             m_block: Optional[int] = None,
+                             stream_rows: Optional[int] = None,
+                             mask_rows_from: Optional[int] = None
+                             ) -> jnp.ndarray:
     """Shared mesh datapath: per-device fused kernel + one collective.
 
     Rows of ``g`` (…, rows, N) shard over the mesh's row axis, a batch
@@ -270,8 +331,16 @@ def _sharded_pallas_partials(g: jnp.ndarray, mesh: Mesh, mode: str = "core",
     the bare skew-sum partial; ``mode="forward"`` additionally fuses
     the R(N, d) row-sum epilogue in-kernel at global lane positions, so
     the full forward transform is exactly one kernel + one collective.
-    One ``psum`` (replicated MEM_OUT) or ``psum_scatter`` (output rows
-    stay sharded over the row axis) assembles eq. 8.
+    One ``psum`` (replicated MEM_OUT), ``psum_scatter`` (output rows
+    stay sharded over the row axis) or ``ring`` (same sharded layout via
+    an explicit ppermute ring) assembles eq. 8.
+
+    ``stream_rows`` engages the in-launch streamed strip kernel on each
+    shard (still one pallas_call per device; the shard's rows stream
+    HBM -> VMEM inside it).  ``mask_rows_from`` zeroes global input rows
+    >= the bound in-shard BEFORE the kernel -- how the inverse consumes
+    a direction-sharded (dirs-padded) forward layout in place without a
+    global slice-and-reshard.
     """
     from repro.kernels.ops import (dprt_pallas_strip,  # no import cycle
                                    skew_sum_pallas_strip)
@@ -287,21 +356,19 @@ def _sharded_pallas_partials(g: jnp.ndarray, mesh: Mesh, mode: str = "core",
     def local(gl):
         r = jax.lax.axis_index(axis)
         off = r * rows_per_dev
+        if mask_rows_from is not None:
+            keep = (off + jnp.arange(gl.shape[-2]) < mask_rows_from)
+            gl = jnp.where(keep[:, None], gl, jnp.zeros((), gl.dtype))
         if mode == "forward":
             part = dprt_pallas_strip(gl, row_offset=off,
-                                     strip_rows=strip_rows, m_block=m_block)
+                                     strip_rows=strip_rows, m_block=m_block,
+                                     stream_rows=stream_rows)
         else:
             part = skew_sum_pallas_strip(gl, sign, row_offset=off,
                                          strip_rows=strip_rows,
-                                         m_block=m_block)
-        if reduce == "psum":
-            return jax.lax.psum(part, axis)
-        ppad = [(0, 0)] * part.ndim
-        ppad[-2] = (0, out_pad - out_rows)
-        part = jnp.pad(part, ppad)
-        return jax.lax.psum_scatter(part, axis,
-                                    scatter_dimension=part.ndim - 2,
-                                    tiled=True)
+                                         m_block=m_block,
+                                         stream_rows=stream_rows)
+        return _reduce_partial(part, axis, devs, out_rows, out_pad, reduce)
 
     bspec = (_bspec(baxes),) if batched else ()
     row_spec = None if reduce == "psum" else axis
@@ -317,46 +384,64 @@ def skew_sum_sharded_pallas(g: jnp.ndarray, mesh: Mesh, sign: int = 1,
                             batch_axes: Optional[tuple] = None,
                             reduce: Reduce = "psum",
                             strip_rows: Optional[int] = None,
-                            m_block: Optional[int] = None) -> jnp.ndarray:
+                            m_block: Optional[int] = None,
+                            stream_rows: Optional[int] = None) -> jnp.ndarray:
     """skew_sum of (rows, N) -- or a (B, rows, N) stack -- with rows
     sharded over the mesh's row axis and the batch over its data axes;
     one fused Pallas kernel call per device, one collective."""
     return _sharded_pallas_partials(g, mesh, mode="core", sign=sign,
                                     axis=axis, batch_axes=batch_axes,
                                     reduce=reduce, strip_rows=strip_rows,
-                                    m_block=m_block)
+                                    m_block=m_block, stream_rows=stream_rows)
 
 
 def dprt_sharded_pallas(f: jnp.ndarray, mesh: Mesh,
-                        reduce: Reduce = "psum",
+                        reduce: Reduce = "psum_scatter",
                         strip_rows: Optional[int] = None,
-                        m_block: Optional[int] = None) -> jnp.ndarray:
+                        m_block: Optional[int] = None,
+                        stream_rows: Optional[int] = None) -> jnp.ndarray:
     """Forward DPRT of (N, N) -- or a (B, N, N) stack -- via the
     per-shard fused kernel: the R(N, d) row-sum epilogue runs in-kernel
     at global lane positions, so the whole distributed forward is one
-    pallas_call per device plus one ``psum``/``psum_scatter``."""
+    pallas_call per device plus one collective.  Default layout is
+    direction-sharded (``psum_scatter``): each device keeps only its
+    output direction shard, 1/devices the collective bytes of the old
+    all-directions ``psum`` assembly (still available as
+    ``reduce="psum"``; ``reduce="ring"`` builds the same sharded layout
+    from explicit ppermute steps)."""
     n = f.shape[-1]
     if f.shape[-2] != n or not is_prime(n):
         raise ValueError(f"DPRT needs prime (…, N, N), got {f.shape}")
     return _sharded_pallas_partials(f, mesh, mode="forward", reduce=reduce,
-                                    strip_rows=strip_rows, m_block=m_block)
+                                    strip_rows=strip_rows, m_block=m_block,
+                                    stream_rows=stream_rows)
 
 
 def idprt_sharded_pallas(r: jnp.ndarray, mesh: Mesh,
-                         reduce: Reduce = "psum",
+                         reduce: Reduce = "psum_scatter",
                          strip_rows: Optional[int] = None,
-                         m_block: Optional[int] = None) -> jnp.ndarray:
+                         m_block: Optional[int] = None,
+                         stream_rows: Optional[int] = None) -> jnp.ndarray:
     """Inverse DPRT of (N+1, N) -- or a (B, N+1, N) stack -- via the
-    per-shard Pallas path (CRS core per device; the -S + R(N, i) and
-    exact divide-by-N epilogue needs the *global* sums, so it runs
-    post-collective -- O(N^2) elementwise on the assembled result)."""
+    per-shard Pallas path.
+
+    Consumes the forward's direction-sharded layout IN PLACE: the full
+    (N+1)-row input (not a [:N] slice) shards over the row axis in the
+    same ``ceil((N+1)/devices)``-row chunks ``psum_scatter`` produced,
+    and global rows >= N (the R(N, d) row plus dirs padding) are zeroed
+    in-shard before the kernel -- algebraically identical to slicing,
+    with no cross-device re-shard between a forward and its inverse.
+    The -S + R(N, i) and exact divide-by-N epilogue needs the *global*
+    sums, so it runs post-collective -- O(N^2) elementwise."""
     n = r.shape[-1]
     if r.shape[-2] != n + 1 or not is_prime(n):
         raise ValueError(
             f"iDPRT input must be (…, N+1, N), N prime: {r.shape}")
     from .plan import _inverse_epilogue  # lazy: no cycle
-    z = skew_sum_sharded_pallas(r[..., :n, :], mesh, sign=-1, reduce=reduce,
-                                strip_rows=strip_rows, m_block=m_block)
+    z = _sharded_pallas_partials(r, mesh, mode="core", sign=-1,
+                                 reduce=reduce, strip_rows=strip_rows,
+                                 m_block=m_block, stream_rows=stream_rows,
+                                 mask_rows_from=n)
     return _inverse_epilogue(z, r, n)
 
 
@@ -365,13 +450,15 @@ def idprt_sharded_pallas(r: jnp.ndarray, mesh: Mesh,
 # ---------------------------------------------------------------------------
 @functools.partial(jax.jit,
                    static_argnames=("mesh", "op", "axis", "batch_axes",
-                                    "strip_rows", "m_block"))
+                                    "strip_rows", "m_block", "stream_rows"))
 def projection_pipeline_sharded(f: jnp.ndarray, mesh: Mesh, op: str = "conv",
                                 operand: Optional[jnp.ndarray] = None,
                                 axis: Optional[str] = None,
                                 batch_axes: Optional[tuple] = None,
                                 strip_rows: Optional[int] = None,
-                                m_block: Optional[int] = None) -> jnp.ndarray:
+                                m_block: Optional[int] = None,
+                                stream_rows: Optional[int] = None
+                                ) -> jnp.ndarray:
     """The fused projection pipeline on a mesh: per shard, TWO kernel
     launches with a SINGLE collective between forward and inverse.
 
@@ -381,9 +468,11 @@ def projection_pipeline_sharded(f: jnp.ndarray, mesh: Mesh, op: str = "conv",
     *directions* -- the one collective between forward and inverse --
     and the per-shard tail kernel applies the per-direction epilogue
     (1-D circular convolution / pointwise multiply) and the inverse
-    ladder for its direction shard only.  A final ``psum`` of the
-    (N, N) image partials plus the tiny -S + R'(N, i) / N correction
-    (which must wait for the global sums) assembles the reconstruction.
+    ladder for its direction shard only.  A final ``psum_scatter`` over
+    *image rows* (each device keeps its output row shard -- 1/devices
+    the closing-collective bytes of the old full ``psum``) plus the tiny
+    -S + R'(N, i) / N correction (whose aux sums ARE psum'd -- 2 rows)
+    assembles the reconstruction.
 
     ``operand``: conv operand as a replicated (N, N) image (its full
     projections are computed once via :func:`dprt_sharded_pallas`) or
@@ -397,7 +486,7 @@ def projection_pipeline_sharded(f: jnp.ndarray, mesh: Mesh, op: str = "conv",
     n = f.shape[-1]
     if f.shape[-2] != n or not is_prime(n):
         raise ValueError(f"pipeline needs prime (…, N, N), got {f.shape}")
-    acc = accum_dtype_for(f.dtype)
+    acc = accum_dtype_for(f.dtype, n)
     batched = f.ndim == 3
     gp, axis, baxes, devs, rows_per_dev, b = _shard_layout(
         f, mesh, axis, batch_axes)
@@ -412,9 +501,10 @@ def projection_pipeline_sharded(f: jnp.ndarray, mesh: Mesh, op: str = "conv",
         if op == "conv" and operand.shape[-2:] == (n, n):
             # one sharded forward (kernel + psum) turns the image operand
             # into its replicated projections
-            operand = dprt_sharded_pallas(operand, mesh,
+            operand = dprt_sharded_pallas(operand, mesh, reduce="psum",
                                           strip_rows=strip_rows,
-                                          m_block=m_block)
+                                          m_block=m_block,
+                                          stream_rows=stream_rows)
         wp = operand.astype(acc)
         w_batched = wp.ndim == 3 and batched and wp.shape[0] == f.shape[0]
         if w_batched and baxes:
@@ -430,37 +520,48 @@ def projection_pipeline_sharded(f: jnp.ndarray, mesh: Mesh, op: str = "conv",
             wp = wp[0]
 
     bspec = (_bspec(baxes),) if batched else ()
+    img_pad = math.ceil(n / devs) * devs
 
     def local(gl, wl):
         r = jax.lax.axis_index(axis)
         part = dprt_pallas_strip(gl, row_offset=r * rows_per_dev,
-                                 strip_rows=strip_rows, m_block=m_block)
+                                 strip_rows=strip_rows, m_block=m_block,
+                                 stream_rows=stream_rows)
         ppad = [(0, 0)] * part.ndim
         ppad[-2] = (0, dirs_pad - (n + 1))
         part = jnp.pad(part, ppad)
-        # THE collective between forward and inverse: re-shard the summed
-        # projections over directions (1/devs the bytes of a full psum)
+        # collective ONE of two: re-shard the summed projections over
+        # directions (1/devs the bytes of a full psum)
         rc_loc = jax.lax.psum_scatter(part, axis,
                                       scatter_dimension=part.ndim - 2,
                                       tiled=True)
         z, aux = pipeline_tail_pallas(rc_loc, op, wl,
                                       row_offset=r * dirs_loc, n=n,
                                       m_block=None)
-        return jax.lax.psum((z, aux), axis)
+        # collective TWO: scatter the reconstruction over image rows --
+        # each device keeps only its output row shard (the aux rows the
+        # deferred correction needs really are global sums, but they are
+        # 2 rows: psum them)
+        zpad = [(0, 0)] * z.ndim
+        zpad[-2] = (0, img_pad - n)
+        z_loc = jax.lax.psum_scatter(jnp.pad(z, zpad), axis,
+                                     scatter_dimension=z.ndim - 2,
+                                     tiled=True)
+        return z_loc, jax.lax.psum(aux, axis)
 
     if op == "none":
         def local1(gl):
             return local(gl, None)
         fn = _shard_map(local1, mesh,
                         in_specs=P(*bspec, axis, None),
-                        out_specs=(P(*bspec, None, None),
+                        out_specs=(P(*bspec, axis, None),
                                    P(*bspec, None, None)))
         z, aux = fn(gp)
     else:
         wspec = P(_bspec(baxes), None, None) if w_batched else P(None, None)
         fn = _shard_map(local, mesh,
                         in_specs=(P(*bspec, axis, None), wspec),
-                        out_specs=(P(*bspec, None, None),
+                        out_specs=(P(*bspec, axis, None),
                                    P(*bspec, None, None)))
         z, aux = fn(gp, wp)
 

@@ -70,6 +70,7 @@ __all__ = [
     "strip_partial",
     "align_partial",
     "accum_dtype_for",
+    "int32_accum_exact",
 ]
 
 
@@ -98,19 +99,70 @@ def next_prime(n: int) -> int:
     return n
 
 
-def accum_dtype_for(dtype) -> jnp.dtype:
+#: worst-case growth of the exact inverse intermediates: for pixels of
+#: magnitude <= v the CRS core Z is <= v*N^2 (N direction rows, each an
+#: N-term sum of <= v*N projections... bounded by v*N per row) and the
+#: -S + R(N, i) correction adds up to v*N more, so |Z - S + R(N, i)| <=
+#: v*N*(N+1).  Forward-only growth is just v*N (one N-term sum).
+_INT32_MAX = 2**31 - 1
+_X64_WARNED = False
+
+
+def int32_accum_exact(n: int, dtype) -> bool:
+    """True when an int32 accumulator provably cannot overflow the
+    inverse's ``v*N*(N+1)`` worst case for full-range pixels of this
+    integer dtype at transform size N (prime).
+
+    ``v`` is the dtype's max magnitude: for uint8 (v=255) the bound
+    gives N*(N+1) <= (2^31-1)/255, i.e. int32 stays exact up to prime
+    N <= 2897 -- and FAILS at the next prime 2903 (255*2903*2904 >
+    2^31).  For int16 (v=32767) the cliff is already at N=257.
+    """
+    dtype = jnp.dtype(dtype)
+    if not jnp.issubdtype(dtype, jnp.integer):
+        raise TypeError(f"int32_accum_exact is an integer bound: {dtype}")
+    info = jnp.iinfo(dtype)
+    v = max(int(info.max), -int(info.min))
+    return v * n * (n + 1) <= _INT32_MAX
+
+
+def accum_dtype_for(dtype, n: Optional[int] = None) -> jnp.dtype:
     """Accumulator dtype with enough headroom for exact sums.
 
     Forward growth is +ceil(log2 N) bits; inverse adds another
-    ceil(log2 N) (paper Sec. IV-B).  For 8-bit pixels the inverse
-    intermediates scale as 255*N^2, so int32 stays exact up to prime
-    N <= 2897 (every tuned/benchmarked size, table max N=1021); for
-    larger N pass int64 inputs under x64 (int64 inputs stay int64).
+    ceil(log2 N) plus the -S + R(N, i) correction (paper Sec. IV-B),
+    so the worst intermediate for pixels of magnitude <= v is
+    ``v*N*(N+1)`` (:func:`int32_accum_exact`).  For 8-bit pixels int32
+    therefore stays exact up to prime N <= 2897; int16 pixels already
+    need promotion at N >= 257.
+
+    When the transform size ``n`` is given, *narrow* integer inputs
+    (int8/uint8/int16/uint16 -- dtypes whose full range is a true pixel
+    bound) are promoted to int64 whenever the int32 bound fails, so the
+    giant-N geometries (N >= 2903 for 8-bit data) stay exact under x64.
+    int32/uint32 inputs keep the int32 accumulator regardless (their
+    dtype max is not a pixel bound; pass int64 inputs under x64 for a
+    guarantee, as before).  Without ``n`` the legacy dtype-only rule
+    applies unchanged.
     """
     dtype = jnp.dtype(dtype)
     if dtype in (jnp.int64, jnp.uint64):
         return jnp.dtype(jnp.int64)
     if jnp.issubdtype(dtype, jnp.integer):
+        if (n is not None and dtype.itemsize < 4
+                and not int32_accum_exact(int(n), dtype)):
+            if jax.config.jax_enable_x64:
+                return jnp.dtype(jnp.int64)
+            global _X64_WARNED
+            if not _X64_WARNED:  # pragma: no cover - depends on x64 flag
+                _X64_WARNED = True
+                import warnings
+                warnings.warn(
+                    f"{dtype.name} pixels at N={n} exceed the int32 "
+                    f"accumulator bound v*N*(N+1) <= 2^31-1 but x64 is "
+                    f"disabled; enable jax_enable_x64 for an exact int64 "
+                    f"accumulator (falling back to int32, sums may "
+                    f"overflow)", stacklevel=2)
         return jnp.dtype(jnp.int32)
     if dtype == jnp.float64:
         return jnp.dtype(jnp.float64)
@@ -135,7 +187,7 @@ def _step_indices(n: int, sign: int) -> jnp.ndarray:
 def _skew_sum_gather(g: jnp.ndarray, sign: int, block_m: int = 32) -> jnp.ndarray:
     """Oracle/systolic analog: one shear (gather) per direction, then sum."""
     n = g.shape[0]
-    acc_dtype = accum_dtype_for(g.dtype)
+    acc_dtype = accum_dtype_for(g.dtype, n)
     gacc = g.astype(acc_dtype)
     i = jnp.arange(n, dtype=jnp.int32)[:, None]
     d = jnp.arange(n, dtype=jnp.int32)[None, :]
@@ -173,14 +225,14 @@ def _horner_scan(strip: jnp.ndarray, n: int, sign: int,
 
 def _skew_sum_horner(g: jnp.ndarray, sign: int) -> jnp.ndarray:
     n = g.shape[0]
-    return _horner_scan(g, n, sign, accum_dtype_for(g.dtype))
+    return _horner_scan(g, n, sign, accum_dtype_for(g.dtype, n))
 
 
 def strip_partial(strip: jnp.ndarray, n: int, sign: int = 1,
                   acc_dtype=None) -> jnp.ndarray:
     """Partial skew-sum of one strip (paper eq. (7), before alignment)."""
     if acc_dtype is None:
-        acc_dtype = accum_dtype_for(strip.dtype)
+        acc_dtype = accum_dtype_for(strip.dtype, n)
     return _horner_scan(strip, n, sign, acc_dtype)
 
 
@@ -204,7 +256,7 @@ def _skew_sum_strips(g: jnp.ndarray, sign: int, strip_rows: int) -> jnp.ndarray:
     if not (1 <= h <= n):
         raise ValueError(f"strip_rows must be in [1, {n}], got {h}")
     k = math.ceil(n / h)
-    acc_dtype = accum_dtype_for(g.dtype)
+    acc_dtype = accum_dtype_for(g.dtype, n)
     pad = k * h - n
     gp = jnp.pad(g, ((0, pad), (0, 0)))  # zero rows contribute nothing
     strips = gp.reshape(k, h, n)
@@ -266,11 +318,11 @@ def _warn_legacy_knobs() -> None:
 
 
 def _legacy_operator(shape, dtype, method, strip_rows, m_block, batch_impl,
-                     block_rows, block_batch, mesh):
+                     block_rows, block_batch, mesh, stream_rows=None):
     """Resolve legacy per-call knobs into a cached radon operator."""
     if any(k is not None for k in (method, strip_rows, m_block, block_rows,
-                                   block_batch, mesh)) or batch_impl not in (
-                                       None, "auto"):
+                                   stream_rows, block_batch, mesh)
+           ) or batch_impl not in (None, "auto"):
         _warn_legacy_knobs()
     from repro.radon import DPRT, ambient  # lazy: radon imports this module
     # legacy default was method="horner" -- EXCEPT under a mesh (explicit
@@ -282,7 +334,7 @@ def _legacy_operator(shape, dtype, method, strip_rows, m_block, batch_impl,
                 method=ambient.resolve("method", method, fallback),
                 strip_rows=strip_rows, m_block=m_block,
                 batch_impl=batch_impl, block_rows=block_rows,
-                block_batch=block_batch, mesh=mesh)
+                stream_rows=stream_rows, block_batch=block_batch, mesh=mesh)
 
 
 def dprt(f: jnp.ndarray, method: Optional[Method] = None,
@@ -291,7 +343,7 @@ def dprt(f: jnp.ndarray, method: Optional[Method] = None,
          batch_impl: Optional[str] = None,
          block_rows: Optional[int] = None,
          block_batch: Optional[int] = None,
-         mesh=None) -> jnp.ndarray:
+         mesh=None, stream_rows: Optional[int] = None) -> jnp.ndarray:
     """Forward DPRT: (H, W) image -> (P+1, P) projections. Exact for ints.
 
     Deprecation shim over ``repro.radon.DPRT(f.shape, f.dtype, ...)``;
@@ -306,7 +358,8 @@ def dprt(f: jnp.ndarray, method: Optional[Method] = None,
     crop-back inverse of a padded geometry.
     """
     op = _legacy_operator(f.shape, f.dtype, method, strip_rows, m_block,
-                          batch_impl, block_rows, block_batch, mesh)
+                          batch_impl, block_rows, block_batch, mesh,
+                          stream_rows=stream_rows)
     return op(f)
 
 
@@ -316,7 +369,7 @@ def idprt(r: jnp.ndarray, method: Optional[Method] = None,
           batch_impl: Optional[str] = None,
           block_rows: Optional[int] = None,
           block_batch: Optional[int] = None,
-          mesh=None) -> jnp.ndarray:
+          mesh=None, stream_rows: Optional[int] = None) -> jnp.ndarray:
     """Inverse DPRT: (N+1, N) projections -> (N, N) image.
 
     Deprecation shim over ``repro.radon.DPRT((N, N), ...).inverse``.
@@ -335,7 +388,8 @@ def idprt(r: jnp.ndarray, method: Optional[Method] = None,
         raise ValueError(f"iDPRT needs prime N, got N={n}")
     shape = (n, n) if r.ndim == 2 else (r.shape[0], n, n)
     op = _legacy_operator(shape, r.dtype, method, strip_rows, m_block,
-                          batch_impl, block_rows, block_batch, mesh)
+                          batch_impl, block_rows, block_batch, mesh,
+                          stream_rows=stream_rows)
     return op.inverse(r)
 
 

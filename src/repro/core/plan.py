@@ -109,6 +109,12 @@ class Backend:
     batched_native: bool = False
     needs_strip_rows: bool = False
     takes_m_block: bool = False
+    #: understands the ``stream_rows`` knob natively (the in-launch
+    #: streamed-strip kernels).  Backends without it degrade a
+    #: ``stream_rows`` request to the plan layer's scan-of-launches
+    #: ``block_rows`` fallback -- same partial-sum algebra, bounded
+    #: memory, just one launch per strip instead of one total.
+    takes_stream_rows: bool = False
     mesh_aware: bool = False
     dtype_kinds: Optional[Tuple[str, ...]] = None  # None = any dtype
     priority: int = 0  # higher wins under method="auto"
@@ -154,6 +160,7 @@ def backend_capabilities() -> list:
             "batched_native": b.batched_native,
             "needs_strip_rows": b.needs_strip_rows,
             "takes_m_block": b.takes_m_block,
+            "stream": b.takes_stream_rows,
             "mesh_aware": b.mesh_aware,
             "pipeline": b.pipeline is not None,
             "dtypes": "any" if b.dtype_kinds is None
@@ -295,14 +302,16 @@ def _horner_skew(g, sign, *, strip_rows=None, m_block=None, mesh=None):
 def _strips_skew(g, sign, *, strip_rows=None, m_block=None, mesh=None):
     if strip_rows is None:  # plan-level resolution supplies the tuned H;
         # direct callers get the same table lookup (real accum itemsize)
-        itemsize = jnp.dtype(accum_dtype_for(g.dtype)).itemsize
+        itemsize = jnp.dtype(accum_dtype_for(g.dtype, g.shape[-1])).itemsize
         strip_rows = resolve_blocks(g.shape[-1], itemsize)[0]
     return _skew_sum_strips(g, sign, strip_rows)
 
 
-def _pallas_skew(g, sign, *, strip_rows=None, m_block=None, mesh=None):
+def _pallas_skew(g, sign, *, strip_rows=None, m_block=None, mesh=None,
+                 stream_rows=None):
     from repro.kernels.ops import skew_sum_pallas  # lazy: no import cycle
-    return skew_sum_pallas(g, sign, strip_rows=strip_rows, m_block=m_block)
+    return skew_sum_pallas(g, sign, strip_rows=strip_rows, m_block=m_block,
+                           stream_rows=stream_rows)
 
 
 # the pallas skew wrapper accepts (N, N) and (B, N, N) alike, so the
@@ -310,18 +319,22 @@ def _pallas_skew(g, sign, *, strip_rows=None, m_block=None, mesh=None):
 _pallas_skew_batched = _pallas_skew
 
 
-def _pallas_forward(f, *, strip_rows=None, m_block=None, mesh=None):
+def _pallas_forward(f, *, strip_rows=None, m_block=None, mesh=None,
+                    stream_rows=None):
     from repro.kernels.ops import dprt_pallas
-    return dprt_pallas(f, strip_rows=strip_rows, m_block=m_block)
+    return dprt_pallas(f, strip_rows=strip_rows, m_block=m_block,
+                       stream_rows=stream_rows)
 
 
-def _pallas_inverse(r, *, strip_rows=None, m_block=None, mesh=None):
+def _pallas_inverse(r, *, strip_rows=None, m_block=None, mesh=None,
+                    stream_rows=None):
     from repro.kernels.ops import idprt_pallas
-    return idprt_pallas(r, strip_rows=strip_rows, m_block=m_block)
+    return idprt_pallas(r, strip_rows=strip_rows, m_block=m_block,
+                        stream_rows=stream_rows)
 
 
 def _pallas_pipeline(fp, op, operand, operand_form, *, strip_rows=None,
-                     m_block=None, mesh=None):
+                     m_block=None, mesh=None, stream_rows=None):
     # m_block here is the PIPELINE direction block (its own tune table),
     # distinct from the transform kernels' m_block; plan-level callers
     # pass None and let the pipeline table decide
@@ -374,33 +387,47 @@ def _sharded_inverse_batched(rb, *, strip_rows=None, m_block=None, mesh=None):
 
 
 # the sharded_pallas entry points accept (N, N) and (B, N, N) alike, so
-# one adapter each serves the single-image AND batched-native datapaths
+# one adapter each serves the single-image AND batched-native datapaths.
+# The plan datapath pins reduce="psum": AOT executables chain forward ->
+# inverse by exact input-sharding match, which needs the stable
+# replicated projection layout (slicing the N+1 real rows off the
+# direction-sharded padded layout re-lays-out anyway at operator
+# geometry).  The direction-sharded default lives on the raw
+# core.distributed API, where a round trip consumes the shards in place.
 def _sharded_pallas_skew(g, sign, *, strip_rows=None, m_block=None,
-                         mesh=None):
+                         mesh=None, stream_rows=None):
     from .distributed import skew_sum_sharded_pallas
     return skew_sum_sharded_pallas(g, _require_mesh(mesh), sign=sign,
-                                   strip_rows=strip_rows, m_block=m_block)
+                                   reduce="psum",
+                                   strip_rows=strip_rows, m_block=m_block,
+                                   stream_rows=stream_rows)
 
 
-def _sharded_pallas_forward(f, *, strip_rows=None, m_block=None, mesh=None):
+def _sharded_pallas_forward(f, *, strip_rows=None, m_block=None, mesh=None,
+                            stream_rows=None):
     from .distributed import dprt_sharded_pallas
-    return dprt_sharded_pallas(f, _require_mesh(mesh),
-                               strip_rows=strip_rows, m_block=m_block)
+    return dprt_sharded_pallas(f, _require_mesh(mesh), reduce="psum",
+                               strip_rows=strip_rows, m_block=m_block,
+                               stream_rows=stream_rows)
 
 
-def _sharded_pallas_inverse(r, *, strip_rows=None, m_block=None, mesh=None):
+def _sharded_pallas_inverse(r, *, strip_rows=None, m_block=None, mesh=None,
+                            stream_rows=None):
     from .distributed import idprt_sharded_pallas
-    return idprt_sharded_pallas(r, _require_mesh(mesh),
-                                strip_rows=strip_rows, m_block=m_block)
+    return idprt_sharded_pallas(r, _require_mesh(mesh), reduce="psum",
+                                strip_rows=strip_rows, m_block=m_block,
+                                stream_rows=stream_rows)
 
 
 def _sharded_pallas_pipeline(fp, op, operand, operand_form, *,
-                             strip_rows=None, m_block=None, mesh=None):
+                             strip_rows=None, m_block=None, mesh=None,
+                             stream_rows=None):
     from .distributed import projection_pipeline_sharded
     return projection_pipeline_sharded(fp, _require_mesh(mesh), op=op,
                                        operand=operand,
                                        strip_rows=strip_rows,
-                                       m_block=m_block)
+                                       m_block=m_block,
+                                       stream_rows=stream_rows)
 
 
 register_backend(Backend(
@@ -439,6 +466,7 @@ register_backend(Backend(
     pipeline=_pallas_pipeline,
     batched_native=True,
     takes_m_block=True,
+    takes_stream_rows=True,
     dtype_kinds=("i", "u", "f"),
     priority=100,
     note="fused batched SFDPRT TPU kernel (one pallas_call per stack)",
@@ -465,6 +493,7 @@ register_backend(Backend(
     pipeline=_sharded_pallas_pipeline,
     batched_native=True,
     takes_m_block=True,
+    takes_stream_rows=True,
     mesh_aware=True,
     dtype_kinds=("i", "u", "f"),
     priority=20,  # mesh-only: beats legacy "sharded" under method="auto"
@@ -564,6 +593,11 @@ class RadonPlan:
     m_block: Optional[int] = None
     batch_impl: str = "auto"
     block_rows: Optional[int] = None
+    #: stream H-row strips through ONE fused kernel launch (VMEM scratch
+    #: accumulation / double-buffered HBM DMA) on backends declaring
+    #: ``takes_stream_rows``; other backends degrade to the
+    #: ``block_rows``-style scan with the same strip height.
+    stream_rows: Optional[int] = None
     block_batch: Optional[int] = None
     mesh: Optional[object] = None
     # part of the plan's identity (eq/hash) so the per-plan caches
@@ -577,8 +611,28 @@ class RadonPlan:
         return get_backend(self.method)
 
     def _knobs(self) -> dict:
-        return {"strip_rows": self.strip_rows, "m_block": self.m_block,
-                "mesh": self.mesh}
+        knobs = {"strip_rows": self.strip_rows, "m_block": self.m_block,
+                 "mesh": self.mesh}
+        if self.backend.takes_stream_rows:
+            knobs["stream_rows"] = self.stream_rows
+        return knobs
+
+    @property
+    def _scan_rows(self) -> Optional[int]:
+        """Strip height when the scan-of-launches fallback must run.
+
+        An explicit ``block_rows`` always scans (the paper's staged
+        Sec. III-C scheme); ``stream_rows`` on a backend WITHOUT the
+        streamed-kernel capability degrades to the same scan -- memory
+        stays bounded either way, capable backends just do it in one
+        launch.  ``None`` means the resolved backend runs natively.
+        """
+        if self.block_rows is not None:
+            return self.block_rows
+        if self.stream_rows is not None \
+                and not self.backend.takes_stream_rows:
+            return self.stream_rows
+        return None
 
     def _batch_impl(self) -> str:
         if self.batch_impl != "auto":
@@ -589,24 +643,24 @@ class RadonPlan:
 
     # -- prime-domain single image ----------------------------------------
     def _forward_prime(self, fp: jnp.ndarray) -> jnp.ndarray:
-        if self.block_rows is not None:
-            core = _blocked_skew_sum(fp, +1, self.block_rows,
-                                     accum_dtype_for(fp.dtype))
+        if self._scan_rows is not None:
+            core = _blocked_skew_sum(fp, +1, self._scan_rows,
+                                     accum_dtype_for(fp.dtype, fp.shape[-1]))
             return _attach_row_sum(core, fp)
         return self.backend.forward(fp, **self._knobs())
 
     def _inverse_prime(self, r: jnp.ndarray) -> jnp.ndarray:
-        if self.block_rows is not None:
+        if self._scan_rows is not None:
             n = r.shape[-1]
-            acc = accum_dtype_for(r.dtype)
-            z = _blocked_skew_sum(r[:n], -1, self.block_rows, acc)
+            acc = accum_dtype_for(r.dtype, n)
+            z = _blocked_skew_sum(r[:n], -1, self._scan_rows, acc)
             return _inverse_epilogue(z, r, n)
         return self.backend.inverse(r, **self._knobs())
 
     def _skew_prime(self, x: jnp.ndarray, sign: int) -> jnp.ndarray:
-        if self.block_rows is not None:
-            return _blocked_skew_sum(x, sign, self.block_rows,
-                                     accum_dtype_for(x.dtype))
+        if self._scan_rows is not None:
+            return _blocked_skew_sum(x, sign, self._scan_rows,
+                                     accum_dtype_for(x.dtype, x.shape[-1]))
         return self.backend.skew_sum(x, sign, **self._knobs())
 
     def _adjoint_prime(self, r: jnp.ndarray) -> jnp.ndarray:
@@ -620,7 +674,7 @@ class RadonPlan:
     # -- batched stacks ----------------------------------------------------
     def _stack(self, xb: jnp.ndarray, native: Optional[Callable],
                one: Callable) -> jnp.ndarray:
-        if native is not None and self.block_rows is None:
+        if native is not None and self._scan_rows is None:
             fn = lambda chunk: native(chunk, **self._knobs())
         elif self._batch_impl() == "map":
             fn = lambda chunk: jax.lax.map(one, chunk)
@@ -683,7 +737,7 @@ class RadonPlan:
             return G.crop(self._adjoint_prime(r), g)
         be = self.backend
         native = None
-        if be.skew_batched is not None and self.block_rows is None:
+        if be.skew_batched is not None and self._scan_rows is None:
             n = g.prime
 
             def native(rb, **knobs):
@@ -711,7 +765,7 @@ class RadonPlan:
             return self._inverse_adjoint_prime(fp)
         be = self.backend
         native = None
-        if be.skew_batched is not None and self.block_rows is None:
+        if be.skew_batched is not None and self._scan_rows is None:
             n = g.prime
 
             def native(fb, **knobs):
@@ -778,7 +832,8 @@ class RadonPlan:
                     f"match plan batch {g.batch}")
 
         be = self.backend
-        if be.pipeline is not None and self.block_rows is None:
+        if be.pipeline is not None and self.block_rows is None \
+                and self.stream_rows is None:
             fp = G.embed(f, g)
             if g.batched and self.block_batch is not None:
                 if operand is None or operand.ndim == 2:
@@ -832,6 +887,7 @@ class RadonPlan:
             "strip_rows": self.strip_rows,
             "m_block": self.m_block,
             "block_rows": self.block_rows,
+            "stream_rows": self.stream_rows,
             "block_batch": self.block_batch,
             "mesh": None if self.mesh is None else repr(self.mesh),
         }
@@ -957,15 +1013,17 @@ def set_plan_cache_maxsize(maxsize: Optional[int]) -> None:
 def _cached_plan(shape: tuple, dtype_name: str, method: str,
                  strip_rows: Optional[int], m_block: Optional[int],
                  batch_impl: str, block_rows: Optional[int],
+                 stream_rows: Optional[int],
                  block_batch: Optional[int], mesh) -> RadonPlan:
     key = (shape, dtype_name, method, strip_rows, m_block, batch_impl,
-           block_rows, block_batch, mesh)
+           block_rows, stream_rows, block_batch, mesh)
     return _PLAN_CACHE.get_or_build(key, lambda: _build_plan(*key))
 
 
 def _build_plan(shape: tuple, dtype_name: str, method: str,
                 strip_rows: Optional[int], m_block: Optional[int],
                 batch_impl: str, block_rows: Optional[int],
+                stream_rows: Optional[int],
                 block_batch: Optional[int], mesh) -> RadonPlan:
     geom = G.normalize_geometry(shape)
     dtype = jnp.dtype(dtype_name)
@@ -980,16 +1038,19 @@ def _build_plan(shape: tuple, dtype_name: str, method: str,
             f"(kinds: {be.dtype_kinds})")
     if batch_impl not in ("auto", "map", "vmap"):
         raise ValueError(f"batch_impl must be auto|map|vmap: {batch_impl!r}")
-    itemsize = jnp.dtype(accum_dtype_for(dtype)).itemsize
+    itemsize = jnp.dtype(accum_dtype_for(dtype, geom.prime)).itemsize
+    # always resolves (even for backends without block knobs): the
+    # resolver owns the block_rows/stream_rows conflict rejection
+    th, tm = resolve_blocks(geom.prime, itemsize, strip_rows, m_block,
+                            block_rows=block_rows, stream_rows=stream_rows)
     if be.needs_strip_rows or be.takes_m_block:
-        th, tm = resolve_blocks(geom.prime, itemsize, strip_rows, m_block)
         strip_rows = th
         m_block = tm if be.takes_m_block else None
     return RadonPlan(geometry=geom, method=method, requested_method=requested,
                      strip_rows=strip_rows, m_block=m_block,
                      batch_impl=batch_impl, block_rows=block_rows,
-                     block_batch=block_batch, mesh=mesh,
-                     dtype_name=dtype.name)
+                     stream_rows=stream_rows, block_batch=block_batch,
+                     mesh=mesh, dtype_name=dtype.name)
 
 
 def get_plan(shape, dtype, method: str = "auto", *,
@@ -997,6 +1058,7 @@ def get_plan(shape, dtype, method: str = "auto", *,
              m_block: Optional[int] = None,
              batch_impl: str = "auto",
              block_rows: Optional[int] = None,
+             stream_rows: Optional[int] = None,
              block_batch: Optional[int] = None,
              mesh=None) -> RadonPlan:
     """Cached :class:`RadonPlan` for an input shape/dtype and knobs.
@@ -1014,6 +1076,7 @@ def get_plan(shape, dtype, method: str = "auto", *,
                         None if m_block is None else int(m_block),
                         batch_impl,
                         None if block_rows is None else int(block_rows),
+                        None if stream_rows is None else int(stream_rows),
                         None if block_batch is None else int(block_batch),
                         mesh)
 
@@ -1036,7 +1099,7 @@ def dispatch_skew_sum(g: jnp.ndarray, sign: int, method: str = "horner",
         method = select_backend(n, g.dtype, mesh=mesh)
     be = get_backend(method)
     if be.needs_strip_rows and strip_rows is None:
-        itemsize = jnp.dtype(accum_dtype_for(g.dtype)).itemsize
+        itemsize = jnp.dtype(accum_dtype_for(g.dtype, n)).itemsize
         strip_rows = resolve_blocks(n, itemsize, None, None)[0]
     return be.skew_sum(g, sign, strip_rows=strip_rows, m_block=m_block,
                        mesh=mesh)

@@ -40,37 +40,47 @@ def _auto_interpret(interpret: Optional[bool]) -> bool:
 
 
 def _resolve_blocks(n: int, strip_rows: Optional[int],
-                    m_block: Optional[int], dtype) -> tuple[int, int]:
+                    m_block: Optional[int], dtype,
+                    stream_rows: Optional[int] = None) -> tuple[int, int]:
     # delegate to the shared resolver so the plan layer ("auto") and
     # direct pallas calls agree on block shapes.  Deliberately does NOT
     # consult the ambient radon.config scope: these wrappers may run
     # inside a caller's jit trace, where a scope read would be baked
     # into the cached executable and replayed after the scope exits.
     # Ambient knobs apply at (eager) plan/operator construction instead.
-    return resolve_blocks(n, jnp.dtype(accum_dtype_for(dtype)).itemsize,
-                          strip_rows, m_block)
+    return resolve_blocks(n, jnp.dtype(accum_dtype_for(dtype, n)).itemsize,
+                          strip_rows, m_block, stream_rows=stream_rows)
+
+
+def _stream_int(stream_rows: Optional[int]) -> Optional[int]:
+    return None if stream_rows is None else int(stream_rows)
 
 
 def skew_sum_pallas(g: jnp.ndarray, sign: int = 1,
                     strip_rows: Optional[int] = None,
                     m_block: Optional[int] = None,
-                    interpret: Optional[bool] = None) -> jnp.ndarray:
+                    interpret: Optional[bool] = None,
+                    stream_rows: Optional[int] = None) -> jnp.ndarray:
     """Bare skew-sum: (N, N), or a (B, N, N) stack in ONE pallas_call.
 
     The batched form serves the plan layer's batched-native adjoint
     datapath (exact VJPs through ``method="pallas"``) as well as the
-    core-mode tests.
+    core-mode tests.  ``stream_rows`` switches to the streamed-strip
+    kernel (VMEM scratch accumulation / double-buffered DMA; giant N).
     """
-    h, mb = _resolve_blocks(g.shape[-1], strip_rows, m_block, g.dtype)
+    h, mb = _resolve_blocks(g.shape[-1], strip_rows, m_block, g.dtype,
+                            stream_rows)
     return skew_sum_pallas_raw(g, sign=sign, strip_rows=h, m_block=mb,
-                               interpret=_auto_interpret(interpret))
+                               interpret=_auto_interpret(interpret),
+                               stream_rows=_stream_int(stream_rows))
 
 
 def skew_sum_pallas_strip(g: jnp.ndarray, sign: int = 1, *,
                           row_offset=0,
                           strip_rows: Optional[int] = None,
                           m_block: Optional[int] = None,
-                          interpret: Optional[bool] = None) -> jnp.ndarray:
+                          interpret: Optional[bool] = None,
+                          stream_rows: Optional[int] = None) -> jnp.ndarray:
     """Shard-local partial skew-sum: a (rows, N) or (B, rows, N) row
     strip whose first *global* image row is ``row_offset`` (static int or
     traced scalar, e.g. ``axis_index * rows_per_dev`` inside shard_map).
@@ -83,16 +93,18 @@ def skew_sum_pallas_strip(g: jnp.ndarray, sign: int = 1, *,
     skew-sum; block shapes default to the :mod:`.tuning` table for N.
     """
     n = g.shape[-1]
-    h, mb = _resolve_blocks(n, strip_rows, m_block, g.dtype)
+    h, mb = _resolve_blocks(n, strip_rows, m_block, g.dtype, stream_rows)
     return skew_sum_pallas_raw(g, sign=sign, strip_rows=h, m_block=mb,
                                interpret=_auto_interpret(interpret),
-                               row_offset=row_offset)
+                               row_offset=row_offset,
+                               stream_rows=_stream_int(stream_rows))
 
 
 def dprt_pallas_strip(g: jnp.ndarray, *, row_offset=0,
                       strip_rows: Optional[int] = None,
                       m_block: Optional[int] = None,
-                      interpret: Optional[bool] = None) -> jnp.ndarray:
+                      interpret: Optional[bool] = None,
+                      stream_rows: Optional[int] = None) -> jnp.ndarray:
     """Shard-local partial *forward* DPRT: a (rows, N) or (B, rows, N)
     row strip starting at global image row ``row_offset`` -> the
     (…, N+1, N) partial transform, R(N, d) row-sum epilogue fused
@@ -103,20 +115,25 @@ def dprt_pallas_strip(g: jnp.ndarray, *, row_offset=0,
     n = g.shape[-1]
     single = g.ndim == 2
     gb = g[None] if single else g
-    h, mb = _resolve_blocks(n, strip_rows, m_block, g.dtype)
+    h, mb = _resolve_blocks(n, strip_rows, m_block, g.dtype, stream_rows)
     out = dprt_pallas_raw(gb, strip_rows=h, m_block=mb,
                           interpret=_auto_interpret(interpret),
-                          row_offset=row_offset)
+                          row_offset=row_offset,
+                          stream_rows=_stream_int(stream_rows))
     return out[0] if single else out
 
 
 def dprt_pallas(f: jnp.ndarray, strip_rows: Optional[int] = None,
                 m_block: Optional[int] = None,
-                interpret: Optional[bool] = None) -> jnp.ndarray:
+                interpret: Optional[bool] = None,
+                stream_rows: Optional[int] = None) -> jnp.ndarray:
     """Forward DPRT via the fused SFDPRT kernel.
 
     (N, N) -> (N+1, N), or batched (B, N, N) -> (B, N+1, N) in a single
     pallas_call.  Block shapes default to the :mod:`.tuning` table.
+    ``stream_rows`` streams H-row strips through ONE launch (VMEM
+    scratch accumulation; double-buffered HBM DMA off-interpret) for
+    images too large to sit whole in VMEM.
     """
     single = f.ndim == 2
     fb = f[None] if single else f
@@ -125,15 +142,17 @@ def dprt_pallas(f: jnp.ndarray, strip_rows: Optional[int] = None,
     n = fb.shape[-1]
     if not is_prime(n):
         raise ValueError(f"DPRT needs prime N, got {n}")
-    h, mb = _resolve_blocks(n, strip_rows, m_block, fb.dtype)
+    h, mb = _resolve_blocks(n, strip_rows, m_block, fb.dtype, stream_rows)
     out = dprt_pallas_raw(fb, strip_rows=h, m_block=mb,
-                          interpret=_auto_interpret(interpret))
+                          interpret=_auto_interpret(interpret),
+                          stream_rows=_stream_int(stream_rows))
     return out[0] if single else out
 
 
 def idprt_pallas(r: jnp.ndarray, strip_rows: Optional[int] = None,
                  m_block: Optional[int] = None,
-                 interpret: Optional[bool] = None) -> jnp.ndarray:
+                 interpret: Optional[bool] = None,
+                 stream_rows: Optional[int] = None) -> jnp.ndarray:
     """Inverse DPRT via the fused kernel (CRS core + in-kernel epilogue).
 
     (N+1, N) -> (N, N), or batched (B, N+1, N) -> (B, N, N) in a single
@@ -147,9 +166,10 @@ def idprt_pallas(r: jnp.ndarray, strip_rows: Optional[int] = None,
         raise ValueError(
             f"iDPRT input must be (B, N+1, N) or (N+1, N) with N prime: "
             f"{r.shape}")
-    h, mb = _resolve_blocks(n, strip_rows, m_block, rb.dtype)
+    h, mb = _resolve_blocks(n, strip_rows, m_block, rb.dtype, stream_rows)
     out = idprt_pallas_raw(rb, strip_rows=h, m_block=mb,
-                           interpret=_auto_interpret(interpret))
+                           interpret=_auto_interpret(interpret),
+                           stream_rows=_stream_int(stream_rows))
     return out[0] if single else out
 
 
@@ -200,7 +220,7 @@ def projection_pipeline_pallas(f, op: str = "conv", operand=None,
     n = fb.shape[-1]
     if not is_prime(n):
         raise ValueError(f"pipeline needs prime N, got {n}")
-    acc = accum_dtype_for(fb.dtype)
+    acc = accum_dtype_for(fb.dtype, n)
     wb = None
     if op != "none":
         if operand is None:
@@ -253,7 +273,7 @@ def pipeline_tail_pallas(rows, op: str = "conv", operand=None, *,
     rb = rows[None] if single else rows
     if n is None:
         n = rb.shape[-1]
-    acc = accum_dtype_for(rb.dtype)
+    acc = accum_dtype_for(rb.dtype, n)
     interp = _auto_interpret(interpret)
     mb, grp = resolve_pipeline_blocks(n, jnp.dtype(acc).itemsize,
                                       m_block, group)

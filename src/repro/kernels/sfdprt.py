@@ -76,12 +76,28 @@ from jax.experimental import pallas as pl
 
 from repro.core.dprt import accum_dtype_for
 
-try:  # compiler params spelling differs across jax versions
+try:
     from jax.experimental.pallas import tpu as pltpu
-    _COMPILER_PARAMS = pltpu.CompilerParams(
-        dimension_semantics=("parallel", "parallel", "arbitrary"))
 except Exception:  # pragma: no cover
-    _COMPILER_PARAMS = None
+    pltpu = None
+
+
+def _tpu_compiler_params(dimension_semantics):
+    """Compiler params across jax versions (CompilerParams vs
+    TPUCompilerParams spelling), None when unavailable."""
+    if pltpu is None:  # pragma: no cover
+        return None
+    cls = getattr(pltpu, "CompilerParams",
+                  getattr(pltpu, "TPUCompilerParams", None))
+    if cls is None:  # pragma: no cover
+        return None
+    try:
+        return cls(dimension_semantics=dimension_semantics)
+    except Exception:  # pragma: no cover
+        return None
+
+
+_COMPILER_PARAMS = _tpu_compiler_params(("parallel", "parallel", "arbitrary"))
 
 __all__ = [
     "skew_sum_pallas_raw",
@@ -139,6 +155,58 @@ def apply_roll_ladder(acc: jnp.ndarray, masks, n: int) -> jnp.ndarray:
     return acc
 
 
+def _strip_block_partial(read_row, *, h: int, n: int, n_pad: int,
+                         m_block: int, m_vec, valid, offset, sign: int,
+                         step_impl: str, acc_dtype):
+    """Aligned, masked partial skew-sum of ONE H-row strip for one m-block.
+
+    This is the shared per-strip datapath of the fused (`_sfdprt_kernel`)
+    and streamed (`_stream_grid_kernel` / `_stream_dma_kernel`) kernels:
+    hoisted roll setup (per strip, not per cycle), H Horner cycles over
+    ``read_row(j)`` (j = 0 is the strip's top row), the eq. (7)
+    alignment roll for the strip's first global row ``offset`` (static
+    or traced), and the wrapped-duplicate row mask.  ``step_impl`` picks
+    the per-cycle roll realization (see :func:`_sfdprt_kernel`).
+    """
+    zero = jnp.zeros((), acc_dtype)
+    step_amt = m_vec if sign > 0 else (n - m_vec) % n
+    # reduce the offset mod N before the multiply: streamed/sharded
+    # offsets can exceed N (row padding), so m_vec * offset alone could
+    # overflow int32 near the top-end N; with the reduction
+    # m_vec * (offset % N) <= (N-1)^2 < 2^31 for every supported N
+    align_amt = jnp.mod(sign * m_vec * (offset % n), n)
+
+    if step_impl == "permute":
+        lane_iota = jax.lax.broadcasted_iota(jnp.int32, (m_block, n_pad), 1)
+        in_tail = lane_iota >= n
+        perm = jnp.where(in_tail, lane_iota, (lane_iota + step_amt) % n)
+        align_perm = jnp.where(in_tail, lane_iota,
+                               (lane_iota + align_amt) % n)
+    else:
+        step_sel = ladder_select_masks(step_amt, n)
+        align_sel = ladder_select_masks(align_amt, n)
+
+    def body(i, acc):
+        # T_i = f(i, .) + roll(T_{i+1}, sign*m): one "clock cycle" -- the
+        # roll consumes the precomputed masks/permutation.
+        if step_impl == "permute":
+            acc = jnp.take_along_axis(acc, perm, axis=1)
+        else:
+            acc = apply_roll_ladder(acc, step_sel, n)
+        row = read_row(h - 1 - i)
+        return acc + row[None, :].astype(acc.dtype)
+
+    acc = jax.lax.fori_loop(0, h, body,
+                            jnp.zeros((m_block, n_pad), acc_dtype))
+
+    # alignment roll: R'(r, m, d) = U_r(<d + sign*m*rH>_n)   (eq. 7)
+    if step_impl == "permute":
+        acc = jnp.take_along_axis(acc, align_perm, axis=1)
+    else:
+        acc = apply_roll_ladder(acc, align_sel, n)
+    return jnp.where(valid, acc, zero)
+
+
 def _sfdprt_kernel(f_ref, *rest, n: int, n_pad: int, h: int, m_block: int,
                    sign: int, k_steps: int, mode: str, acc_dtype,
                    step_impl: str, with_offset: bool = False):
@@ -180,55 +248,16 @@ def _sfdprt_kernel(f_ref, *rest, n: int, n_pad: int, h: int, m_block: int,
     valid = grow < n                          # mask wrapped-duplicate rows
     m_vec = jnp.where(valid, grow, 0)
 
-    # ---- hoisted ladder setup: ONCE per (m-block, strip) -----------------
-    step_amt = m_vec if sign > 0 else (n - m_vec) % n
+    # ---- hoisted ladder setup + H Horner cycles + eq. (7) alignment ------
+    # (the shared per-strip datapath; the "permute" lowering hoists the
+    # step AND alignment permutations into index space ONCE per m-block)
     offset = k * h                            # strip's first global row rH
     if with_offset:                           # shard-local: + the block's
         offset = offset + off_ref[0, 0]       # first global image row
-    # reduce the offset mod N before the multiply: the sharded offset can
-    # exceed N (row padding on the last device), so m_vec * offset alone
-    # could overflow int32 near the top-end N; with the reduction
-    # m_vec * (offset % N) <= (N-1)^2 < 2^31 for every supported N
-    align_amt = jnp.mod(sign * m_vec * (offset % n), n)
-
-    if step_impl == "permute":
-        # Hoisted setup, interpret/CPU lowering: the step AND alignment
-        # permutations are materialized directly in index space --
-        # perm[j, d] = <d + amt_j>_n for d < n, identity on the zero
-        # tail -- so the Horner cycles below do zero rotate+select work
-        # and the eq. (7) alignment is ONE gather of the accumulator
-        # (short shard-local strips cannot amortize ladder passes over
-        # the accumulator; index setup is O(log N)-free here because a
-        # gather is cheap on this path).
-        lane_iota = jax.lax.broadcasted_iota(jnp.int32, (m_block, n_pad), 1)
-        in_tail = lane_iota >= n
-        perm = jnp.where(in_tail, lane_iota, (lane_iota + step_amt) % n)
-        align_perm = jnp.where(in_tail, lane_iota,
-                               (lane_iota + align_amt) % n)
-    else:
-        step_sel = ladder_select_masks(step_amt, n)
-        align_sel = ladder_select_masks(align_amt, n)
-
-    def body(i, acc):
-        # T_i = f(i, .) + roll(T_{i+1}, sign*m): one "clock cycle" -- the
-        # roll consumes the precomputed masks/permutation, no
-        # (amt >> b) & 1 here.
-        if step_impl == "permute":
-            acc = jnp.take_along_axis(acc, perm, axis=1)
-        else:
-            acc = apply_roll_ladder(acc, step_sel, n)
-        row = f_ref[0, h - 1 - i, :]
-        return acc + row[None, :].astype(acc.dtype)
-
-    acc = jnp.zeros((m_block, n_pad), acc_dtype)
-    acc = jax.lax.fori_loop(0, h, body, acc)
-
-    # alignment roll: R'(r, m, d) = U_r(<d + sign*m*rH>_n)   (eq. 7)
-    if step_impl == "permute":
-        acc = jnp.take_along_axis(acc, align_perm, axis=1)
-    else:
-        acc = apply_roll_ladder(acc, align_sel, n)
-    acc = jnp.where(valid, acc, zero)
+    acc = _strip_block_partial(
+        lambda j: f_ref[0, j, :], h=h, n=n, n_pad=n_pad, m_block=m_block,
+        m_vec=m_vec, valid=valid, offset=offset, sign=sign,
+        step_impl=step_impl, acc_dtype=acc_dtype)
 
     @pl.when(k == 0)
     def _init():
@@ -333,13 +362,269 @@ def _pallas_skew_call(g: jnp.ndarray, *, sign: int, mode: str,
     )(*operands)
 
 
+# ===========================================================================
+# In-launch strip streaming (the giant-N path).
+#
+# The fused kernel above holds one (1, H, N) strip in VMEM per grid step
+# and revisits the output block across the innermost strip dimension --
+# fine while ceil(N/H) output revisits are free (they stay VMEM-resident)
+# but it leans on the BlockSpec pipeline for every strip fetch and keeps
+# the whole (B, N, N) operand eligible for pipelining.  For images that
+# do NOT fit whole-image-in-VMEM (N >= 2048) the streamed variants below
+# process the image as ONE ``pallas_call`` with an explicit strip loop
+# and a VMEM scratch accumulator:
+#
+# * ``stream_impl="grid"`` -- the strip loop stays a grid dimension, but
+#   partial skew-sums accumulate into a VMEM scratch tile; ``out_ref`` is
+#   written exactly once, on the final strip (the interpret/CPU
+#   emulation of the DMA path: block-indexed strip fetches, identical
+#   numerics and revisit structure),
+# * ``stream_impl="dma"`` -- the operand stays in HBM
+#   (``memory_space=ANY``); the kernel drives its own strip loop with
+#   double-buffered ``pltpu.make_async_copy`` HBM->VMEM copies (2 strip
+#   slots + 2 DMA semaphores): strip k+1's copy is launched before strip
+#   k is consumed, so the Horner datapath hides the HBM fetch latency
+#   (the Mosaic path).  Exactly ONE strip buffer pair is live regardless
+#   of ceil(N/H) -- memory is O(H*N), not O(N^2).
+#
+# Both variants replace the plan layer's scan-of-launches ``block_rows``
+# fallback on pallas-capable backends: one launch, one jaxpr, partial
+# sums never round-tripping through HBM between strips.
+# ===========================================================================
+
+
+def _stream_grid_kernel(f_ref, *rest, n: int, n_pad: int, h: int,
+                        m_block: int, sign: int, k_steps: int, mode: str,
+                        acc_dtype, step_impl: str, with_offset: bool):
+    """One (batch, m-block, strip) step of the streamed kernel, strip loop
+    on the grid: partial skew-sums accumulate in a VMEM scratch tile and
+    ``out_ref`` is written once, on the final strip."""
+    rest = list(rest)
+    off_ref = rest.pop(0) if with_offset else None
+    corr_ref = rest.pop(0) if mode == "inverse" else None
+    out_ref, acc_ref = rest
+    mb = pl.program_id(1)
+    k = pl.program_id(2)
+
+    zero = jnp.zeros((), acc_dtype)
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (m_block, 1), 0)
+    grow = mb * m_block + row_iota
+    valid = grow < n
+    m_vec = jnp.where(valid, grow, 0)
+    offset = k * h
+    if with_offset:
+        offset = offset + off_ref[0, 0]
+
+    acc = _strip_block_partial(
+        lambda j: f_ref[0, j, :], h=h, n=n, n_pad=n_pad, m_block=m_block,
+        m_vec=m_vec, valid=valid, offset=offset, sign=sign,
+        step_impl=step_impl, acc_dtype=acc_dtype)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = acc
+
+    @pl.when(k > 0)
+    def _accum():
+        acc_ref[...] = acc_ref[...] + acc
+
+    if mode == "forward":
+        # fused R(N, d) epilogue: this strip owns lanes [offset, offset+H)
+        @pl.when(mb == n // m_block)
+        def _rowsum():
+            rsum = jnp.sum(f_ref[0].astype(acc_dtype), axis=1, keepdims=True)
+            lane = jax.lax.broadcasted_iota(jnp.int32, (h, n_pad), 1)
+            srow = jax.lax.broadcasted_iota(jnp.int32, (h, n_pad), 0)
+            placed = jnp.sum(jnp.where(lane == offset + srow, rsum, zero),
+                             axis=0)
+            acc_ref[...] = acc_ref[...] + jnp.where(
+                grow == n, placed[None, :], zero)
+
+    @pl.when(k == k_steps - 1)
+    def _flush():
+        total = acc_ref[...]
+        if mode == "inverse":
+            total = total + corr_ref[0].astype(acc_dtype)
+            if jnp.issubdtype(jnp.dtype(acc_dtype), jnp.integer):
+                res = total // n
+            else:
+                res = total / n
+            out_ref[0] = jnp.where(valid, res, zero)
+        else:
+            out_ref[0] = total
+
+
+def _stream_dma_kernel(f_ref, *rest, n: int, n_pad: int, h: int,
+                       m_block: int, sign: int, k_steps: int, mode: str,
+                       acc_dtype, step_impl: str, with_offset: bool):
+    """One (batch, m-block) step of the streamed kernel, strip loop in
+    the kernel: the operand stays in HBM (``memory_space=ANY``) and the
+    ``fori_loop`` below double-buffers H-row strips into a 2-slot VMEM
+    scratch with ``make_async_copy`` -- strip k+1's DMA is started before
+    strip k's partial skew-sum runs, so compute hides the fetch."""
+    rest = list(rest)
+    off_ref = rest.pop(0) if with_offset else None
+    corr_ref = rest.pop(0) if mode == "inverse" else None
+    out_ref, buf_ref, sem_ref = rest
+    bb = pl.program_id(0)
+    mb = pl.program_id(1)
+
+    zero = jnp.zeros((), acc_dtype)
+    row_iota = jax.lax.broadcasted_iota(jnp.int32, (m_block, 1), 0)
+    grow = mb * m_block + row_iota
+    valid = grow < n
+    m_vec = jnp.where(valid, grow, 0)
+    off0 = off_ref[0, 0] if with_offset else 0
+
+    def copy_in(slot, k):
+        return pltpu.make_async_copy(
+            f_ref.at[bb, pl.ds(k * h, h), :],
+            buf_ref.at[slot],
+            sem_ref.at[slot])
+
+    copy_in(0, 0).start()
+
+    def body(k, acc):
+        slot = jax.lax.rem(k, 2)
+
+        @pl.when(k + 1 < k_steps)
+        def _prefetch():                       # overlap: next strip's DMA
+            copy_in(jax.lax.rem(k + 1, 2), k + 1).start()
+
+        copy_in(slot, k).wait()
+        offset = k * h + off0
+        acc = acc + _strip_block_partial(
+            lambda j: buf_ref[slot, j, :], h=h, n=n, n_pad=n_pad,
+            m_block=m_block, m_vec=m_vec, valid=valid, offset=offset,
+            sign=sign, step_impl=step_impl, acc_dtype=acc_dtype)
+        if mode == "forward":
+            # fused R(N, d) epilogue while the strip is VMEM-resident;
+            # mb is traced here (loop-carried value, not a ref), so the
+            # owning-block condition folds into the placement mask
+            rsum = jnp.sum(buf_ref[slot].astype(acc_dtype), axis=1,
+                           keepdims=True)
+            lane = jax.lax.broadcasted_iota(jnp.int32, (h, n_pad), 1)
+            srow = jax.lax.broadcasted_iota(jnp.int32, (h, n_pad), 0)
+            placed = jnp.sum(jnp.where(lane == offset + srow, rsum, zero),
+                             axis=0)
+            owns = jnp.logical_and(mb == n // m_block, grow == n)
+            acc = acc + jnp.where(owns, placed[None, :], zero)
+        return acc
+
+    acc = jax.lax.fori_loop(0, k_steps, body,
+                            jnp.zeros((m_block, n_pad), acc_dtype))
+
+    if mode == "inverse":
+        total = acc + corr_ref[0].astype(acc_dtype)
+        if jnp.issubdtype(jnp.dtype(acc_dtype), jnp.integer):
+            res = total // n
+        else:
+            res = total / n
+        out_ref[0] = jnp.where(valid, res, zero)
+    else:
+        out_ref[0] = acc
+
+
+def _pallas_stream_call(g: jnp.ndarray, *, sign: int, mode: str,
+                        stream_rows: int, m_block: int, interpret: bool,
+                        corr: jnp.ndarray | None = None,
+                        lane_pad: bool | None = None,
+                        step_impl: str | None = None,
+                        stream_impl: str | None = None,
+                        row_offset: jnp.ndarray | int | None = None
+                        ) -> jnp.ndarray:
+    """Streamed fused pallas_call: like :func:`_pallas_skew_call` but the
+    strip loop accumulates into a VMEM scratch (``stream_impl="grid"``)
+    or is driven in-kernel with double-buffered HBM->VMEM DMA copies
+    (``stream_impl="dma"``, default off-interpret).  ``stream_rows`` is
+    the streamed strip height H; VMEM footprint is O(m_block*N + H*N)
+    per grid step regardless of ceil(N/H)."""
+    if pltpu is None:  # pragma: no cover - pltpu import failed
+        raise RuntimeError("streamed SFDPRT kernels need pallas TPU "
+                           "support (jax.experimental.pallas.tpu)")
+    b, rows, n = g.shape
+    acc_dtype = g.dtype
+    h = max(1, min(int(stream_rows), rows))
+    k_steps = math.ceil(rows / h)
+    if lane_pad is None:
+        lane_pad = not interpret
+    if step_impl is None:
+        step_impl = "permute" if interpret else "ladder"
+    if stream_impl is None:
+        stream_impl = "grid" if interpret else "dma"
+    if stream_impl not in ("grid", "dma"):
+        raise ValueError(f"stream_impl must be 'grid' or 'dma': "
+                         f"{stream_impl!r}")
+    n_pad = ((n + LANE - 1) // LANE) * LANE if lane_pad else n
+    out_rows = n + 1 if mode == "forward" else n
+    r_blocks = math.ceil(out_rows / m_block)
+    grid_rank = 3 if stream_impl == "grid" else 2
+
+    gp = jnp.pad(g, ((0, 0), (0, k_steps * h - rows), (0, n_pad - n)))
+    if stream_impl == "grid":
+        in_specs = [pl.BlockSpec((1, h, n_pad), lambda bb, i, j: (bb, j, 0))]
+    else:
+        # the operand never enters the BlockSpec pipeline: it stays in
+        # HBM and the kernel DMAs strips on its own schedule
+        in_specs = [pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)]
+    operands = [gp]
+    with_offset = row_offset is not None
+    if with_offset:
+        off = jnp.asarray(row_offset, jnp.int32).reshape(1, 1)
+        in_specs.append(pl.BlockSpec(
+            (1, 1), (lambda bb, i, j: (0, 0)) if grid_rank == 3
+            else (lambda bb, i: (0, 0))))
+        operands.append(off)
+    if mode == "inverse":
+        corr_p = jnp.pad(corr.astype(acc_dtype),
+                         ((0, 0), (0, r_blocks * m_block - n)))[..., None]
+        in_specs.append(pl.BlockSpec(
+            (1, m_block, 1), (lambda bb, i, j: (bb, i, 0)) if grid_rank == 3
+            else (lambda bb, i: (bb, i, 0))))
+        operands.append(corr_p)
+
+    kw = dict(n=n, n_pad=n_pad, h=h, m_block=m_block, sign=sign,
+              k_steps=k_steps, mode=mode, acc_dtype=acc_dtype,
+              step_impl=step_impl, with_offset=with_offset)
+    if stream_impl == "grid":
+        kernel = functools.partial(_stream_grid_kernel, **kw)
+        grid = (b, r_blocks, k_steps)
+        out_spec = pl.BlockSpec((1, m_block, n_pad),
+                                lambda bb, i, j: (bb, i, 0))
+        scratch = [pltpu.VMEM((m_block, n_pad), acc_dtype)]
+        cparams = None if interpret else _COMPILER_PARAMS
+    else:
+        kernel = functools.partial(_stream_dma_kernel, **kw)
+        grid = (b, r_blocks)
+        out_spec = pl.BlockSpec((1, m_block, n_pad), lambda bb, i: (bb, i, 0))
+        # exactly ONE double-buffer pair, however many strips stream
+        scratch = [pltpu.VMEM((2, h, n_pad), acc_dtype),
+                   pltpu.SemaphoreType.DMA((2,))]
+        cparams = None if interpret else _tpu_compiler_params(
+            ("parallel", "arbitrary"))
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((b, r_blocks * m_block, n_pad),
+                                       acc_dtype),
+        scratch_shapes=scratch,
+        compiler_params=cparams,
+        interpret=interpret,
+    )(*operands)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("sign", "strip_rows", "m_block",
-                                    "interpret", "step_impl"))
+                                    "interpret", "step_impl",
+                                    "stream_rows", "stream_impl"))
 def skew_sum_pallas_raw(g: jnp.ndarray, sign: int = 1, strip_rows: int = 16,
                         m_block: int = 8, interpret: bool = True,
                         step_impl: str | None = None,
-                        row_offset=None) -> jnp.ndarray:
+                        row_offset=None, stream_rows: int | None = None,
+                        stream_impl: str | None = None) -> jnp.ndarray:
     """Bare skew_sum via the strip kernel (core mode, no fused epilogue).
 
     g: (rows, N) or a batched (B, rows, N) stack, N prime.  Returns the
@@ -358,21 +643,31 @@ def skew_sum_pallas_raw(g: jnp.ndarray, sign: int = 1, strip_rows: int = 16,
     single = g.ndim == 2
     gb = g[None] if single else g
     n = gb.shape[-1]
-    out = _pallas_skew_call(gb.astype(accum_dtype_for(g.dtype)), sign=sign,
-                            mode="core", strip_rows=strip_rows,
-                            m_block=m_block, interpret=interpret,
-                            step_impl=step_impl, row_offset=row_offset)
+    ga = gb.astype(accum_dtype_for(g.dtype, n))
+    if stream_rows is not None:
+        out = _pallas_stream_call(ga, sign=sign, mode="core",
+                                  stream_rows=stream_rows, m_block=m_block,
+                                  interpret=interpret, step_impl=step_impl,
+                                  stream_impl=stream_impl,
+                                  row_offset=row_offset)
+    else:
+        out = _pallas_skew_call(ga, sign=sign, mode="core",
+                                strip_rows=strip_rows, m_block=m_block,
+                                interpret=interpret, step_impl=step_impl,
+                                row_offset=row_offset)
     out = out[:, :n, :n]
     return out[0] if single else out
 
 
 @functools.partial(jax.jit,
                    static_argnames=("strip_rows", "m_block", "interpret",
-                                    "step_impl"))
+                                    "step_impl", "stream_rows",
+                                    "stream_impl"))
 def dprt_pallas_raw(f: jnp.ndarray, strip_rows: int = 16, m_block: int = 8,
                     interpret: bool = True,
                     step_impl: str | None = None,
-                    row_offset=None) -> jnp.ndarray:
+                    row_offset=None, stream_rows: int | None = None,
+                    stream_impl: str | None = None) -> jnp.ndarray:
     """Fused batched forward DPRT: (B, N, N) -> (B, N+1, N) in ONE
     pallas_call; the R(N, d) row-sum row is produced by the in-kernel
     epilogue rather than a second pass over the image.
@@ -383,30 +678,48 @@ def dprt_pallas_raw(f: jnp.ndarray, strip_rows: int = 16, m_block: int = 8,
     cross-device ``psum`` of the partials is the exact full transform.
     """
     _, _, n = f.shape
-    out = _pallas_skew_call(f.astype(accum_dtype_for(f.dtype)), sign=1,
-                            mode="forward", strip_rows=strip_rows,
-                            m_block=m_block, interpret=interpret,
-                            step_impl=step_impl, row_offset=row_offset)
+    fa = f.astype(accum_dtype_for(f.dtype, n))
+    if stream_rows is not None:
+        out = _pallas_stream_call(fa, sign=1, mode="forward",
+                                  stream_rows=stream_rows, m_block=m_block,
+                                  interpret=interpret, step_impl=step_impl,
+                                  stream_impl=stream_impl,
+                                  row_offset=row_offset)
+    else:
+        out = _pallas_skew_call(fa, sign=1, mode="forward",
+                                strip_rows=strip_rows, m_block=m_block,
+                                interpret=interpret, step_impl=step_impl,
+                                row_offset=row_offset)
     return out[:, :n + 1, :n]
 
 
 @functools.partial(jax.jit,
                    static_argnames=("strip_rows", "m_block", "interpret",
-                                    "step_impl"))
+                                    "step_impl", "stream_rows",
+                                    "stream_impl"))
 def idprt_pallas_raw(r: jnp.ndarray, strip_rows: int = 16, m_block: int = 8,
                      interpret: bool = True,
-                     step_impl: str | None = None) -> jnp.ndarray:
+                     step_impl: str | None = None,
+                     stream_rows: int | None = None,
+                     stream_impl: str | None = None) -> jnp.ndarray:
     """Fused batched inverse DPRT: (B, N+1, N) -> (B, N, N) in ONE
     pallas_call; the -S + R(N, i) correction and exact divide-by-N run
     in-kernel on the final strip (no post-kernel pass)."""
     _, _, n = r.shape
-    acc = accum_dtype_for(r.dtype)
+    acc = accum_dtype_for(r.dtype, n)
     ra = r.astype(acc)
     corr = ra[:, n, :] - ra[:, 0, :].sum(axis=1, keepdims=True)
-    out = _pallas_skew_call(ra[:, :n, :], sign=-1, mode="inverse",
-                            strip_rows=strip_rows, m_block=m_block,
-                            interpret=interpret, corr=corr,
-                            step_impl=step_impl)
+    if stream_rows is not None:
+        out = _pallas_stream_call(ra[:, :n, :], sign=-1, mode="inverse",
+                                  stream_rows=stream_rows, m_block=m_block,
+                                  interpret=interpret, corr=corr,
+                                  step_impl=step_impl,
+                                  stream_impl=stream_impl)
+    else:
+        out = _pallas_skew_call(ra[:, :n, :], sign=-1, mode="inverse",
+                                strip_rows=strip_rows, m_block=m_block,
+                                interpret=interpret, corr=corr,
+                                step_impl=step_impl)
     return out[:, :n, :n]
 
 
@@ -826,11 +1139,8 @@ def pipeline_pallas_raw(f: jnp.ndarray, operand: jnp.ndarray | None = None,
                                              lambda bb, i: (0, i, 0)))
         operands.append(wp.astype(acc_dtype))
 
-    try:
-        cparams = None if interpret else pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary"))
-    except NameError:  # pragma: no cover
-        cparams = None
+    cparams = None if interpret else _tpu_compiler_params(
+        ("parallel", "arbitrary"))
 
     out, aux = pl.pallas_call(
         functools.partial(

@@ -15,10 +15,31 @@ dispatch-time lookup with a heuristic fallback for unlisted N.
 from __future__ import annotations
 
 import math
+import warnings
 
 __all__ = ["PALLAS_TUNE", "pallas_block_spec", "resolve_blocks",
            "PIPELINE_TUNE", "pipeline_block_spec", "resolve_pipeline_blocks",
            "wasted_direction_rows"]
+
+# N values we already warned about (once per process per N): a giant-N
+# heuristic fallback should be loud exactly once, not per dispatch.
+_FALLBACK_WARNED: set = set()
+_PIPELINE_FALLBACK_WARNED: set = set()
+
+
+def _warn_off_table(n: int, table: dict, warned: set, kind: str) -> None:
+    """Warn ONCE when N falls off the top of a measured table: the
+    heuristic extrapolates block shapes that nobody has timed at this
+    size, which is exactly when silent mis-tuning hurts most."""
+    top = max(table)
+    if n > top and n not in warned:
+        warned.add(n)
+        warnings.warn(
+            f"N={n} is beyond the largest measured {kind} tuning row "
+            f"(N={top}); using the heuristic block-shape fallback. "
+            f"Pass strip_rows/m_block (or stream_rows) explicitly, or "
+            f"add a measured entry, if performance matters at this size.",
+            stacklevel=3)
 
 # N: (strip_rows H, m_block M).  M multiples of 8 keep int32 sublane
 # tiling aligned off the interpret path.  CPU-interpret measurements
@@ -41,6 +62,11 @@ PALLAS_TUNE = {
     251: (251, 32),
     509: (256, 32),
     1021: (256, 64),
+    # giant-N rows (the streamed-strip kernels): H=256 keeps one strip +
+    # double buffer at (2*256 + 2*64) * N_pad * 4B < 6 MB VMEM even at
+    # N=4099; M=64 amortizes the hoisted ladder over a full sublane tile
+    2053: (256, 64),
+    4099: (256, 64),
 }
 
 
@@ -56,6 +82,7 @@ def pallas_block_spec(n: int, itemsize: int = 4) -> tuple[int, int]:
     """
     if n in PALLAS_TUNE:
         return PALLAS_TUNE[n]
+    _warn_off_table(n, PALLAS_TUNE, _FALLBACK_WARNED, "pallas")
     if n <= 32:
         return n, 8
     h = min(n, 128)
@@ -76,13 +103,27 @@ def pallas_block_spec(n: int, itemsize: int = 4) -> tuple[int, int]:
 
 
 def resolve_blocks(n: int, itemsize: int = 4,
-                   strip_rows=None, m_block=None) -> tuple[int, int]:
+                   strip_rows=None, m_block=None, block_rows=None,
+                   stream_rows=None) -> tuple[int, int]:
     """Fill missing (strip_rows, m_block) from the table, validate given.
 
     The single knob-resolution used by both the Pallas op wrappers and
     the transform-plan layer (``repro.core.plan``), so ``method="auto"``
     and explicit ``method="pallas"`` land on identical block shapes.
+
+    ``block_rows`` (the scan-of-launches staged fallback) and
+    ``stream_rows`` (the in-launch streamed kernel) both partition the
+    image into row strips; asking for BOTH is ambiguous and rejected
+    here rather than silently preferring one.
     """
+    if block_rows is not None and stream_rows is not None:
+        raise ValueError(
+            f"block_rows={block_rows} and stream_rows={stream_rows} are "
+            "mutually exclusive: block_rows scans separate kernel "
+            "launches over row strips (the staged fallback), stream_rows "
+            "streams strips through ONE fused launch. Pick one.")
+    if stream_rows is not None and int(stream_rows) < 1:
+        raise ValueError(f"stream_rows must be >= 1, got {stream_rows}")
     th, tm = pallas_block_spec(n, itemsize)
     h = th if strip_rows is None else int(strip_rows)
     mb = tm if m_block is None else int(m_block)
@@ -116,6 +157,8 @@ PIPELINE_TUNE = {
     251: (64, 4),
     509: (64, 4),
     1021: (64, 4),
+    2053: (64, 4),
+    4099: (64, 4),
 }
 
 
@@ -123,6 +166,7 @@ def pipeline_block_spec(n: int, itemsize: int = 4) -> tuple[int, int]:
     """Tuned (m_block, conv tap group) for the fused pipeline kernel."""
     if n in PIPELINE_TUNE:
         return PIPELINE_TUNE[n]
+    _warn_off_table(n, PIPELINE_TUNE, _PIPELINE_FALLBACK_WARNED, "pipeline")
     if n <= 61:
         return n + 1, 4         # one m-block covers every direction row
     return 64, 4

@@ -14,7 +14,8 @@ forward/inverse executables before the timing loop (``op.compile()``,
 cached per geometry), which together with the zero-leaf pytree plans
 gives the zero-retrace steady state -- asserted by a retrace guard
 around the timed section.  ``--strip-rows`` / ``--m-block`` /
-``--batch-impl`` / ``--block-batch`` plumb straight into the operator.
+``--stream-rows`` / ``--batch-impl`` / ``--block-batch`` plumb straight
+into the operator.
 ``--mesh-shape D,M`` serves through a (data, model) device mesh:
 ``method=auto`` then resolves to the ``sharded_pallas`` backend (batch
 shards over ``data``, row super-strips over ``model``; one fused kernel
@@ -116,6 +117,7 @@ def serve_radon(args):
     op = radon.DPRT(imgs.shape, imgs.dtype, args.method,
                     strip_rows=args.strip_rows, m_block=args.m_block,
                     batch_impl=args.batch_impl,
+                    stream_rows=args.stream_rows,
                     block_batch=args.block_batch, mesh=mesh)
     inv = op.inverse
     if op.input_sharding is not None:
@@ -159,7 +161,8 @@ def serve_radon(args):
 
 def list_backends():
     cols = ("name", "priority", "batched_native", "needs_strip_rows",
-            "takes_m_block", "mesh_aware", "pipeline", "dtypes", "note")
+            "takes_m_block", "stream", "mesh_aware", "pipeline", "dtypes",
+            "note")
     for row in backend_capabilities():
         print("  ".join(f"{c}={row[c]}" for c in cols))
 
@@ -185,6 +188,11 @@ def main(argv=None):
                     help="strip height H (strips/pallas; default: tuned)")
     ap.add_argument("--m-block", type=int, default=None,
                     help="direction block M (pallas; default: tuned)")
+    ap.add_argument("--stream-rows", type=int, default=None,
+                    help="stream the image through ONE pallas launch in "
+                         "row strips of this height (giant-N images that "
+                         "don't fit VMEM whole; stream-capable backends "
+                         "only, others scan-fall-back)")
     ap.add_argument("--batch-impl", default="auto",
                     choices=["auto", "map", "vmap"],
                     help="batching for non-batched-native backends")

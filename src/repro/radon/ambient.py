@@ -34,7 +34,7 @@ __all__ = ["config", "current_config", "resolve", "snapshot_knobs",
 #: knobs an ambient scope may set -- the same surface get_plan accepts.
 #: This is also the field order of :func:`snapshot_knobs` tuples.
 CONFIG_KEYS = ("method", "strip_rows", "m_block", "batch_impl",
-               "block_rows", "block_batch", "mesh")
+               "block_rows", "stream_rows", "block_batch", "mesh")
 
 _tls = threading.local()
 
@@ -50,7 +50,8 @@ class config:
     """Context manager installing ambient transform defaults.
 
     Accepted keys: ``method``, ``strip_rows``, ``m_block``,
-    ``batch_impl``, ``block_rows``, ``block_batch``, ``mesh``.  A value
+    ``batch_impl``, ``block_rows``, ``stream_rows``, ``block_batch``,
+    ``mesh``.  A value
     of ``None`` is ignored (it cannot mask an outer scope's setting).
     Re-entrant use of one ``config`` object is rejected.
     """
@@ -113,7 +114,8 @@ def snapshot_knobs(method: Optional[str] = None,
             resolve("strip_rows", strip_rows),
             resolve("m_block", m_block),
             resolve("batch_impl", batch_impl),
-            cfg.get("block_rows"), cfg.get("block_batch"), cfg.get("mesh"))
+            cfg.get("block_rows"), cfg.get("stream_rows"),
+            cfg.get("block_batch"), cfg.get("mesh"))
 
 
 def knobs_kwargs(knobs: tuple) -> Dict[str, Any]:

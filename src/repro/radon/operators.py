@@ -129,11 +129,11 @@ class RadonOperator:
         # accumulator dtype the transforms emit
         if self.kind == "forward":
             return self.dtype
-        return jnp.dtype(accum_dtype_for(self.dtype))
+        return jnp.dtype(accum_dtype_for(self.dtype, self.plan.geometry.prime))
 
     @property
     def dtype_out(self):
-        return jnp.dtype(accum_dtype_for(self.dtype))
+        return jnp.dtype(accum_dtype_for(self.dtype, self.plan.geometry.prime))
 
     # -- application -------------------------------------------------------
     def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
@@ -540,6 +540,7 @@ class Conv2D:
                  m_block: Optional[int] = None,
                  batch_impl: Optional[str] = None,
                  block_rows: Optional[int] = None,
+                 stream_rows: Optional[int] = None,
                  block_batch: Optional[int] = None,
                  mesh=None):
         kernel = jnp.asarray(kernel)
@@ -556,8 +557,8 @@ class Conv2D:
                          ((0, h - kernel.shape[0]), (0, w - kernel.shape[1])))
         plan = DPRT(shape, dtype, method, strip_rows=strip_rows,
                     m_block=m_block, batch_impl=batch_impl,
-                    block_rows=block_rows, block_batch=block_batch,
-                    mesh=mesh).plan
+                    block_rows=block_rows, stream_rows=stream_rows,
+                    block_batch=block_batch, mesh=mesh).plan
         object.__setattr__(self, "plan", plan)
         object.__setattr__(self, "kernel", kernel)
         object.__setattr__(self, "dtype", jnp.dtype(dtype))
@@ -577,7 +578,7 @@ class Conv2D:
 
     @property
     def dtype_out(self):
-        return jnp.dtype(accum_dtype_for(self.dtype))
+        return jnp.dtype(accum_dtype_for(self.dtype, self.plan.geometry.prime))
 
     def __call__(self, f: jnp.ndarray) -> jnp.ndarray:
         g = self.plan.geometry
@@ -592,6 +593,7 @@ class Conv2D:
         with ambient.config(mesh=self.plan.mesh,
                             batch_impl=self.plan.batch_impl,
                             block_rows=self.plan.block_rows,
+                            stream_rows=self.plan.stream_rows,
                             block_batch=self.plan.block_batch):
             return circ_conv2d_dprt(f, self.kernel,
                                     method=self.plan.method,
@@ -607,6 +609,7 @@ class Conv2D:
                       m_block=self.plan.m_block,
                       batch_impl=self.plan.batch_impl,
                       block_rows=self.plan.block_rows,
+                      stream_rows=self.plan.stream_rows,
                       block_batch=self.plan.block_batch,
                       mesh=self.plan.mesh)
 
@@ -664,6 +667,7 @@ def DPRT(shape, dtype=jnp.int32, method: Optional[str] = None, *,
          m_block: Optional[int] = None,
          batch_impl: Optional[str] = None,
          block_rows: Optional[int] = None,
+         stream_rows: Optional[int] = None,
          block_batch: Optional[int] = None,
          mesh=None) -> RadonOperator:
     """The forward DPRT operator for one input geometry.
@@ -687,6 +691,7 @@ def DPRT(shape, dtype=jnp.int32, method: Optional[str] = None, *,
         m_block=ambient.resolve("m_block", m_block),
         batch_impl=ambient.resolve("batch_impl", batch_impl, "auto"),
         block_rows=ambient.resolve("block_rows", block_rows),
+        stream_rows=ambient.resolve("stream_rows", stream_rows),
         block_batch=ambient.resolve("block_batch", block_batch),
         mesh=ambient.resolve("mesh", mesh))
     return RadonOperator(plan, "forward", dtype)

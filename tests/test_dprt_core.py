@@ -175,3 +175,69 @@ def test_tree_resources_matches_structure():
     r = P.tree_resources(2, 8)
     assert r["fa"] == 8 and r["ff"] == 9            # one 8-bit adder stage
     assert P.tree_resources(1, 8) == {"fa": 0, "ff": 0, "mux": 0}
+
+
+# ---------------------------------------------------------------------------
+# accumulator promotion bound: v*N*(N+1) <= 2^31-1 (inverse worst case)
+# ---------------------------------------------------------------------------
+def test_int32_accum_bound_cliffs():
+    """The documented cliffs of the exact-int32 bound: uint8 pixels hold
+    to prime N=2897 and fail at 2903; int16 already fails at 257."""
+    assert D.int32_accum_exact(2897, jnp.uint8)
+    assert not D.int32_accum_exact(2903, jnp.uint8)
+    assert D.int32_accum_exact(251, jnp.int16)
+    assert not D.int32_accum_exact(257, jnp.int16)
+    # the giant-N streamed geometries stay exact for 8-bit pixels
+    assert D.int32_accum_exact(2053, jnp.uint8)
+    assert not D.int32_accum_exact(4099, jnp.uint8)
+    with pytest.raises(TypeError):
+        D.int32_accum_exact(251, jnp.float32)
+
+
+def test_accum_dtype_promotion_rules():
+    # below the cliff: int32 accumulator, with or without N
+    assert D.accum_dtype_for(jnp.uint8, 2897) == jnp.int32
+    assert D.accum_dtype_for(jnp.int16, 251) == jnp.int32
+    # int32/uint32 inputs never promote (their max is not a pixel bound)
+    assert D.accum_dtype_for(jnp.int32, 4099) == jnp.int32
+    assert D.accum_dtype_for(jnp.uint32, 4099) == jnp.int32
+    # legacy dtype-only rule is unchanged
+    assert D.accum_dtype_for(jnp.uint8) == jnp.int32
+    assert D.accum_dtype_for(jnp.int64) == jnp.int64
+
+
+def test_accum_overflow_regression_at_bound(subproc):
+    """Full-range int16 pixels at N=257 (just past the int32 cliff):
+    with x64 the accumulator promotes to int64 and the round trip is
+    bit-exact; the same data WOULD overflow an int32 accumulator."""
+    subproc("""
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np, jax.numpy as jnp
+import importlib
+D = importlib.import_module("repro.core.dprt")
+n = 257
+assert not D.int32_accum_exact(n, jnp.int16)
+assert D.accum_dtype_for(jnp.int16, n) == jnp.int64
+rng = np.random.default_rng(19)
+# near-full-range negative pixels: the inverse's per-pixel sum over all
+# N directions (Z = sum_m R(m, <j - m i>)) reaches ~N^2 * 32768, past
+# the int32 edge at N=257
+f = (-32768 + rng.integers(0, 64, (n, n))).astype(np.int16)
+r = D.dprt(jnp.asarray(f))
+assert r.dtype == jnp.int64
+rnp = np.asarray(r, dtype=np.int64)
+cols = np.arange(n)
+z = np.zeros((n, n), dtype=np.int64)
+for i in range(n):
+    z[i] = rnp[np.arange(n), (cols[None, :] - np.arange(n)[:, None] * i) % n
+               ].sum(axis=0)
+assert np.abs(z).max() > 2**31 - 1, "data must overflow an int32 accum"
+back = D.idprt(r)
+assert (np.asarray(back) == f.astype(np.int64)).all()
+print("OK")
+""", devices=1)
+
+
+test_accum_overflow_regression_at_bound = pytest.mark.slow(
+    test_accum_overflow_regression_at_bound)
