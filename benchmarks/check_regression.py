@@ -129,8 +129,12 @@ def compare(baseline: dict, fresh_rows: list, tol: float) -> tuple:
 
 
 def run_guard(fresh_rows: list, baseline_path: str = None,
-              tol: float = DEFAULT_TOL) -> int:
-    """Compare ``fresh_rows`` against the committed baseline; 0 = pass."""
+              tol: float = DEFAULT_TOL, prefixes=None) -> int:
+    """Compare ``fresh_rows`` against the committed baseline; 0 = pass.
+
+    ``prefixes`` restricts the comparison scope (a ``run --only`` pass
+    measures one prefix family; out-of-scope baseline rows must not be
+    reported MISSING)."""
     import jax
     baseline_path = baseline_path or common.BENCH_DPRT_PATH
     try:
@@ -139,6 +143,9 @@ def run_guard(fresh_rows: list, baseline_path: str = None,
         print(f"# no usable baseline at {baseline_path}: {e}",
               file=sys.stderr)
         return 0
+    if prefixes is not None:
+        baseline["rows"] = {k: v for k, v in baseline["rows"].items()
+                            if k.startswith(tuple(prefixes))}
     if baseline["backend"] != jax.default_backend():
         print(f"# SKIPPED: baseline backend {baseline['backend']!r} != "
               f"current {jax.default_backend()!r} (incomparable timings)",
@@ -166,13 +173,14 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from . import (bench_conv, bench_dprt_impl, bench_dprt_sharded,
-                   bench_stream)
+                   bench_serve, bench_stream)
     start = len(common.ROWS)
     print("name,us_per_call,derived")
     bench_dprt_impl.main()
     bench_conv.main()           # staged-vs-fused projection pipelines
     bench_dprt_sharded.main()   # warns + emits nothing where unavailable
     bench_stream.main()         # streamed-strip + direction-sharded rows
+    bench_serve.main()          # dynamic batching + persistent AOT rows
     fresh = [r for r in common.ROWS[start:]
              if r["name"].startswith(common.BENCH_PREFIXES)]
     raise SystemExit(run_guard(fresh, args.baseline, args.tol))

@@ -19,9 +19,10 @@ BENCH_DPRT_PATH = os.path.join(
 
 #: row-name prefixes folded into (and regressed against) the baseline
 #: artifact: the DPRT implementation shoot-out, the projection-pipeline
-#: conv/DFT rows, and the streamed-strip / direction-sharded rows.
+#: conv/DFT rows, the streamed-strip / direction-sharded rows, and the
+#: dynamic-batching serve tier.
 BENCH_PREFIXES = ("dprt_impl/", "conv/", "dft/", "stream/",
-                  "sharded_stream/")
+                  "sharded_stream/", "serve/")
 
 
 def emit(name: str, us_per_call: float, derived: str = "", **extra) -> None:
@@ -50,6 +51,30 @@ def dump_json(path: str, prefix=None) -> dict:
         json.dump(artifact, fh, indent=2, sort_keys=True)
     # status to stderr: stdout is the name,us_per_call,derived CSV stream
     print(f"# wrote {len(rows)} rows -> {path}", file=sys.stderr)
+    return artifact
+
+
+def merge_json(path: str, prefixes) -> dict:
+    """Update the artifact at ``path`` in place for ``prefixes`` only:
+    recorded rows under those prefixes replace the baseline's, every
+    other baseline row is kept verbatim.  The partial-rerun writer
+    behind ``benchmarks.run --only`` -- a single-prefix rerun must
+    never clobber the rest of the committed baseline.
+    """
+    fresh = [r for r in ROWS if r["name"].startswith(tuple(prefixes))]
+    try:
+        with open(path) as fh:
+            artifact = json.load(fh)
+    except (OSError, json.JSONDecodeError):
+        artifact = {}
+    kept = [r for r in artifact.get("rows", [])
+            if not r["name"].startswith(tuple(prefixes))]
+    artifact = {"backend": artifact.get("backend") or jax.default_backend(),
+                "rows": sorted(kept + fresh, key=lambda r: r["name"])}
+    with open(path, "w") as fh:
+        json.dump(artifact, fh, indent=2, sort_keys=True)
+    print(f"# merged {len(fresh)} rows under {tuple(prefixes)} -> {path} "
+          f"({len(kept)} rows kept)", file=sys.stderr)
     return artifact
 
 

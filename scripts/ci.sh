@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Quick CI gate: the tier-1 test suite, the public-API health smoke,
+# and the serving-tier perf guard against the committed baseline.
+#
+#   scripts/ci.sh            # from the repo root
+#
+# Stays on the quick tier by design: `-m "not slow"` skips the
+# forced-host multi-device subprocess tests, and the perf guard runs
+# `--only serve` (the full shoot-out baseline is a longer, separate
+# `python -m benchmarks.run --check`).  Each step's failure fails the
+# script (set -e), so CI reports the first broken gate.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="${PYTHONPATH:+$PYTHONPATH:}$PWD/src"
+
+echo "== [1/3] quick-tier tests =="
+python -m pytest -x -q -m "not slow" tests
+
+echo "== [2/3] repro.radon.selfcheck =="
+python -m repro.radon.selfcheck
+
+echo "== [3/3] serve perf guard (vs committed BENCH_dprt.json) =="
+python -m benchmarks.run --check --only serve
+
+echo "== ci.sh: all gates passed =="

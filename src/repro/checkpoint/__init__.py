@@ -1,2 +1,3 @@
 from .store import (save_checkpoint, restore_checkpoint, latest_step,
-                    AsyncCheckpointer, gc_checkpoints)
+                    AsyncCheckpointer, gc_checkpoints,
+                    save_blob, load_blob, list_blobs, delete_blob)

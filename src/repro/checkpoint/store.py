@@ -20,7 +20,8 @@ import jax
 import numpy as np
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "AsyncCheckpointer", "gc_checkpoints"]
+           "AsyncCheckpointer", "gc_checkpoints",
+           "save_blob", "load_blob", "list_blobs", "delete_blob"]
 
 _SEP = "::"
 
@@ -119,6 +120,96 @@ def gc_checkpoints(directory: str, keep: int = 3) -> None:
     for s in steps[:-keep]:
         shutil.rmtree(os.path.join(directory, f"step_{s:08d}"),
                       ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# keyed binary blobs (the persistent AOT-executable cache rides this)
+#
+# One file per key: an 8-byte big-endian header length, a JSON header
+# {"key", "meta", "size"}, then the payload -- written to ``.tmp`` and
+# atomically renamed like the step checkpoints, so readers never see a
+# torn blob and a crash mid-write leaves only an ignorable ``.tmp``.
+# ---------------------------------------------------------------------------
+_BLOB_SUFFIX = ".blob"
+
+
+def _blob_path(directory: str, key: str) -> str:
+    fname = re.sub(r"[^A-Za-z0-9_.-]", "_", key) + _BLOB_SUFFIX
+    return os.path.join(directory, fname)
+
+
+def save_blob(directory: str, key: str, data: bytes,
+              meta: Optional[Dict] = None) -> str:
+    """Atomically persist ``data`` under ``key``; returns the file path.
+
+    ``meta`` (JSON-serializable) travels in the header and comes back
+    from :func:`load_blob` -- version/topology stamps live there so a
+    stale blob can be rejected without deserializing the payload.
+    """
+    os.makedirs(directory, exist_ok=True)
+    final = _blob_path(directory, key)
+    header = json.dumps({"key": key, "meta": meta or {},
+                         "size": len(data), "time": time.time()}).encode()
+    tmp = final + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(len(header).to_bytes(8, "big"))
+        f.write(header)
+        f.write(data)
+    os.replace(tmp, final)         # atomic publish
+    return final
+
+
+def load_blob(directory: str, key: str):
+    """``(data, meta)`` for ``key``, or ``(None, None)`` when absent.
+
+    A torn or unparsable blob raises ``ValueError`` (callers treat that
+    as a cache miss and overwrite it).
+    """
+    path = _blob_path(directory, key)
+    if not os.path.isfile(path):
+        return None, None
+    with open(path, "rb") as f:
+        raw = f.read()
+    try:
+        hlen = int.from_bytes(raw[:8], "big")
+        header = json.loads(raw[8:8 + hlen].decode())
+        data = raw[8 + hlen:]
+        if header.get("key") != key or len(data) != header.get("size"):
+            raise ValueError("header/key/size mismatch")
+    except (ValueError, KeyError, UnicodeDecodeError) as e:
+        raise ValueError(f"corrupt blob for key {key!r} at {path}: {e}")
+    return data, header.get("meta", {})
+
+
+def list_blobs(directory: str) -> list:
+    """Keys of every intact-looking blob in ``directory`` (by header)."""
+    if not os.path.isdir(directory):
+        return []
+    keys = []
+    for fname in sorted(os.listdir(directory)):
+        if not fname.endswith(_BLOB_SUFFIX):
+            continue
+        path = os.path.join(directory, fname)
+        try:
+            with open(path, "rb") as f:
+                hlen = int.from_bytes(f.read(8), "big")
+                if hlen > os.path.getsize(path):   # garbage length prefix
+                    continue
+                header = json.loads(f.read(hlen).decode())
+            keys.append(header["key"])
+        except (OSError, ValueError, KeyError, UnicodeDecodeError):
+            continue
+    return keys
+
+
+def delete_blob(directory: str, key: str) -> bool:
+    """Remove ``key``'s blob; True if something was deleted."""
+    path = _blob_path(directory, key)
+    try:
+        os.remove(path)
+        return True
+    except FileNotFoundError:
+        return False
 
 
 class AsyncCheckpointer:

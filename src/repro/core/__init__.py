@@ -5,7 +5,8 @@ from .dprt import (dprt, idprt, dprt_batched, idprt_batched, skew_sum,
 from .geometry import Geometry, normalize_geometry
 from .plan import (Backend, RadonPlan, available_backends,
                    backend_capabilities, get_backend, get_plan,
-                   plan_cache_clear, plan_cache_info, register_backend,
+                   plan_cache_clear, plan_cache_entries,
+                   plan_cache_info, register_backend,
                    select_backend, set_plan_cache_maxsize)
 from .conv import (circ_conv2d_dprt, circ_conv2d_direct, circ_conv2d_fft,
                    linear_conv2d_dprt, linear_conv2d_direct,
@@ -19,7 +20,8 @@ __all__ = [
     "accum_dtype_for", "dprt_oracle_np", "idprt_oracle_np",
     "Geometry", "normalize_geometry",
     "Backend", "RadonPlan", "available_backends", "backend_capabilities",
-    "get_backend", "get_plan", "plan_cache_clear", "plan_cache_info",
+    "get_backend", "get_plan", "plan_cache_clear", "plan_cache_entries",
+    "plan_cache_info",
     "register_backend", "select_backend", "set_plan_cache_maxsize",
     "circ_conv2d_dprt", "circ_conv2d_direct", "circ_conv2d_fft",
     "linear_conv2d_dprt", "linear_conv2d_direct", "circ_conv1d_exact",

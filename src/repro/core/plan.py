@@ -72,6 +72,7 @@ __all__ = [
     "RadonPlan",
     "get_plan",
     "plan_cache_info",
+    "plan_cache_entries",
     "plan_cache_clear",
     "set_plan_cache_maxsize",
     "dispatch_skew_sum",
@@ -979,6 +980,10 @@ class _PlanLRU:
             return PlanCacheInfo(self.hits, self.misses, self.maxsize,
                                  len(self._data), self.evictions)
 
+    def values(self) -> list:
+        with self._lock:
+            return list(self._data.values())
+
     def clear(self) -> None:
         with self._lock:
             dropped = list(self._data.values())
@@ -1084,6 +1089,13 @@ def get_plan(shape, dtype, method: str = "auto", *,
 def plan_cache_info() -> PlanCacheInfo:
     """(hits, misses, maxsize, currsize, evictions) of the plan cache."""
     return _PLAN_CACHE.info()
+
+
+def plan_cache_entries() -> list:
+    """``describe()`` dicts for every live cached plan, LRU-oldest first
+    -- the geometry census a serving process reports in its health
+    endpoint (which geometries are warm, with which backend/knobs)."""
+    return [plan.describe() for plan in _PLAN_CACHE.values()]
 
 
 def plan_cache_clear() -> None:

@@ -19,7 +19,8 @@ import warnings
 
 __all__ = ["PALLAS_TUNE", "pallas_block_spec", "resolve_blocks",
            "PIPELINE_TUNE", "pipeline_block_spec", "resolve_pipeline_blocks",
-           "wasted_direction_rows"]
+           "wasted_direction_rows",
+           "SERVE_WARM_BATCHES", "warm_batch_sizes", "nearest_warm_batch"]
 
 # N values we already warned about (once per process per N): a giant-N
 # heuristic fallback should be loud exactly once, not per dispatch.
@@ -170,6 +171,42 @@ def pipeline_block_spec(n: int, itemsize: int = 4) -> tuple[int, int]:
     if n <= 61:
         return n + 1, 4         # one m-block covers every direction row
     return 64, 4
+
+
+# ---------------------------------------------------------------------------
+# serving tier: warm batch sizes
+# ---------------------------------------------------------------------------
+# The dynamic batcher pads coalesced request groups up to one of these
+# batch sizes, so the service only ever needs |SERVE_WARM_BATCHES| AOT
+# executables per (geometry, dtype, datapath) -- every admitted group
+# hits a pre-compiled stack shape instead of compiling its exact count.
+# Powers of two bound padding waste at < 2x and match the measured
+# fused-kernel batched sweet spot (B=16 rows in BENCH_dprt.json: the
+# one-call pallas stack is 2.4-7.5x per-image efficiency over
+# single-image calls on CPU interpret and the 8-device mesh alike).
+SERVE_WARM_BATCHES = (1, 2, 4, 8, 16)
+
+
+def warm_batch_sizes(max_batch: int) -> tuple:
+    """The warm sizes a service with admission limit ``max_batch`` keeps
+    compiled: table entries up to ``max_batch``, plus ``max_batch``
+    itself (an off-table limit still gets an exact-fit executable)."""
+    if max_batch < 1:
+        raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+    sizes = [b for b in SERVE_WARM_BATCHES if b <= max_batch]
+    if not sizes or sizes[-1] != max_batch:
+        sizes.append(max_batch)
+    return tuple(sizes)
+
+
+def nearest_warm_batch(count: int, sizes) -> int:
+    """Smallest warm size >= ``count`` (the padding target for one
+    coalesced batch).  ``count`` above every size is a caller bug: the
+    admission loop never collects more than the largest warm size."""
+    for b in sizes:
+        if b >= count:
+            return int(b)
+    raise ValueError(f"batch of {count} exceeds warm sizes {tuple(sizes)}")
 
 
 def resolve_pipeline_blocks(n: int, itemsize: int = 4,

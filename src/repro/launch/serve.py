@@ -1,9 +1,17 @@
 """Serving launcher: batched LM decode or the DPRT image service.
 
-``--mode lm``     prefill a batch of prompts then greedy-decode N tokens.
-``--mode radon``  the paper's FPGA-coprocessor pattern as a TPU service:
-                  batches of images in, DPRT (or DPRT-domain
-                  convolution) out, batch sharded across the mesh.
+``--mode lm``      prefill a batch of prompts then greedy-decode N tokens.
+``--mode radon``   the paper's FPGA-coprocessor pattern as a TPU service:
+                   batches of images in, DPRT (or DPRT-domain
+                   convolution) out, batch sharded across the mesh.
+``--mode service`` the async dynamic-batching front-end
+                   (:mod:`repro.launch.service`): concurrent
+                   single-image requests coalesced into the fused
+                   batched kernel, with an optional persistent AOT
+                   executable cache (``--aot-dir``) so restarts skip
+                   XLA compilation, and a ``/healthz``-style stats
+                   report (latency percentiles, batch occupancy, cache
+                   and trace counters).
 
 The radon service is built on the :mod:`repro.radon` operator API:
 ``--method`` resolves through the backend registry (any registered
@@ -39,6 +47,8 @@ from repro.core.plan import available_backends, backend_capabilities, \
     get_backend
 from repro.data.synthetic import TokenStream, radon_images
 from repro.launch.mesh import make_local_mesh
+from repro.launch.service import (DPRTService, format_latency,
+                                  latency_summary)
 from repro.models import Model
 from repro.parallel.sharding import init_params
 
@@ -137,26 +147,102 @@ def serve_radon(args):
         # warm BOTH datapaths so the timed section measures steady
         # state, not the inverse's first trace+compile
         inv_call(fwd_call(imgs)).block_until_ready()
-    # steady state must not retrace: one geometry, one executable
+    # steady state must not retrace: one geometry, one executable.  The
+    # timing loop samples each datapath --iters times so the report is a
+    # latency DISTRIBUTION (p50/p95/p99, same formatter as the service
+    # healthz), not a single-shot number dominated by dispatch jitter.
+    iters = max(1, args.iters)
+    fwd_lat, inv_lat = [], []
     with radon.retrace_guard(max_traces=0):
-        t0 = time.perf_counter()
-        r = fwd_call(imgs)
-        r.block_until_ready()
-        t1 = time.perf_counter()
-        back = inv_call(r)
-        back.block_until_ready()
-        t2 = time.perf_counter()
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            r = fwd_call(imgs)
+            r.block_until_ready()
+            fwd_lat.append(time.perf_counter() - t0)
+            t1 = time.perf_counter()
+            back = inv_call(r)
+            back.block_until_ready()
+            inv_lat.append(time.perf_counter() - t1)
     exact = bool((back == imgs).all())         # operator crops the embedding
     b = imgs.shape[0]
     mesh_note = "" if mesh is None else \
         f" mesh={dict(mesh.shape)}"
     print(f"[serve-radon] N={n} (prime P={op.plan.geometry.prime}) batch={b} "
           f"method={args.method}->{op.plan.method}{mesh_note}: "
-          f"forward {1e3*(t1-t0):.1f}ms "
-          f"({b/(t1-t0):.1f} img/s), inverse {1e3*(t2-t1):.1f}ms, "
           f"round-trip exact={exact}, traces={op.trace_count}")
+    print("[serve-radon] forward "
+          + format_latency(latency_summary(fwd_lat),
+                           b * iters / sum(fwd_lat)))
+    print("[serve-radon] inverse "
+          + format_latency(latency_summary(inv_lat),
+                           b * iters / sum(inv_lat)))
     assert exact, "DPRT round trip must be bit-exact"
     return r
+
+
+def serve_service(args):
+    """The dynamic-batching service: warm up (optionally through the
+    persistent executable cache), run a sequential per-request baseline,
+    then the same traffic coalesced, and print the healthz report."""
+    rcfg = radon_smoke() if args.smoke else radon_config()
+    n = args.n or rcfg.n
+    mesh = _parse_mesh_shape(args.mesh_shape)
+    if (args.method != "auto" and mesh is None
+            and get_backend(args.method).mesh_aware):
+        raise SystemExit(f"--method {args.method} needs --mesh-shape")
+    max_batch = args.batch or rcfg.batch
+    requests = args.requests or (2 * max_batch if args.smoke else 64)
+    kernel = jnp.ones((3, 3), jnp.int32) if args.datapath == "conv" else None
+    svc = DPRTService((n, n), jnp.int32, max_batch=max_batch,
+                      max_wait_us=args.max_wait_us,
+                      datapath=args.datapath, method=args.method,
+                      conv_kernel=kernel, aot_dir=args.aot_dir,
+                      strip_rows=args.strip_rows, m_block=args.m_block,
+                      batch_impl=args.batch_impl,
+                      stream_rows=args.stream_rows,
+                      block_batch=args.block_batch, mesh=mesh)
+    winfo = svc.warmup()
+    cache_note = ""
+    if "persistent" in winfo:
+        p = winfo["persistent"]
+        cache_note = (f" (persistent: {p['hits']} restored, "
+                      f"{p['misses']} compiled, dir={p['directory']})")
+    print(f"[serve-service] warmup: {winfo['executables']} executables "
+          f"for warm_sizes={winfo['warm_sizes']} in "
+          f"{1e3 * winfo['warmup_s']:.0f}ms{cache_note}")
+    imgs = [np.asarray(x) for x in
+            np.asarray(radon_images(n, requests, kind="phantom"))]
+    # warm both serving paths (thread pool, transfer paths), then
+    # measure --iters full passes so single-core scheduling noise
+    # averages out of the comparison
+    ref, _ = svc.run_sequential(imgs)
+    results = svc.run_requests(imgs, arrival_us=args.arrival_us)
+    exact = all(bool((np.asarray(a) == np.asarray(b)).all())
+                for a, b in zip(results, ref))
+    # best-of-iters throughput on both paths: min is the noise-robust
+    # statistic on a shared/single-core host, and the coalesced passes
+    # share one event loop the way a real deployment would
+    iters = max(1, args.iters)
+    seq_lat, seq_walls = [], []
+    for _ in range(iters):
+        lat = svc.run_sequential(imgs)[1]
+        seq_lat += lat
+        seq_walls.append(sum(lat))
+    svc.reset_metrics()
+    svc.run_requests(imgs, arrival_us=args.arrival_us, repeats=iters)
+    s = svc.stats()
+    seq_rate = len(imgs) / min(seq_walls)
+    coal_rate = len(imgs) / min(svc.last_pass_walls)
+    print("[serve-service] sequential "
+          + format_latency(latency_summary(seq_lat), seq_rate))
+    print("[serve-service] coalesced  "
+          + format_latency(s["latency"], coal_rate))
+    print(f"[serve-service] coalescing speedup "
+          f"{coal_rate / seq_rate:.2f}x (best-of-{iters}), "
+          f"responses exact={exact}")
+    print(svc.healthz())
+    assert exact, "coalesced responses must match the per-request baseline"
+    return results
 
 
 def list_backends():
@@ -172,7 +258,8 @@ def main(argv=None):
     # backends additionally need --mesh-shape)
     methods = ["auto"] + list(available_backends())
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=["lm", "radon"], default="radon")
+    ap.add_argument("--mode", choices=["lm", "radon", "service"],
+                    default="radon")
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=8)
@@ -210,6 +297,27 @@ def main(argv=None):
                     help="AOT-compile (op.lower().compile(), cached per "
                          "geometry) the forward+inverse executables before "
                          "the timing loop")
+    ap.add_argument("--iters", type=int, default=5,
+                    help="timing-loop samples per datapath for --mode "
+                         "radon (the report is p50/p95/p99 over these)")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="concurrent single-image requests for --mode "
+                         "service (default: 64, or 2*batch with --smoke)")
+    ap.add_argument("--max-wait-us", type=float, default=2000.0,
+                    help="service admission window: max microseconds a "
+                         "request waits for co-batching after arrival")
+    ap.add_argument("--arrival-us", type=float, default=0.0,
+                    help="service traffic shape: request i arrives "
+                         "i*arrival_us after the first (0 = all at once)")
+    ap.add_argument("--aot-dir", default=None,
+                    help="persistent AOT executable cache directory for "
+                         "--mode service: restarts deserialize compiled "
+                         "executables instead of re-running XLA")
+    ap.add_argument("--datapath", default="forward",
+                    choices=["forward", "roundtrip", "conv"],
+                    help="what one service request computes (conv uses a "
+                         "3x3 ones kernel; the service class additionally "
+                         "supports 'inverse' for projection-domain traffic)")
     ap.add_argument("--list-backends", action="store_true",
                     help="print the backend capability table and exit")
     ap.add_argument("--prompt-len", type=int, default=32)
@@ -219,6 +327,8 @@ def main(argv=None):
         return list_backends()
     if args.mode == "lm":
         return serve_lm(args)
+    if args.mode == "service":
+        return serve_service(args)
     return serve_radon(args)
 
 

@@ -42,7 +42,8 @@ as thin deprecation shims over this package.
 """
 from repro.core.plan import (Backend, RadonPlan, available_backends,
                              backend_capabilities, get_backend, get_plan,
-                             plan_cache_clear, plan_cache_info,
+                             plan_cache_clear, plan_cache_entries,
+                             plan_cache_info,
                              register_backend, select_backend,
                              set_plan_cache_maxsize)
 
@@ -51,15 +52,17 @@ from .autodiff import (RetraceError, reset_trace_counts, retrace_guard,
                        trace_count, trace_counts)
 from .fusion import flip_image, flip_lanes, pipeline_apply
 from .operators import (DPRT, CompositeOperator, Conv2D,
-                        FusedProjectionPipeline, ProjectionFilter,
-                        RadonOperator, aot_cache_clear, aot_cache_info,
-                        operator_for)
+                        FusedProjectionPipeline, PersistentAOTCache,
+                        ProjectionFilter, RadonOperator, aot_cache_clear,
+                        aot_cache_info, aot_fingerprint, operator_for)
 
 __all__ = [
     # operators
     "DPRT", "Conv2D", "ProjectionFilter", "FusedProjectionPipeline",
     "RadonOperator", "CompositeOperator", "operator_for",
     "aot_cache_info", "aot_cache_clear",
+    # persistent AOT executable cache (warm process restarts)
+    "PersistentAOTCache", "aot_fingerprint",
     # projection-domain fusion
     "pipeline_apply", "flip_image", "flip_lanes",
     # ambient config
@@ -69,6 +72,7 @@ __all__ = [
     "RetraceError",
     # plan layer
     "Backend", "RadonPlan", "available_backends", "backend_capabilities",
-    "get_backend", "get_plan", "plan_cache_clear", "plan_cache_info",
+    "get_backend", "get_plan", "plan_cache_clear", "plan_cache_entries",
+    "plan_cache_info",
     "register_backend", "select_backend", "set_plan_cache_maxsize",
 ]

@@ -1,0 +1,70 @@
+"""Process-level cache/trace health report: ``python -m repro.radon.healthz``.
+
+The ``/healthz``-style counterpart to :mod:`repro.radon.selfcheck`:
+where selfcheck *exercises* the API, this module *inspects* a process --
+plan-cache hit/miss/eviction counters, the warm plan entries themselves,
+per-datapath trace counts (the zero-retrace serving property as data),
+the in-memory AOT executable census, and the environment fingerprint
+persistent executable blobs are keyed against.  The same counters back
+:meth:`repro.launch.service.DPRTService.healthz`, which prepends its
+admission-queue and latency sections.
+
+``report()`` returns the formatted text; :func:`snapshot` the raw dict
+(for tests and structured scrapes).  Exit code is always 0 -- counters
+are a readout, not a judgement; the service healthz is what gates.
+"""
+from __future__ import annotations
+
+__all__ = ["snapshot", "report", "main"]
+
+
+def snapshot() -> dict:
+    """The raw counter dict behind :func:`report`."""
+    from . import (aot_cache_info, aot_fingerprint, plan_cache_entries,
+                   plan_cache_info, trace_count, trace_counts)
+    # distinct plans (different knobs/mesh) can share a (shape, dtype,
+    # kind) label: aggregate, so the per-path counts still sum to the
+    # process total
+    traces: dict = {}
+    for (plan, kind, shape, dtype), n in trace_counts().items():
+        label = f"{shape}/{dtype}/{kind}"
+        traces[label] = traces.get(label, 0) + n
+    return {
+        "fingerprint": aot_fingerprint(),
+        "plan_cache": plan_cache_info()._asdict(),
+        "plans": plan_cache_entries(),
+        "traces_total": trace_count(),
+        "traces": dict(sorted(traces.items())),
+        "aot_cache": aot_cache_info(),
+    }
+
+
+def report() -> str:
+    """Format :func:`snapshot` as the ``[healthz]`` text block."""
+    s = snapshot()
+    lines = [
+        f"[healthz] {s['fingerprint']}",
+        "[healthz] plan_cache hits={hits} misses={misses} "
+        "currsize={currsize} maxsize={maxsize} evictions={evictions}"
+        .format(**s["plan_cache"]),
+    ]
+    for p in s["plans"]:
+        lines.append(f"[healthz]   plan {p.get('image_shape')} "
+                     f"method={p.get('method')}")
+    lines.append(f"[healthz] traces total={s['traces_total']}")
+    for path, count in s["traces"].items():
+        lines.append(f"[healthz]   trace {path} x{count}")
+    aot = s["aot_cache"]
+    lines.append(f"[healthz] aot_executables currsize={aot['currsize']}")
+    for key in aot["keys"]:
+        lines.append(f"[healthz]   aot {key}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    print(report())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

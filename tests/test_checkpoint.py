@@ -1,0 +1,114 @@
+"""Blob store (the persistent AOT executable cache's substrate) and
+async-checkpointer failure surfacing.
+
+``tests/test_substrate.py`` covers the tree-checkpoint happy paths
+(atomic round trip, gc, latest_step, async overlap); this module covers
+the keyed-blob layer added for serialized executables -- header/payload
+integrity, corruption semantics, key sanitization, atomicity -- plus
+the AsyncCheckpointer error path nothing else exercises.
+"""
+import os
+
+import pytest
+
+from repro.checkpoint import (AsyncCheckpointer, delete_blob, gc_checkpoints,
+                              latest_step, list_blobs, load_blob, save_blob)
+
+
+# ---------------------------------------------------------------------------
+# keyed blobs
+# ---------------------------------------------------------------------------
+def test_blob_roundtrip_with_meta(tmp_path):
+    d = str(tmp_path)
+    payload = bytes(range(256)) * 3
+    path = save_blob(d, "exe_v1", payload, meta={"fingerprint": "cpu1"})
+    assert os.path.isfile(path) and path.endswith(".blob")
+    data, meta = load_blob(d, "exe_v1")
+    assert data == payload
+    assert meta == {"fingerprint": "cpu1"}
+    # atomic publish: no .tmp leftovers once save_blob returned
+    assert not [f for f in os.listdir(d) if f.endswith(".tmp")]
+
+
+def test_blob_missing_returns_none(tmp_path):
+    assert load_blob(str(tmp_path), "nope") == (None, None)
+    assert load_blob(str(tmp_path / "no_dir"), "nope") == (None, None)
+
+
+def test_blob_overwrite_replaces(tmp_path):
+    d = str(tmp_path)
+    save_blob(d, "k", b"old", meta={"v": 1})
+    save_blob(d, "k", b"new", meta={"v": 2})
+    data, meta = load_blob(d, "k")
+    assert data == b"new" and meta == {"v": 2}
+    assert list_blobs(d) == ["k"]
+
+
+def test_blob_torn_payload_raises(tmp_path):
+    d = str(tmp_path)
+    path = save_blob(d, "k", b"x" * 100)
+    with open(path, "r+b") as f:          # tear the payload: size mismatch
+        f.truncate(os.path.getsize(path) - 10)
+    with pytest.raises(ValueError, match="corrupt blob"):
+        load_blob(d, "k")
+
+
+def test_blob_garbage_header_raises(tmp_path):
+    d = str(tmp_path)
+    path = save_blob(d, "k", b"payload")
+    with open(path, "wb") as f:
+        f.write(b"\xff" * 64)             # not even a parsable header
+    with pytest.raises(ValueError, match="corrupt blob"):
+        load_blob(d, "k")
+
+
+def test_blob_key_sanitized_but_preserved(tmp_path):
+    # cache tokens contain '/', ':' etc.; the filename is sanitized but
+    # the header keeps the exact key (and guards against collisions on
+    # lookup)
+    d = str(tmp_path)
+    key = "dprt/forward:13x13 int32"
+    path = save_blob(d, key, b"abc")
+    assert "/" not in os.path.basename(path)[:-len(".blob")]
+    data, _ = load_blob(d, key)
+    assert data == b"abc"
+    assert list_blobs(d) == [key]         # listing reports the true key
+
+
+def test_list_blobs_skips_corrupt_entries(tmp_path):
+    d = str(tmp_path)
+    save_blob(d, "good", b"1")
+    with open(os.path.join(d, "bad.blob"), "wb") as f:
+        f.write(b"\x00garbage")
+    assert list_blobs(d) == ["good"]
+    assert list_blobs(str(tmp_path / "missing")) == []
+
+
+def test_delete_blob(tmp_path):
+    d = str(tmp_path)
+    save_blob(d, "k", b"1")
+    assert delete_blob(d, "k") is True
+    assert load_blob(d, "k") == (None, None)
+    assert delete_blob(d, "k") is False
+
+
+# ---------------------------------------------------------------------------
+# async checkpointer: the error path
+# ---------------------------------------------------------------------------
+def test_async_checkpointer_surfaces_worker_error(tmp_path):
+    # point the checkpointer at a path occupied by a FILE: the
+    # background save must fail, and wait() must re-raise that failure
+    # instead of swallowing it
+    blocked = tmp_path / "not_a_dir"
+    blocked.write_text("in the way")
+    ck = AsyncCheckpointer(str(blocked))
+    ck.save(1, {"x": 1.0})
+    with pytest.raises(OSError):
+        ck.wait()
+    ck.wait()                             # error is consumed, not sticky
+
+
+def test_gc_and_latest_step_on_missing_dir(tmp_path):
+    missing = str(tmp_path / "never_created")
+    gc_checkpoints(missing)               # no-op, no raise
+    assert latest_step(missing) is None
