@@ -1,0 +1,104 @@
+"""Reconstruction-subsystem rows: ``recon/*`` in ``BENCH_dprt.json``.
+
+Three claims gate here:
+
+* **Exactness before speed.**  At N=13 the masked-direction CG solution
+  is asserted against the dense least-squares oracle (and the unmasked
+  Sherman-Morrison path against the exact inverse) before anything is
+  timed -- a fast wrong solver must fail the bench, not set a baseline.
+* **The closed form is transform-rate.**  ``recon/sherman/n251`` times
+  the non-iterative unmasked solve: one exact inverse plus a rank-1
+  correction, so it must stay within a small factor of the raw inverse
+  transform.
+* **Iterative cost = launches x iterations.**  ``recon/cg_masked/*``
+  rows run a FIXED iteration count (``tol=0`` never converges early),
+  so the timing measures the fused normal-equation launch path --
+  single-image and B=4 batched -- deterministically, not a
+  convergence-dependent iteration count.
+
+Wall-clock noise policy matches the serve rows: ``time_jax`` min-of-N
+statistic plus loose per-row ``guard_tol`` -- the guard catches a lost
+fused pipeline (CG falling back to staged launches), not scheduler
+jitter.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro import radon
+
+from .common import emit, time_jax
+
+N_SMALL = 13      # oracle-checkable geometry
+N_BIG = 251       # prime serving geometry for the timing rows
+BATCH = 4
+MAXITER = 10      # fixed CG iteration count for deterministic timing
+
+
+def _oracle_gate() -> None:
+    """Fail loudly (raise) if the solvers stop matching the oracles."""
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 64, (N_SMALL, N_SMALL)).astype(np.int32)
+    op = radon.DPRT((N_SMALL, N_SMALL), jnp.int32)
+
+    res = radon.solve(op, op(jnp.asarray(x)))
+    assert int(res.iterations) == 0, "sherman path must not iterate"
+    np.testing.assert_allclose(np.asarray(res.image), x, atol=1e-3)
+
+    m = radon.MaskedDPRT(op, mask=radon.direction_mask(N_SMALL, [2, 7]))
+    b = m(jnp.asarray(x, jnp.float32))
+    A = np.asarray(m.as_matrix()).astype(np.float64)
+    want, *_ = np.linalg.lstsq(A, np.asarray(b).ravel(), rcond=None)
+    got = np.asarray(radon.solve(m, b, "cg", tol=1e-7,
+                                 maxiter=300).image).ravel()
+    np.testing.assert_allclose(got, want, rtol=1e-4,
+                               atol=1e-4 * max(1.0, np.abs(want).max()))
+
+
+def main() -> None:
+    _oracle_gate()
+    rng = np.random.default_rng(1)
+
+    # -- recon/cg_masked/n13: the oracle-gated geometry ---------------------
+    m13 = radon.MaskedDPRT(radon.DPRT((N_SMALL, N_SMALL), jnp.int32),
+                           mask=radon.direction_mask(N_SMALL, [2, 7]))
+    b13 = m13(jnp.asarray(rng.integers(0, 64, (N_SMALL, N_SMALL)),
+                          jnp.float32))
+    us = time_jax(lambda b: radon.solve(m13, b, "cg", tol=0.0,
+                                        maxiter=MAXITER).image,
+                  b13, warmup=2, iters=20, stat="min")
+    emit(f"recon/cg_masked/n{N_SMALL}", us,
+         f"{MAXITER} fixed CG iterations, oracle-gated", kind="recon",
+         variant="cg_masked", method="auto", n=N_SMALL, batch=1,
+         maxiter=MAXITER, guard_tol=2.0)
+
+    # -- recon/sherman/n251: the non-iterative closed form ------------------
+    op = radon.DPRT((N_BIG, N_BIG), jnp.int32)
+    xb = jnp.asarray(rng.integers(0, 64, (N_BIG, N_BIG)), jnp.int32)
+    rb = op(xb)
+    inv_us = time_jax(lambda r: op.inverse(r), rb, warmup=2, iters=10,
+                      stat="min")
+    sh_us = time_jax(lambda r: radon.solve(op, r.astype(jnp.float32)).image,
+                     rb, warmup=2, iters=10, stat="min")
+    emit(f"recon/sherman/n{N_BIG}", sh_us,
+         f"x_vs_inverse={sh_us / inv_us:.2f} (direct, 0 iterations)",
+         kind="recon", variant="sherman", method="auto", n=N_BIG, batch=1,
+         guard_tol=2.0)
+
+    # -- recon/cg_masked/n251_b4: the batched fused normal launch -----------
+    mb = radon.MaskedDPRT(radon.DPRT((BATCH, N_BIG, N_BIG), jnp.int32),
+                          mask=radon.direction_mask(N_BIG, [5]))
+    bb = mb(jnp.asarray(rng.integers(0, 64, (BATCH, N_BIG, N_BIG)),
+                        jnp.float32))
+    us = time_jax(lambda b: radon.solve(mb, b, "cg", tol=0.0,
+                                        maxiter=MAXITER).image,
+                  bb, warmup=2, iters=10, stat="min")
+    emit(f"recon/cg_masked/n{N_BIG}_b{BATCH}", us,
+         f"{MAXITER} fixed CG iterations, per-image "
+         f"{us / BATCH:.0f}us", kind="recon", variant="cg_masked",
+         method="auto", n=N_BIG, batch=BATCH, maxiter=MAXITER,
+         guard_tol=2.0)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    main()

@@ -173,7 +173,7 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from . import (bench_conv, bench_dprt_impl, bench_dprt_sharded,
-                   bench_serve, bench_stream)
+                   bench_recon, bench_serve, bench_stream)
     start = len(common.ROWS)
     print("name,us_per_call,derived")
     bench_dprt_impl.main()
@@ -181,6 +181,7 @@ def main(argv=None) -> None:
     bench_dprt_sharded.main()   # warns + emits nothing where unavailable
     bench_stream.main()         # streamed-strip + direction-sharded rows
     bench_serve.main()          # dynamic batching + persistent AOT rows
+    bench_recon.main()          # oracle-gated reconstruction solver rows
     fresh = [r for r in common.ROWS[start:]
              if r["name"].startswith(common.BENCH_PREFIXES)]
     raise SystemExit(run_guard(fresh, args.baseline, args.tol))

@@ -19,10 +19,10 @@ BENCH_DPRT_PATH = os.path.join(
 
 #: row-name prefixes folded into (and regressed against) the baseline
 #: artifact: the DPRT implementation shoot-out, the projection-pipeline
-#: conv/DFT rows, the streamed-strip / direction-sharded rows, and the
-#: dynamic-batching serve tier.
+#: conv/DFT rows, the streamed-strip / direction-sharded rows, the
+#: dynamic-batching serve tier, and the reconstruction solvers.
 BENCH_PREFIXES = ("dprt_impl/", "conv/", "dft/", "stream/",
-                  "sharded_stream/", "serve/")
+                  "sharded_stream/", "serve/", "recon/")
 
 
 def emit(name: str, us_per_call: float, derived: str = "", **extra) -> None:

@@ -37,7 +37,7 @@ def main(argv=None) -> None:
     from . import (table1_forward_cycles, table2_inverse_cycles,
                    table3_resources, fig17_runtime_vs_n, fig19_20_pareto,
                    bench_conv, bench_dprt_impl, bench_dprt_sharded,
-                   bench_serve, bench_stream, bench_lm_step,
+                   bench_recon, bench_serve, bench_stream, bench_lm_step,
                    roofline_report, check_regression, common)
 
     # guarded-prefix -> producing module; --only selects through this
@@ -48,11 +48,12 @@ def main(argv=None) -> None:
         "stream/": bench_stream,
         "sharded_stream/": bench_stream,
         "serve/": bench_serve,
+        "recon/": bench_recon,
     }
     all_modules = [table1_forward_cycles, table2_inverse_cycles,
                    table3_resources, fig17_runtime_vs_n, fig19_20_pareto,
                    bench_conv, bench_dprt_impl, bench_dprt_sharded,
-                   bench_serve, bench_stream, bench_lm_step,
+                   bench_recon, bench_serve, bench_stream, bench_lm_step,
                    roofline_report]
     if args.only is None:
         modules, prefixes = all_modules, common.BENCH_PREFIXES

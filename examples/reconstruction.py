@@ -1,0 +1,83 @@
+"""Sinogram inpainting: reconstruction from partial projection data.
+
+The workload behind `radon.solve`: a detector drops whole projection
+directions (dead rows in the (P+1, P) sinogram), and the exact inverse
+transform -- which needs every direction -- no longer applies.  The
+demo reconstructs a phantom three ways:
+
+* zero-filled inverse  -- feed the masked sinogram straight to the
+  exact inverse (what you get without a solver: badly wrong, the
+  missing directions alias across the whole image);
+* masked CG           -- `radon.solve(op, b, mask=...)`: least squares
+  over the masked operator, each normal-equation application ONE fused
+  projection-pipeline launch;
+* Sherman-Morrison    -- the full-data control: `radon.solve` with no
+  mask is a non-iterative closed form (`iterations == 0`) matching the
+  exact inverse.
+
+Run:  PYTHONPATH=src python examples/reconstruction.py [--n 61]
+"""
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import radon
+from repro.data import phantom_image
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=61, help="prime image size")
+    ap.add_argument("--drop", type=int, default=4,
+                    help="number of projection directions to remove")
+    ap.add_argument("--method", default="auto",
+                    help="any registered backend (see serve --list-backends)")
+    args = ap.parse_args()
+    n = args.n
+
+    img = phantom_image(n, seed=0)
+    op = radon.DPRT((n, n), jnp.int32, method=args.method)
+    sino = op(jnp.asarray(img))                      # (N+1, N) projections
+    scale = float(np.abs(img).max())
+
+    # the detector fault: whole directions go dark
+    rng = np.random.default_rng(1)
+    missing = rng.choice(n + 1, size=args.drop, replace=False)
+    mask = radon.direction_mask(n, missing)
+    b = mask * sino.astype(jnp.float32)              # what was measured
+
+    # control 1: full data needs no iteration at all
+    full = radon.solve(op, sino)
+    print(f"[recon] full data, Sherman-Morrison closed form: "
+          f"iterations={int(full.iterations)}, max err "
+          f"{np.abs(np.asarray(full.image) - img).max():.2e}")
+
+    # control 2: pretending the holes are zeros corrupts everything
+    naive = np.asarray(op.inverse(b.astype(op.inverse.dtype_in)))
+    naive_err = np.abs(naive - img).max() / scale
+    print(f"[recon] zero-filled inverse with {args.drop} directions "
+          f"missing: rel err {naive_err:.1%}")
+
+    # the solver: least squares over the masked operator
+    res = radon.solve(op, b, mask=mask, tol=1e-7, maxiter=200)
+    rec_err = np.abs(np.asarray(res.image) - img).max() / scale
+    hist = np.asarray(res.residual_norms)
+    hist = hist[~np.isnan(hist)]
+    print(f"[recon] masked CG: iterations={int(res.iterations)}, "
+          f"converged={bool(res.converged)}, rel err {rec_err:.1%}")
+    print("[recon] residual history: "
+          + " ".join(f"{h:.1e}" for h in hist[:8])
+          + (" ..." if len(hist) > 8 else ""))
+    # dropping directions leaves the system underdetermined, so the
+    # min-norm least-squares image cannot match the phantom exactly --
+    # but it is data-consistent (residual ~1e-8) and several times
+    # closer than pretending the holes are zeros
+    assert rec_err < naive_err / 2, \
+        "solver must clearly beat zero-filling"
+    print(f"[recon] OK: masked least squares is "
+          f"{naive_err / rec_err:.1f}x closer than zero-filling")
+
+
+if __name__ == "__main__":
+    main()

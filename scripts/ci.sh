@@ -13,13 +13,16 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="${PYTHONPATH:+$PYTHONPATH:}$PWD/src"
 
-echo "== [1/3] quick-tier tests =="
+echo "== [1/4] quick-tier tests =="
 python -m pytest -x -q -m "not slow" tests
 
-echo "== [2/3] repro.radon.selfcheck =="
+echo "== [2/4] repro.radon.selfcheck =="
 python -m repro.radon.selfcheck
 
-echo "== [3/3] serve perf guard (vs committed BENCH_dprt.json) =="
+echo "== [3/4] serve perf guard (vs committed BENCH_dprt.json) =="
 python -m benchmarks.run --check --only serve
+
+echo "== [4/4] recon perf guard (vs committed BENCH_dprt.json) =="
+python -m benchmarks.run --check --only recon
 
 echo "== ci.sh: all gates passed =="

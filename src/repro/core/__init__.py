@@ -1,7 +1,8 @@
 """Core DPRT library: the paper's contribution as composable JAX modules."""
 from .dprt import (dprt, idprt, dprt_batched, idprt_batched, skew_sum,
                    strip_partial, align_partial, is_prime, next_prime,
-                   accum_dtype_for, dprt_oracle_np, idprt_oracle_np)
+                   accum_dtype_for, float_dtype_for, dprt_oracle_np,
+                   idprt_oracle_np)
 from .geometry import Geometry, normalize_geometry
 from .plan import (Backend, RadonPlan, available_backends,
                    backend_capabilities, get_backend, get_plan,
@@ -17,7 +18,8 @@ from . import pareto
 __all__ = [
     "dprt", "idprt", "dprt_batched", "idprt_batched", "skew_sum",
     "strip_partial", "align_partial", "is_prime", "next_prime",
-    "accum_dtype_for", "dprt_oracle_np", "idprt_oracle_np",
+    "accum_dtype_for", "float_dtype_for", "dprt_oracle_np",
+    "idprt_oracle_np",
     "Geometry", "normalize_geometry",
     "Backend", "RadonPlan", "available_backends", "backend_capabilities",
     "get_backend", "get_plan", "plan_cache_clear", "plan_cache_entries",

@@ -70,6 +70,7 @@ __all__ = [
     "strip_partial",
     "align_partial",
     "accum_dtype_for",
+    "float_dtype_for",
     "int32_accum_exact",
 ]
 
@@ -126,7 +127,8 @@ def int32_accum_exact(n: int, dtype) -> bool:
     return v * n * (n + 1) <= _INT32_MAX
 
 
-def accum_dtype_for(dtype, n: Optional[int] = None) -> jnp.dtype:
+def accum_dtype_for(dtype, n: Optional[int] = None, *,
+                    warn: bool = True) -> jnp.dtype:
     """Accumulator dtype with enough headroom for exact sums.
 
     Forward growth is +ceil(log2 N) bits; inverse adds another
@@ -144,6 +146,13 @@ def accum_dtype_for(dtype, n: Optional[int] = None) -> jnp.dtype:
     dtype max is not a pixel bound; pass int64 inputs under x64 for a
     guarantee, as before).  Without ``n`` the legacy dtype-only rule
     applies unchanged.
+
+    ``warn=False`` suppresses the no-x64 warning: call sites that only
+    need the accumulator's *itemsize* for block sizing (plan build,
+    kernel tuning) or its name for metadata must not claim an overflow
+    that no integer accumulation will ever hit -- e.g. a solver that
+    promotes the same geometry to float residual arithmetic
+    (:func:`float_dtype_for`) before any sum runs.
     """
     dtype = jnp.dtype(dtype)
     if dtype in (jnp.int64, jnp.uint64):
@@ -154,7 +163,7 @@ def accum_dtype_for(dtype, n: Optional[int] = None) -> jnp.dtype:
             if jax.config.jax_enable_x64:
                 return jnp.dtype(jnp.int64)
             global _X64_WARNED
-            if not _X64_WARNED:  # pragma: no cover - depends on x64 flag
+            if warn and not _X64_WARNED:  # pragma: no cover - x64 flag
                 _X64_WARNED = True
                 import warnings
                 warnings.warn(
@@ -165,6 +174,27 @@ def accum_dtype_for(dtype, n: Optional[int] = None) -> jnp.dtype:
                     f"overflow)", stacklevel=2)
         return jnp.dtype(jnp.int32)
     if dtype == jnp.float64:
+        return jnp.dtype(jnp.float64)
+    return jnp.dtype(jnp.float32)
+
+
+def float_dtype_for(dtype) -> jnp.dtype:
+    """Float dtype for residual/solver arithmetic over ``dtype`` data.
+
+    Iterative reconstruction (:mod:`repro.radon.solve`) runs CG/LSQR/
+    Landweber residual updates in floating point regardless of the
+    sinogram's storage dtype: float64 stays float64; 64-bit integers
+    promote to float64 when x64 is enabled (their magnitudes exceed a
+    float32 mantissa); everything else -- float32/16 and all the pixel
+    integer dtypes -- solves in float32.  Integer inputs never route
+    through the integer-accumulator rules, so the int64-under-x64
+    warning of :func:`accum_dtype_for` cannot fire for a solve.
+    """
+    dtype = jnp.dtype(dtype)
+    if dtype == jnp.float64:
+        return jnp.dtype(jnp.float64)
+    if (jnp.issubdtype(dtype, jnp.integer) and dtype.itemsize >= 8
+            and jax.config.jax_enable_x64):
         return jnp.dtype(jnp.float64)
     return jnp.dtype(jnp.float32)
 

@@ -303,7 +303,8 @@ def _horner_skew(g, sign, *, strip_rows=None, m_block=None, mesh=None):
 def _strips_skew(g, sign, *, strip_rows=None, m_block=None, mesh=None):
     if strip_rows is None:  # plan-level resolution supplies the tuned H;
         # direct callers get the same table lookup (real accum itemsize)
-        itemsize = jnp.dtype(accum_dtype_for(g.dtype, g.shape[-1])).itemsize
+        itemsize = jnp.dtype(
+            accum_dtype_for(g.dtype, g.shape[-1], warn=False)).itemsize
         strip_rows = resolve_blocks(g.shape[-1], itemsize)[0]
     return _skew_sum_strips(g, sign, strip_rows)
 
@@ -1043,7 +1044,11 @@ def _build_plan(shape: tuple, dtype_name: str, method: str,
             f"(kinds: {be.dtype_kinds})")
     if batch_impl not in ("auto", "map", "vmap"):
         raise ValueError(f"batch_impl must be auto|map|vmap: {batch_impl!r}")
-    itemsize = jnp.dtype(accum_dtype_for(dtype, geom.prime)).itemsize
+    # warn=False: sizing only -- a plan built for block-shape metadata
+    # (e.g. to hand its geometry to the float-promoting solver) must not
+    # claim an integer-accumulator overflow that never runs
+    itemsize = jnp.dtype(
+        accum_dtype_for(dtype, geom.prime, warn=False)).itemsize
     # always resolves (even for backends without block knobs): the
     # resolver owns the block_rows/stream_rows conflict rejection
     th, tm = resolve_blocks(geom.prime, itemsize, strip_rows, m_block,
@@ -1111,7 +1116,8 @@ def dispatch_skew_sum(g: jnp.ndarray, sign: int, method: str = "horner",
         method = select_backend(n, g.dtype, mesh=mesh)
     be = get_backend(method)
     if be.needs_strip_rows and strip_rows is None:
-        itemsize = jnp.dtype(accum_dtype_for(g.dtype, n)).itemsize
+        itemsize = jnp.dtype(
+            accum_dtype_for(g.dtype, n, warn=False)).itemsize
         strip_rows = resolve_blocks(n, itemsize, None, None)[0]
     return be.skew_sum(g, sign, strip_rows=strip_rows, m_block=m_block,
                        mesh=mesh)

@@ -48,7 +48,9 @@ def _resolve_blocks(n: int, strip_rows: Optional[int],
     # inside a caller's jit trace, where a scope read would be baked
     # into the cached executable and replayed after the scope exits.
     # Ambient knobs apply at (eager) plan/operator construction instead.
-    return resolve_blocks(n, jnp.dtype(accum_dtype_for(dtype, n)).itemsize,
+    return resolve_blocks(n,
+                          jnp.dtype(accum_dtype_for(dtype, n,
+                                                    warn=False)).itemsize,
                           strip_rows, m_block, stream_rows=stream_rows)
 
 

@@ -128,7 +128,13 @@ class DPRTService:
     * ``"roundtrip"`` -- image in, forward+inverse chained AOT
       executables, image out (bit-exactness observable per request);
     * ``"conv"``     -- image in, fused projection-domain convolution
-      against a fixed ``conv_kernel``, image out.
+      against a fixed ``conv_kernel``, image out;
+    * ``"solve"``    -- (masked/weighted) projections in, least-squares
+      reconstruction out via :func:`repro.radon.solve_operator`
+      (``solve_mask``/``solve_weight`` fix the projection-domain
+      diagonal, ``solver``/``solve_tol``/``solve_maxiter`` the solver;
+      the unmasked default serves the non-iterative Sherman-Morrison
+      closed form).
 
     Transform knobs (``method``, ``strip_rows``, ``m_block``,
     ``stream_rows``, ``mesh``, ...) pass through to the operators
@@ -139,12 +145,15 @@ class DPRTService:
     def __init__(self, shape: Tuple[int, int], dtype=jnp.int32, *,
                  max_batch: int = 16, max_wait_us: float = 2000.0,
                  datapath: str = "forward", method: Optional[str] = None,
-                 conv_kernel=None, aot_dir: Optional[str] = None,
+                 conv_kernel=None, solve_mask=None, solve_weight=None,
+                 solver: str = "auto", solve_tol: float = 1e-6,
+                 solve_maxiter: int = 50, aot_dir: Optional[str] = None,
                  history: int = 65536, **knobs):
         shape = tuple(int(s) for s in shape)
         if len(shape) != 2:
             raise ValueError(f"service geometry must be (H, W), got {shape}")
-        if datapath not in ("forward", "inverse", "roundtrip", "conv"):
+        if datapath not in ("forward", "inverse", "roundtrip", "conv",
+                            "solve"):
             raise ValueError(f"unknown datapath {datapath!r}")
         if (conv_kernel is None) != (datapath != "conv"):
             raise ValueError("conv_kernel is required for (exactly) the "
@@ -166,6 +175,11 @@ class DPRTService:
             if datapath == "conv":
                 stages = (radon.Conv2D(bshape, conv_kernel, dtype,
                                        method, **knobs),)
+            elif datapath == "solve":
+                stages = (radon.solve_operator(
+                    bshape, dtype, mask=solve_mask, weight=solve_weight,
+                    solver=solver, tol=solve_tol, maxiter=solve_maxiter,
+                    method=method, **knobs),)
             else:
                 fwd = radon.DPRT(bshape, dtype, method, **knobs)
                 stages = {"forward": (fwd,),

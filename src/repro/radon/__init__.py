@@ -33,6 +33,12 @@ Surface
 * :class:`config` -- ambient knob scopes (method/strip_rows/m_block/…).
 * :func:`retrace_guard` / :func:`trace_count` -- the zero-retrace
   serving property as an assertion.
+* :func:`solve` / :class:`MaskedDPRT` / :func:`solve_operator` -- the
+  reconstruction subsystem (:mod:`repro.radon.solve`): masked/weighted
+  least squares over DPRT operators via the non-iterative
+  Sherman-Morrison closed form (unmasked) or CG/LSQR/Landweber with
+  projection-domain preconditioning, each normal-equation application
+  ONE fused pipeline launch.
 * plan layer re-exports (``get_plan``, ``plan_cache_info`` with its
   eviction counter, registry introspection) for advanced callers.
 * ``python -m repro.radon.selfcheck`` -- API/perf health smoke.
@@ -51,10 +57,13 @@ from .ambient import CONFIG_KEYS, config, current_config
 from .autodiff import (RetraceError, reset_trace_counts, retrace_guard,
                        trace_count, trace_counts)
 from .fusion import flip_image, flip_lanes, pipeline_apply
+from .masking import MaskedDPRT, direction_mask
 from .operators import (DPRT, CompositeOperator, Conv2D,
                         FusedProjectionPipeline, PersistentAOTCache,
                         ProjectionFilter, RadonOperator, aot_cache_clear,
                         aot_cache_info, aot_fingerprint, operator_for)
+from .solve import (METHODS, ReconstructionOperator, SolveResult, solve,
+                    solve_operator)
 
 __all__ = [
     # operators
@@ -65,6 +74,9 @@ __all__ = [
     "PersistentAOTCache", "aot_fingerprint",
     # projection-domain fusion
     "pipeline_apply", "flip_image", "flip_lanes",
+    # reconstruction subsystem
+    "solve", "SolveResult", "METHODS", "MaskedDPRT", "direction_mask",
+    "ReconstructionOperator", "solve_operator",
     # ambient config
     "config", "current_config", "CONFIG_KEYS",
     # trace accounting

@@ -1,0 +1,232 @@
+"""Masked / weighted DPRT operators: the partial-data measurement model.
+
+Rim 2019 (arXiv 1908.00887) shows a discrete Radon transform remains
+invertible from *partial* projection data; the serving reality behind it
+is sinograms with dead detector rows, missing directions, or per-sample
+confidence weights.  This module models that as an operator:
+
+    M = D A,   D = diag(mask * weight)  on the (P+1, P) projection grid
+
+with ``A`` the exact forward DPRT of a cached plan.  ``MaskedDPRT`` is
+the measurement operator the :mod:`repro.radon.solve` subsystem inverts:
+
+* ``m(f)``   -- masked projections ``d * A f`` (float arithmetic; the
+  mask zeroes what the detector never saw);
+* ``m.T``    -- the exact adjoint ``A^T D`` (``m.T.T is m`` round trip),
+  consistent with ``m.as_matrix().T`` entry-for-entry;
+* ``m.normal_apply(x)`` -- ONE fused projection-pipeline launch for the
+  normal-equation matrix ``M^T M`` (see below) -- the inner loop of
+  every iterative solver;
+* ``m.normal_rhs(b)``   -- ``M^T (d * b) = A^T (d^2 * b)``.
+
+The launch-count trick: the exact-adjoint algebra of
+:mod:`repro.core.plan` gives, entrywise,
+
+    A^T r = P * B r + S(r) * 1,     S(r) = sum_d r(0, d),
+
+where ``B`` is the exact inverse (adjoint epilogue = P * inverse
+epilogue + S; both share one skew-sum).  Substituting ``r = d^2 * A x``
+turns the normal-equation application into
+
+    M^T M x = P * [inv . (d^2 *) . fwd](x) + S(d^2 * A x) * 1
+
+whose bracket is exactly the PR-5 fused ``pipeline("mul")`` -- one
+kernel launch on pipeline-capable backends -- and whose scalar ``S``
+needs only the column sums of ``x`` (row 0 of ``A x`` is the column-sum
+projection).  A ``ProjectionFilter`` preconditioner rides the same
+fused pipeline, so preconditioned CG stays at two launches per
+iteration.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dprt import float_dtype_for
+from repro.core.plan import get_plan
+
+__all__ = ["direction_mask", "MaskedDPRT"]
+
+
+def direction_mask(n: int, missing, dtype=jnp.float32) -> jnp.ndarray:
+    """A ``(n+1, n)`` projection-domain mask with whole directions
+    removed: row ``m`` of the sinogram is zeroed for every ``m`` in
+    ``missing`` (the paper's P+1 directions index ``0..n``; ``n`` is
+    the row-sum direction).  The complement stays 1, so the mask is a
+    0/1 diagonal in operator form."""
+    n = int(n)
+    missing = jnp.atleast_1d(jnp.asarray(missing, jnp.int32))
+    rows = jnp.arange(n + 1, dtype=jnp.int32)
+    keep = ~jnp.isin(rows, missing)
+    return (keep[:, None] * jnp.ones((1, n))).astype(dtype)
+
+
+def _float_plan(plan, fdtype):
+    """The float-dtype sibling of ``plan``: same geometry, same resolved
+    backend and block knobs, float arithmetic.  Plans are cached, so
+    this is a dict lookup after the first build."""
+    return get_plan(plan.geometry.image_shape, fdtype, plan.method,
+                    strip_rows=plan.strip_rows, m_block=plan.m_block,
+                    batch_impl=plan.batch_impl, block_rows=plan.block_rows,
+                    stream_rows=plan.stream_rows,
+                    block_batch=plan.block_batch, mesh=plan.mesh)
+
+
+class MaskedDPRT:
+    """``M = diag(mask * weight) . A``: the masked/weighted forward DPRT.
+
+    ``op`` is a forward :class:`repro.radon.RadonOperator` (any geometry,
+    any dtype -- arithmetic promotes to :func:`float_dtype_for` of the
+    image dtype, so integer sinograms solve cleanly in float32/64).
+    ``mask`` and ``weight`` broadcast against the ``(…, P+1, P)``
+    projection grid and are combined into one diagonal ``d``; either may
+    be ``None`` (identity).  A 3-D ``d`` gives per-image masks for a
+    batched plan.
+
+    The operator surface matches :class:`RadonOperator` where it
+    matters: ``shape_in``/``shape_out``/``dtype_in``, ``__call__``,
+    ``.T`` (exact adjoint, an involution), ``as_matrix()`` for small-N
+    tests, and ``@`` composition.
+    """
+
+    __slots__ = ("plan", "d", "fdtype", "_adjoint")
+
+    def __init__(self, op, mask=None, weight=None, *, _plan=None,
+                 _d=None, _adjoint: bool = False):
+        if _plan is not None:          # internal: pre-built view
+            plan, fdtype, d = _plan, jnp.dtype(_plan.dtype_name), _d
+        else:
+            plan = getattr(op, "plan", None)
+            if plan is None or getattr(op, "kind", "forward") != "forward":
+                raise ValueError(
+                    "MaskedDPRT wraps a forward RadonOperator, got "
+                    f"{op!r}")
+            fdtype = float_dtype_for(op.dtype)
+            plan = _float_plan(plan, fdtype)
+            tshape = plan.geometry.transform_shape
+            d = jnp.ones(tshape[-2:], fdtype)
+            for part in (mask, weight):
+                if part is not None:
+                    part = jnp.asarray(part, fdtype)
+                    try:
+                        d = d * part
+                    except (TypeError, ValueError) as e:
+                        raise ValueError(
+                            f"mask/weight must broadcast to {tshape}, "
+                            f"got shape {part.shape}") from e
+            if d.shape[-2:] != tshape[-2:] or d.ndim > len(tshape):
+                raise ValueError(
+                    f"mask/weight must broadcast to {tshape}, got "
+                    f"diagonal of shape {d.shape}")
+            if d.ndim == len(tshape) == 3 and d.shape[0] != tshape[0]:
+                raise ValueError(
+                    f"batched mask/weight {d.shape} does not match plan "
+                    f"batch {tshape[0]}")
+        object.__setattr__(self, "plan", plan)
+        object.__setattr__(self, "d", d)
+        object.__setattr__(self, "fdtype", jnp.dtype(fdtype))
+        object.__setattr__(self, "_adjoint", bool(_adjoint))
+
+    def __setattr__(self, name, value):
+        raise AttributeError("MaskedDPRT is immutable")
+
+    # -- shapes / dtypes ---------------------------------------------------
+    @property
+    def shape_in(self):
+        g = self.plan.geometry
+        return g.transform_shape if self._adjoint else g.image_shape
+
+    @property
+    def shape_out(self):
+        g = self.plan.geometry
+        return g.image_shape if self._adjoint else g.transform_shape
+
+    @property
+    def dtype_in(self):
+        return self.fdtype
+
+    dtype_out = dtype_in
+
+    @property
+    def is_identity_diagonal(self) -> bool:
+        """True when ``d`` is exactly all-ones -- the unmasked case the
+        Sherman-Morrison fast path of :mod:`repro.radon.solve` owns."""
+        import numpy as np
+        return bool(np.all(np.asarray(self.d) == 1))
+
+    # -- application -------------------------------------------------------
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        from .autodiff import apply_plan
+        x = jnp.asarray(x).astype(self.fdtype)
+        if self._adjoint:
+            return apply_plan(self.plan, "adjoint", self.d * x)
+        return self.d * apply_plan(self.plan, "forward", x)
+
+    # -- algebra -----------------------------------------------------------
+    @property
+    def T(self) -> "MaskedDPRT":
+        """The exact adjoint ``(D A)^T = A^T D`` (and back: ``m.T.T``
+        applies ``D A`` again)."""
+        return MaskedDPRT(None, _plan=self.plan, _d=self.d,
+                          _adjoint=not self._adjoint)
+
+    def __matmul__(self, other):
+        from .operators import _compose
+        return _compose(self, other)
+
+    def __rmatmul__(self, other):
+        from .operators import _compose
+        return _compose(other, self)
+
+    # -- normal equations (the solver inner loop) --------------------------
+    def _srow(self) -> jnp.ndarray:
+        """Row 0 of ``d^2`` restricted to the W true columns: the only
+        part of ``d^2 * A x`` that feeds ``S`` (row 0 of ``A x`` is the
+        column-sum projection; embedded columns >= W sum zeros)."""
+        w = self.plan.geometry.image_shape[-1]
+        d2 = self.d * self.d
+        return d2[..., 0, :w]
+
+    def normal_apply(self, x: jnp.ndarray) -> jnp.ndarray:
+        """``M^T M x`` in one fused pipeline launch + a column-sum
+        reduction: ``P * pipeline(x, "mul", d^2) + S(d^2 * A x) * 1``
+        (module docstring).  Raw-plan arithmetic -- solver bodies wrap
+        it in their own jit/custom_jvp."""
+        p = self.plan.geometry.prime
+        d2 = self.d * self.d
+        y = self.plan.pipeline(x, "mul", d2)
+        s = (self._srow() * x.sum(axis=-2)).sum(axis=-1)
+        return p * y + s[..., None, None]
+
+    def normal_rhs(self, b: jnp.ndarray) -> jnp.ndarray:
+        """``M^T (d * b) = A^T (d^2 * b)``: the normal-equation right-
+        hand side, via ``A^T r = P * B r + S(r) * 1``."""
+        r = (self.d * self.d) * b.astype(self.fdtype)
+        p = self.plan.geometry.prime
+        s = r[..., 0, :].sum(axis=-1)
+        return p * self.plan.inverse(r) + s[..., None, None]
+
+    # -- introspection -----------------------------------------------------
+    def as_matrix(self) -> jnp.ndarray:
+        """Dense (out_size, in_size) matrix (small N; tests only)."""
+        size_in = 1
+        for s in self.shape_in:
+            size_in *= s
+        basis = jnp.eye(size_in, dtype=self.fdtype)
+        cols = jax.vmap(lambda e: self(e.reshape(self.shape_in)).ravel())(
+            basis)
+        return cols.T
+
+    def __repr__(self) -> str:
+        tag = "adjoint " if self._adjoint else ""
+        return (f"MaskedDPRT({tag}{self.shape_in}->{self.shape_out}, "
+                f"{self.fdtype.name}, method={self.plan.method!r})")
+
+    def __eq__(self, other):
+        return (isinstance(other, MaskedDPRT)
+                and self.plan == other.plan
+                and self._adjoint == other._adjoint
+                and self.d is other.d)
+
+    def __hash__(self):
+        return hash((self.plan, self._adjoint, id(self.d)))

@@ -108,6 +108,28 @@ def run(run_bench: bool = False) -> int:
         ok &= _check("sharded_pallas: fused conv pipeline == staged",
                      bool((fused == staged).all()))
 
+    # reconstruction gate: the Sherman-Morrison fast path must match the
+    # exact inverse (non-iteratively), and masked-direction CG must
+    # recover the dense-oracle least-squares solution
+    from . import MaskedDPRT, direction_mask, solve
+    op = DPRT(img_i.shape, img_i.dtype)
+    res = solve(op, op(img_i))
+    ok &= _check("solve: unmasked Sherman-Morrison == exact inverse",
+                 int(res.iterations) == 0
+                 and np.allclose(np.asarray(res.image), np.asarray(img_i),
+                                 atol=1e-3),
+                 f"iterations={int(res.iterations)}")
+    m = MaskedDPRT(op, mask=direction_mask(_N, [2, _N - 1]))
+    b = m(img_f)
+    dense = np.asarray(m.as_matrix())
+    oracle, *_ = np.linalg.lstsq(dense, np.asarray(b).ravel(), rcond=None)
+    rec = solve(m, b, "cg", tol=1e-7, maxiter=200)
+    scale = max(1.0, float(np.abs(oracle).max()))
+    err = float(np.abs(np.asarray(rec.image).ravel() - oracle).max())
+    ok &= _check("solve: masked-direction CG == dense LS oracle",
+                 err <= 1e-3 * scale,
+                 f"max err={err:.2e}, iters={int(rec.iterations)}")
+
     # one trace per geometry, enforced
     op = DPRT(img_i.shape, img_i.dtype)
     op(img_i)  # first trace happens outside the guard

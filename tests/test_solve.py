@@ -1,0 +1,311 @@
+"""Tests for the reconstruction subsystem (``repro.radon.solve``).
+
+Covers: MaskedDPRT adjoint exactness (``m.T.as_matrix()`` vs the dense
+transpose) across backends, the fused normal-equation identity against
+the dense ``(DA)^T (DA)``, every solver against the dense least-squares
+oracle on masked-direction problems, the non-iterative Sherman-Morrison
+fast path against the exact inverse, preconditioning, gradients via the
+implicit-function theorem vs finite differences, zero-retrace solver
+loops, batched-vs-per-image consistency, the servable operator surface,
+and the integer-promotion no-warning regression at the N=257
+accumulator cliff.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro import radon
+from repro.core.dprt import float_dtype_for
+
+PRIMES = [5, 7, 13]
+BACKENDS = ["gather", "horner", "pallas"]
+
+
+def rand_img(n, seed=0, batch=None):
+    shape = (n, n) if batch is None else (batch, n, n)
+    return np.random.default_rng(seed).integers(0, 9, shape)
+
+
+def masked_op(n, missing, method="pallas", dtype=jnp.int32, batch=None):
+    shape = (n, n) if batch is None else (batch, n, n)
+    op = radon.DPRT(shape, dtype, method=method)
+    return radon.MaskedDPRT(op, mask=radon.direction_mask(n, missing))
+
+
+def ls_oracle(m, b):
+    """Min-norm dense least-squares solution (what CG/LSQR from x0=0
+    converge to on a singular masked system)."""
+    A = np.asarray(m.as_matrix()).astype(np.float64)
+    x, *_ = np.linalg.lstsq(A, np.asarray(b).ravel().astype(np.float64),
+                            rcond=None)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# MaskedDPRT: exact adjoint + the fused normal-equation identity
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("method", BACKENDS)
+@pytest.mark.parametrize("n", PRIMES)
+def test_masked_adjoint_matrix_exact(n, method):
+    m = masked_op(n, [1, n - 1], method=method)
+    A = np.asarray(m.as_matrix())
+    AT = np.asarray(m.T.as_matrix())
+    # 0/1 mask on integer-valued float arithmetic: exact equality
+    assert np.array_equal(AT, A.T)
+    assert m.T.T.shape_out == m.shape_out  # involution
+
+
+def test_masked_weighting_and_validation():
+    n = 7
+    op = radon.DPRT((n, n), jnp.int32)
+    w = np.random.default_rng(3).uniform(0.5, 2.0, (n + 1, n))
+    m = radon.MaskedDPRT(op, mask=radon.direction_mask(n, [0]),
+                         weight=jnp.asarray(w))
+    x = jnp.asarray(rand_img(n), jnp.float32)
+    want = np.array(radon.MaskedDPRT(op)(x)) * w
+    want[0] = 0
+    np.testing.assert_allclose(np.asarray(m(x)), want, rtol=1e-6)
+    with pytest.raises(ValueError):
+        radon.MaskedDPRT(op, mask=jnp.ones((3, 3)))
+    with pytest.raises(ValueError):
+        radon.MaskedDPRT(op.inverse)
+
+
+@pytest.mark.parametrize("n", PRIMES)
+def test_normal_apply_matches_dense(n):
+    m = masked_op(n, [2], method="pallas")
+    G = np.asarray(m.as_matrix()).astype(np.float64)
+    G = G.T @ G
+    x = jnp.asarray(np.random.default_rng(1).standard_normal((n, n)),
+                    jnp.float32)
+    fused = np.asarray(m.normal_apply(x))
+    dense = (G @ np.asarray(x).ravel().astype(np.float64)).reshape(n, n)
+    np.testing.assert_allclose(fused, dense, rtol=1e-4, atol=1e-4)
+    rhs = np.asarray(m.normal_rhs(m(x)))
+    dense_rhs = (np.asarray(m.as_matrix()).T.astype(np.float64)
+                 @ np.asarray(m(x)).ravel()).reshape(n, n)
+    np.testing.assert_allclose(rhs, dense_rhs, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# solvers vs the dense oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("method", BACKENDS)
+@pytest.mark.parametrize("n", PRIMES)
+def test_masked_cg_matches_dense_ls(n, method):
+    m = masked_op(n, [2, n - 1], method=method)
+    b = m(jnp.asarray(rand_img(n, seed=n), jnp.float32))
+    want = ls_oracle(m, b)
+    res = radon.solve(m, b, "cg", tol=1e-7, maxiter=300)
+    got = np.asarray(res.image).ravel()
+    np.testing.assert_allclose(got, want, rtol=1e-5,
+                               atol=1e-5 * max(1.0, np.abs(want).max()))
+    hist = np.asarray(res.residual_norms)
+    assert hist.shape == (301,)
+    assert hist[0] == 1.0
+
+
+@pytest.mark.parametrize("solver", ["lsqr", "landweber"])
+def test_other_solvers_match_dense_ls(solver):
+    n = 7
+    m = masked_op(n, [3])
+    b = m(jnp.asarray(rand_img(n, seed=2), jnp.float32))
+    want = ls_oracle(m, b)
+    kw = (dict(tol=1e-10, maxiter=200) if solver == "lsqr"
+          else dict(tol=1e-7, maxiter=4000))
+    got = np.asarray(radon.solve(m, b, solver, **kw).image).ravel()
+    tol = 1e-5 if solver == "lsqr" else 1e-3
+    np.testing.assert_allclose(got, want, rtol=tol,
+                               atol=tol * max(1.0, np.abs(want).max()))
+
+
+@pytest.mark.parametrize("precond", ["sherman", "filter"])
+def test_preconditioned_cg(precond):
+    n = 13
+    m = masked_op(n, [5])
+    b = m(jnp.asarray(rand_img(n, seed=4), jnp.float32))
+    want = ls_oracle(m, b)
+    pc = ("sherman" if precond == "sherman"
+          else radon.ProjectionFilter(jnp.full((n + 1, n), 1.0 / (n + 1),
+                                               jnp.float32)))
+    res = radon.solve(m, b, "cg", precond=pc, tol=1e-7, maxiter=300)
+    got = np.asarray(res.image).ravel()
+    np.testing.assert_allclose(got, want, rtol=1e-4,
+                               atol=1e-4 * max(1.0, np.abs(want).max()))
+
+
+@pytest.mark.parametrize("n", PRIMES)
+def test_sherman_fast_path_noniterative_matches_inverse(n):
+    op = radon.DPRT((n, n), jnp.int32)
+    x = rand_img(n, seed=n)
+    res = radon.solve(op, op(jnp.asarray(x, jnp.int32)))
+    assert int(res.iterations) == 0          # closed form, no loop
+    assert bool(res.converged)
+    want = np.asarray(op.inverse(op(jnp.asarray(x, jnp.int32))))
+    np.testing.assert_allclose(np.asarray(res.image), want,
+                               rtol=1e-5, atol=1e-4)
+    # and it IS the least-squares solution of the full system
+    m = radon.MaskedDPRT(op)
+    np.testing.assert_allclose(
+        np.asarray(res.image).ravel(),
+        ls_oracle(m, m(jnp.asarray(x, jnp.float32))), rtol=1e-4,
+        atol=1e-3)
+
+
+def test_method_resolution_and_validation():
+    n = 7
+    op = radon.DPRT((n, n), jnp.int32)
+    m = masked_op(n, [1])
+    b = jnp.zeros((n + 1, n), jnp.float32)
+    with pytest.raises(ValueError):
+        radon.solve(m, b, "sherman")           # masked: no closed form
+    with pytest.raises(ValueError):
+        radon.solve(op, b, "nope")
+    with pytest.raises(ValueError):
+        radon.solve(m, b, "lsqr", precond="sherman")
+    with pytest.raises(ValueError):
+        radon.solve(m, b, mask=radon.direction_mask(n, [0]))  # twice
+    with pytest.raises(ValueError):
+        radon.solve(op, jnp.zeros((n, n), jnp.float32))  # bad shape
+    # auto: unmasked -> sherman, masked -> cg
+    assert int(radon.solve(op, b).iterations) == 0
+    res = radon.solve(m, b)                    # zero rhs converges at 0
+    assert bool(res.converged) and int(res.iterations) == 0
+
+
+# ---------------------------------------------------------------------------
+# differentiation: implicit-function-theorem gradients vs FD
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("solver", ["cg", "lsqr"])
+def test_grad_through_solve_matches_fd(solver):
+    n = 7
+    m = masked_op(n, [2])
+    b = jnp.asarray(np.asarray(m(jnp.asarray(rand_img(n, seed=5),
+                                             jnp.float32))))
+
+    def loss(bb):
+        return (radon.solve(m, bb, solver, tol=1e-9,
+                            maxiter=300).image ** 2).sum()
+
+    g = np.asarray(jax.grad(loss)(b))
+    # f32 central differences on an O(1e4) loss carry ~1% cancellation
+    # noise; the tight check against the dense-oracle gradient follows
+    eps = 1e-2
+    for (i, j) in [(0, 0), (3, 4), (n, n - 1)]:
+        e = jnp.zeros_like(b).at[i, j].set(eps)
+        fd = (loss(b + e) - loss(b - e)) / (2 * eps)
+        assert abs(g[i, j] - float(fd)) <= 5e-2 * max(1.0, abs(float(fd)))
+    # tight: x(b) = pinv(DA) D b is linear, so grad ||x||^2 = 2 P^T P b
+    M = np.asarray(m.as_matrix()).astype(np.float64)
+    P = np.linalg.pinv(M) @ np.diag(np.asarray(m.d).ravel().astype(
+        np.float64))
+    want = (2 * P.T @ (P @ np.asarray(b).ravel().astype(np.float64)))
+    np.testing.assert_allclose(g.ravel(), want, rtol=1e-3,
+                               atol=1e-3 * max(1.0, np.abs(want).max()))
+
+
+def test_grad_through_sherman_is_exact():
+    n = 5
+    op = radon.DPRT((n, n), jnp.int32)
+    b = jnp.asarray(np.asarray(op(jnp.asarray(rand_img(n, seed=6),
+                                              jnp.int32))), jnp.float32)
+
+    def loss(bb):
+        return (radon.solve(op, bb).image ** 2).sum()
+
+    g = np.asarray(jax.grad(loss)(b))
+    m = radon.MaskedDPRT(op)
+    P = np.linalg.pinv(np.asarray(m.as_matrix()).astype(np.float64))
+    want = 2 * P.T @ (P @ np.asarray(b).ravel().astype(np.float64))
+    np.testing.assert_allclose(g.ravel(), want, rtol=1e-3,
+                               atol=1e-3 * max(1.0, np.abs(want).max()))
+
+
+def test_solve_jittable_and_composable():
+    n = 7
+    m = masked_op(n, [1])
+    b = jnp.asarray(np.asarray(m(jnp.asarray(rand_img(n, seed=7),
+                                             jnp.float32))))
+    direct = radon.solve(m, b, "cg", tol=1e-6, maxiter=100).image
+    jitted = jax.jit(lambda bb: radon.solve(m, bb, "cg", tol=1e-6,
+                                            maxiter=100).image)(b)
+    np.testing.assert_allclose(np.asarray(direct), np.asarray(jitted),
+                               rtol=1e-6, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# serving properties: zero retrace, batching, the operator surface
+# ---------------------------------------------------------------------------
+def test_solver_loops_are_retrace_free():
+    n = 7
+    op = radon.DPRT((n, n), jnp.int32)
+    m = masked_op(n, [2])
+    rng = np.random.default_rng(8)
+    b1 = jnp.asarray(rng.standard_normal((n + 1, n)), jnp.float32)
+    b2 = jnp.asarray(rng.standard_normal((n + 1, n)), jnp.float32)
+    with radon.retrace_guard(max_traces=1):
+        for meth in ("cg", "lsqr", "landweber"):
+            radon.solve(m, b1, meth, tol=1e-6, maxiter=40)
+            radon.solve(m, b2, meth, tol=1e-6, maxiter=40)
+        radon.solve(op, b1)
+        radon.solve(op, b2)
+
+
+def test_batched_solve_matches_per_image():
+    n, nb = 7, 3
+    mb = masked_op(n, [1], batch=nb)
+    m1 = masked_op(n, [1])
+    xs = rand_img(n, seed=9, batch=nb)
+    bb = mb(jnp.asarray(xs, jnp.float32))
+    res = radon.solve(mb, bb, "cg", tol=1e-6, maxiter=150)
+    assert res.residual_norms.shape == (151, nb)
+    for i in range(nb):
+        one = radon.solve(m1, bb[i], "cg", tol=1e-6, maxiter=150)
+        np.testing.assert_allclose(np.asarray(res.image[i]),
+                                   np.asarray(one.image),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_solve_operator_surface():
+    n = 7
+    mask = radon.direction_mask(n, [2])
+    ro = radon.solve_operator((n, n), jnp.int32, mask=mask, tol=1e-7,
+                              maxiter=150)
+    assert ro.solver == "cg"
+    assert ro.shape_in == (n + 1, n)
+    assert ro.shape_out == (n, n)
+    assert ro.dtype_in == float_dtype_for(jnp.int32)
+    m = radon.MaskedDPRT(radon.DPRT((n, n), jnp.int32), mask=mask)
+    b = jnp.asarray(np.asarray(m(jnp.asarray(rand_img(n, seed=10),
+                                             jnp.float32))))
+    exe = ro.compile()
+    np.testing.assert_allclose(np.asarray(exe(b)), np.asarray(ro(b)),
+                               rtol=1e-6, atol=1e-6)
+    tok = ro.cache_token()
+    assert tok.startswith("recon_") and "cg" in tok
+    # unmasked defaults to the direct solver
+    assert radon.solve_operator((n, n), jnp.int32).solver == "sherman"
+
+
+# ---------------------------------------------------------------------------
+# regression: integer sinograms promote to float without the x64 warning
+# ---------------------------------------------------------------------------
+def test_int_solve_no_accum_warning_at_cliff():
+    import importlib
+    dprt_mod = importlib.import_module("repro.core.dprt")
+    n = 257   # the int32->int64 accumulator cliff geometry
+    op = radon.DPRT((n, n), jnp.int16)
+    b = jnp.zeros((n + 1, n), jnp.int16)
+    old = dprt_mod._X64_WARNED
+    dprt_mod._X64_WARNED = False
+    try:
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            res = radon.solve(op, b)
+    finally:
+        dprt_mod._X64_WARNED = old
+    assert res.image.dtype == float_dtype_for(jnp.int16)
