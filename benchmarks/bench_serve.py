@@ -10,6 +10,13 @@ Two claims gate here (``serve/*`` rows in ``BENCH_dprt.json``):
   does).  At small geometries the per-call dispatch overhead dominates
   the kernel, which is exactly where a high-QPS image service lives --
   the coalesced path amortizes it across the batch.
+* **Routing.**  ``serve/router_mixed`` drives the fault-tolerant
+  multiplexer (:class:`repro.launch.router.ServiceRouter`) with traffic
+  interleaving two geometries -- the production shape where one
+  front-end owns every geometry -- and ``serve/router_overhead`` sends
+  the exact single-geometry traffic of ``serve/coalesced`` through the
+  router, so their ratio isolates what admission, deadline tracking and
+  the retry seam cost on the happy path.
 * **Warm restarts.**  ``serve/aot_cold_compile`` times XLA compilation
   of a warm-size executable; ``serve/aot_warm_restore`` times
   restoring the same executable from its serialized blob
@@ -36,11 +43,13 @@ import numpy as np
 
 from repro import radon
 from repro.checkpoint.store import save_blob
+from repro.launch.router import ServiceRouter
 from repro.launch.service import DPRTService
 
 from .common import emit
 
 N = 31           # dispatch-overhead-bound geometry: where coalescing wins
+N_SMALL = 13     # second routed geometry for the multiplexing row
 MAX_BATCH = 16   # the B=16-equivalent load of the acceptance criterion
 REQUESTS = 64
 PASSES = 9
@@ -72,6 +81,40 @@ def main() -> None:
     emit(f"serve/seq_per_request/N{N}/b{MAX_BATCH}", 1e6 * seq,
          "per-request baseline, no coalescing", kind="serve",
          variant="seq_per_request", method="auto", n=N, batch=MAX_BATCH,
+         requests=REQUESTS, guard_tol=2.5)
+
+    # the fault-tolerant router: mixed-geometry multiplexing, plus the
+    # single-geometry overhead row against the direct service above
+    router = ServiceRouter(max_batch=MAX_BATCH, queue_cap=REQUESTS,
+                           max_inflight=2 * REQUESTS)
+    router.prefill([{"n": N}, {"n": N_SMALL}])
+    small = [rng.integers(0, 256, (N_SMALL, N_SMALL), dtype=np.int32)
+             for _ in range(REQUESTS // 2)]
+    mixed, want = [], []
+    oracle = radon.DPRT((1, N_SMALL, N_SMALL), jnp.int32)
+    for i in range(REQUESTS):
+        if i % 2:
+            mixed.append(({"n": N}, imgs[i]))
+            want.append(np.asarray(ref[i]))
+        else:
+            img = small[i // 2]
+            mixed.append(({"n": N_SMALL}, img))
+            want.append(np.asarray(oracle(jnp.asarray(img[None])))[0])
+    for got, exp in zip(router.run_requests(mixed, repeats=2), want):
+        np.testing.assert_array_equal(np.asarray(got), exp)
+    router.run_requests(mixed, repeats=PASSES)
+    rmixed = min(router.last_pass_walls) / REQUESTS
+    router.run_requests([({"n": N}, img) for img in imgs],
+                        repeats=PASSES)
+    rover = min(router.last_pass_walls) / REQUESTS
+    assert router.verdict() == "OK", router.healthz()   # clean happy path
+    emit(f"serve/router_mixed/N{N_SMALL}_{N}/b{MAX_BATCH}", 1e6 * rmixed,
+         f"imgs_per_s={1 / rmixed:.0f} routes=2", kind="serve",
+         variant="router_mixed", method="auto", n=N, batch=MAX_BATCH,
+         requests=REQUESTS, guard_tol=2.5)
+    emit(f"serve/router_overhead/N{N}/b{MAX_BATCH}", 1e6 * rover,
+         f"x_vs_direct={rover / coal:.2f}", kind="serve",
+         variant="router_overhead", method="auto", n=N, batch=MAX_BATCH,
          requests=REQUESTS, guard_tol=2.5)
 
     # persistent AOT: cold start vs warm restart, each in a FRESH

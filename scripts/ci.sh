@@ -1,11 +1,13 @@
 #!/usr/bin/env bash
 # Quick CI gate: the tier-1 test suite, the public-API health smoke,
-# and the serving-tier perf guard against the committed baseline.
+# the chaos smoke for the fault-tolerant router, and the serving-tier
+# perf guard against the committed baseline.
 #
 #   scripts/ci.sh            # from the repo root
 #
 # Stays on the quick tier by design: `-m "not slow"` skips the
-# forced-host multi-device subprocess tests, and the perf guard runs
+# forced-host multi-device subprocess tests, the chaos smoke runs with
+# `--smoke` (small geometries, short burst), and the perf guard runs
 # `--only serve` (the full shoot-out baseline is a longer, separate
 # `python -m benchmarks.run --check`).  Each step's failure fails the
 # script (set -e), so CI reports the first broken gate.
@@ -13,16 +15,19 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="${PYTHONPATH:+$PYTHONPATH:}$PWD/src"
 
-echo "== [1/4] quick-tier tests =="
+echo "== [1/5] quick-tier tests =="
 python -m pytest -x -q -m "not slow" tests
 
-echo "== [2/4] repro.radon.selfcheck =="
+echo "== [2/5] repro.radon.selfcheck =="
 python -m repro.radon.selfcheck
 
-echo "== [3/4] serve perf guard (vs committed BENCH_dprt.json) =="
+echo "== [3/5] router chaos smoke (fault injection, degrade-not-drop) =="
+python -m repro.launch.serve --mode service --chaos --smoke
+
+echo "== [4/5] serve perf guard (vs committed BENCH_dprt.json) =="
 python -m benchmarks.run --check --only serve
 
-echo "== [4/4] recon perf guard (vs committed BENCH_dprt.json) =="
+echo "== [5/5] recon perf guard (vs committed BENCH_dprt.json) =="
 python -m benchmarks.run --check --only recon
 
 echo "== ci.sh: all gates passed =="

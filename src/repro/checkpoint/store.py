@@ -155,7 +155,21 @@ def save_blob(directory: str, key: str, data: bytes,
         f.write(len(header).to_bytes(8, "big"))
         f.write(header)
         f.write(data)
+        # fsync BEFORE the rename: os.replace is atomic in the
+        # namespace but not in the page cache -- without this, a crash
+        # after the rename can leave a truncated file under the FINAL
+        # name, which readers would see as a corrupt (not absent) blob
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(tmp, final)         # atomic publish
+    try:                           # persist the rename itself
+        dfd = os.open(directory, os.O_RDONLY)
+        try:
+            os.fsync(dfd)
+        finally:
+            os.close(dfd)
+    except OSError:                # platform without dir fsync: best effort
+        pass
     return final
 
 

@@ -74,6 +74,7 @@ __all__ = [
     "plan_cache_info",
     "plan_cache_entries",
     "plan_cache_clear",
+    "plan_cache_discard",
     "set_plan_cache_maxsize",
     "dispatch_skew_sum",
 ]
@@ -991,6 +992,19 @@ class _PlanLRU:
             self._data.clear()
         self._fire(dropped)
 
+    def discard(self, plans) -> int:
+        """Drop exactly the given plans (if cached), firing the evict
+        hooks for each -- the targeted form of eviction the serving
+        router uses to release one retired geometry's executables
+        without disturbing its neighbours."""
+        wanted = {id(p) for p in plans}
+        with self._lock:
+            keys = [k for k, v in self._data.items() if id(v) in wanted]
+            dropped = [self._data.pop(k) for k in keys]
+            self.evictions += len(dropped)
+        self._fire(dropped)
+        return len(dropped)
+
     def resize(self, maxsize: Optional[int]) -> None:
         with self._lock:
             self.maxsize = maxsize
@@ -1105,6 +1119,15 @@ def plan_cache_entries() -> list:
 
 def plan_cache_clear() -> None:
     _PLAN_CACHE.clear()
+
+
+def plan_cache_discard(plans) -> int:
+    """Evict exactly the given plans from the cache, firing the same
+    evict hooks as LRU pressure would -- so their jitted appliers and
+    AOT executables are released in lockstep.  Returns how many were
+    actually cached.  The serving router calls this when it retires a
+    cold geometry, passing only plans no surviving route shares."""
+    return _PLAN_CACHE.discard(plans)
 
 
 def dispatch_skew_sum(g: jnp.ndarray, sign: int, method: str = "horner",

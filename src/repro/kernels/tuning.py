@@ -199,6 +199,25 @@ def warm_batch_sizes(max_batch: int) -> tuple:
     return tuple(sizes)
 
 
+#: routed keys at/above this geometry get a trimmed warm ladder -- a
+#: giant-N executable is hundreds of MB of compiled program, and a
+#: multi-tenant router keeping the full (1, 2, 4, 8, 16) ladder for
+#: every resident geometry would blow the executable budget the LRU
+#: eviction exists to bound.
+ROUTER_TRIM_N = 509
+
+
+def router_warm_sizes(n: int, max_batch: int) -> tuple:
+    """Warm batch sizes for one routed ``(geometry, dtype, datapath)``
+    key: the full :func:`warm_batch_sizes` ladder for small geometries,
+    trimmed to ``(1, max_batch)`` once ``n >= ROUTER_TRIM_N`` (padding
+    waste is bounded by the batcher's coalescing at large N, executable
+    residency is not)."""
+    if n >= ROUTER_TRIM_N and max_batch > 1:
+        return (1, int(max_batch))
+    return warm_batch_sizes(max_batch)
+
+
 def nearest_warm_batch(count: int, sizes) -> int:
     """Smallest warm size >= ``count`` (the padding target for one
     coalesced batch).  ``count`` above every size is a caller bug: the

@@ -1,0 +1,44 @@
+"""Typed service errors shared by the serving tier.
+
+Every rejection a caller can see carries a stable machine-readable
+``code`` (the jsonl front-end and the chaos harness both key on it), so
+"the router refused" is always distinguishable from "the kernel is
+wrong".  The contract the fault-tolerance suite enforces is exactly:
+every response is either bit-exact output or one of these.
+
+This module sits below both :mod:`repro.launch.service` and
+:mod:`repro.launch.router` (the router imports the service, so the
+shared vocabulary cannot live in either).
+"""
+from __future__ import annotations
+
+__all__ = ["ServiceError", "DeadlineExceeded", "QueueFull",
+           "ServiceShutdown"]
+
+
+class ServiceError(RuntimeError):
+    """Base of every typed serving rejection; ``code`` is the stable
+    wire identifier."""
+
+    code = "service_error"
+
+
+class DeadlineExceeded(ServiceError):
+    """The request's SLO deadline passed (or provably cannot be met)
+    before its batch dispatched -- rejected instead of served late."""
+
+    code = "deadline_exceeded"
+
+
+class QueueFull(ServiceError):
+    """Bounded admission refused the request: the per-key queue cap or
+    the router's global in-flight budget is exhausted."""
+
+    code = "queue_full"
+
+
+class ServiceShutdown(ServiceError):
+    """The service/router is (shutting) down; the request was rejected
+    rather than left as a forever-pending future."""
+
+    code = "shutdown"

@@ -11,7 +11,20 @@
                    executable cache (``--aot-dir``) so restarts skip
                    XLA compilation, and a ``/healthz``-style stats
                    report (latency percentiles, batch occupancy, cache
-                   and trace counters).
+                   and trace counters).  Three sub-modes grow it into
+                   the multi-tenant tier:
+
+                   * ``--jsonl`` runs the stdin-jsonl worker over a
+                     :class:`~repro.launch.router.ServiceRouter`
+                     (multi-geometry routing, bounded admission,
+                     deadlines, retry/degrade), prefilled from a
+                     ``--manifest`` of route specs;
+                   * ``--chaos`` runs the fault-injection smoke: a
+                     mixed-geometry burst under injected kernel
+                     errors, dispatch delays, corrupt AOT blobs and a
+                     queue flood, asserting the router degrades to
+                     WARN with every response bit-exact or typed;
+                   * default: the single-service benchmark loop.
 
 The radon service is built on the :mod:`repro.radon` operator API:
 ``--method`` resolves through the backend registry (any registered
@@ -33,6 +46,9 @@ sharded executables before the timing loop.
 from __future__ import annotations
 
 import argparse
+import json
+import sys
+import tempfile
 import time
 
 import jax
@@ -253,6 +269,150 @@ def serve_service(args):
     return results
 
 
+def _load_manifest(path):
+    """A geometry manifest: a JSON list of route specs
+    (``[{"n": 13}, {"n": 17, "datapath": "roundtrip"}, …]``)."""
+    with open(path) as f:
+        data = json.load(f)
+    if not isinstance(data, list) or not all(isinstance(e, dict)
+                                             for e in data):
+        raise SystemExit(f"--manifest {path} must be a JSON list of "
+                         "route-spec objects")
+    return data
+
+
+def serve_jsonl_mode(args):
+    """The transport worker: a prefilled ServiceRouter behind the
+    newline-delimited-JSON protocol on stdin/stdout (healthz to stderr
+    at exit -- stdout belongs to the protocol)."""
+    from repro.launch.router import ServiceRouter, serve_jsonl
+    router = ServiceRouter(
+        max_batch=args.batch, max_wait_us=args.max_wait_us,
+        max_services=args.max_services, queue_cap=args.queue_cap,
+        max_inflight=args.max_inflight, aot_dir=args.aot_dir)
+    if args.manifest:
+        infos = router.prefill(_load_manifest(args.manifest))
+        print(f"[serve-jsonl] prefilled {len(infos)} routes",
+              file=sys.stderr)
+    serve_jsonl(router, sys.stdin, sys.stdout)
+    print(router.healthz(), file=sys.stderr)
+    return router
+
+
+def serve_chaos(args):
+    """The fault-injection smoke: mixed-geometry traffic through a
+    deliberately tight router while the :mod:`repro.launch.faults`
+    harness injects kernel errors, dispatch delays, corrupt AOT blobs
+    and a queue flood.  Asserts the robustness contract: no hang, no
+    dropped future, every response bit-exact vs the per-operator oracle
+    or a typed rejection, and a healthz that accounts for every
+    degradation (verdict WARN, never FAIL)."""
+    from repro.launch import faults
+    from repro.launch.errors import ServiceError
+    from repro.launch.router import ServiceRouter
+
+    seed = args.chaos_seed
+    ns = (13, 17)
+    requests_n = 16 if args.smoke else 48
+    flood_n = 3 * args.queue_cap
+    manifest = ([{"n": n} for n in ns]
+                + [{"n": ns[0], "datapath": "roundtrip"}])
+    aot_dir = args.aot_dir or tempfile.mkdtemp(prefix="repro_chaos_aot_")
+
+    # seed the blob store warm, then corrupt it: the chaos router's
+    # prefill must degrade to counted cold compiles, not an outage
+    seeder = ServiceRouter(max_batch=4, aot_dir=aot_dir)
+    seeder.prefill(manifest)
+    radon.aot_cache_clear()
+    corrupted = faults.corrupt_blobs(aot_dir, seed=seed)
+    print(f"[serve-chaos] corrupted {corrupted} AOT blobs in {aot_dir}")
+
+    # oracles BEFORE the chaos run (process-global trace counters)
+    rng = np.random.default_rng(seed)
+    def oracle(n, img):
+        return np.asarray(radon.DPRT((1, n, n), jnp.int32)(
+            jnp.asarray(img[None])))[0]
+    traffic = []      # (spec, payload, submit kwargs, expected|None)
+    for i in range(requests_n):
+        n = ns[i % len(ns)]
+        img = rng.integers(0, 100, (n, n)).astype(np.int32)
+        kw = {}
+        if i % 11 == 3:
+            kw["deadline_s"] = 1e-6    # unmeetable SLO: typed rejection
+        if i % 5 == 0:
+            kw["priority"] = 1
+        want = oracle(n, img) if "deadline_s" not in kw else None
+        traffic.append(({"n": n}, img, kw, want))
+    rt_img = rng.integers(0, 100, (ns[0], ns[0])).astype(np.int32)
+    traffic.append(({"n": ns[0], "datapath": "roundtrip"}, rt_img, {},
+                    rt_img))           # roundtrip oracle = the image
+    flood_img = np.zeros((ns[0], ns[0]), np.int32)
+    flood_want = oracle(ns[0], flood_img)
+    for _ in range(flood_n):           # queue flood: bounded admission
+        traffic.append(({"n": ns[0]}, flood_img, {}, flood_want))
+
+    router = ServiceRouter(
+        max_batch=4, max_wait_us=500.0, max_services=args.max_services,
+        queue_cap=args.queue_cap, max_inflight=args.max_inflight,
+        max_retries=1, retry_backoff_s=1e-3, aot_dir=aot_dir)
+    router.prefill(manifest)
+    assert router.degraded_compiles() > 0, \
+        "corrupt blobs must surface as degraded_compiles"
+
+    with faults.FaultInjector(seed=seed, sites=("dispatch",),
+                              error_count=3, error_rate=0.05,
+                              delay_s=0.002, delay_rate=0.3) as inj:
+        outs = router.run_requests([(s, p, kw)
+                                    for s, p, kw, _ in traffic])
+
+    # force the degrade path deterministically: every dispatch attempt
+    # of ONE targeted route fails, so retries exhaust and the staged
+    # fallback must produce the (bit-exact) answer
+    fallbacks_before = router.fallbacks
+    rt_key = f"{ns[0]}x{ns[0]}/int32/roundtrip"
+    with faults.FaultInjector(seed=seed + 1, sites=("dispatch",),
+                              error_count=router.max_retries + 1,
+                              match=rt_key):
+        forced = router.run_requests(
+            [({"n": ns[0], "datapath": "roundtrip"}, rt_img)])
+    assert np.array_equal(np.asarray(forced[0]), rt_img), \
+        "the fallback answer must stay bit-exact"
+    assert router.fallbacks > fallbacks_before, \
+        "exhausted retries must degrade to the fallback path"
+    print(f"[serve-chaos] forced fallback on {rt_key}: bit-exact via "
+          "the staged registry path")
+
+    exact = typed = raw = wrong = 0
+    for (spec, _p, _kw, want), out in zip(traffic, outs):
+        if isinstance(out, ServiceError):
+            typed += 1
+        elif isinstance(out, BaseException):
+            raw += 1
+        elif want is not None and not np.array_equal(np.asarray(out),
+                                                     want):
+            wrong += 1
+        else:
+            exact += 1
+    s = router.stats()
+    accounted = (s["delivered"] + s["failed"] + s["pending"]
+                 + router.rejected_deadline + router.rejected_shutdown)
+    print(f"[serve-chaos] injected: {inj.stats()}")
+    print(f"[serve-chaos] responses: exact={exact} typed={typed} "
+          f"raw={raw} wrong={wrong} "
+          f"(admitted={s['admitted']} accounted={accounted})")
+    print(router.healthz())
+    assert wrong == 0, "a degraded response was NOT bit-exact"
+    assert raw == 0, "a failure escaped untyped"
+    assert s["pending"] == 0, "the router dropped a future"
+    assert s["admitted"] == accounted, "future accounting does not close"
+    assert typed > 0, "the flood/deadline pressure produced no rejection"
+    assert router.verdict() == "WARN", \
+        f"chaos must degrade to WARN, got {router.verdict()}"
+    print("[serve-chaos] PASS: degraded to WARN, every response exact "
+          "or typed")
+    return outs
+
+
 def list_backends():
     cols = ("name", "priority", "batched_native", "needs_strip_rows",
             "takes_m_block", "stream", "mesh_aware", "pipeline", "dtypes",
@@ -321,6 +481,28 @@ def main(argv=None):
                     help="persistent AOT executable cache directory for "
                          "--mode service: restarts deserialize compiled "
                          "executables instead of re-running XLA")
+    ap.add_argument("--jsonl", action="store_true",
+                    help="--mode service: run the stdin-jsonl router "
+                         "worker instead of the benchmark loop (submit/"
+                         "healthz/shutdown ops; typed error codes)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="--mode service: run the fault-injection chaos "
+                         "smoke (mixed geometries, injected faults, "
+                         "asserts WARN-not-FAIL and exact-or-typed "
+                         "responses)")
+    ap.add_argument("--manifest", default=None,
+                    help="geometry manifest (JSON list of route specs) "
+                         "to prefill the router's warm pool from")
+    ap.add_argument("--max-services", type=int, default=8,
+                    help="router residency bound: LRU-evict cold routes "
+                         "beyond this many (executables drop in lockstep)")
+    ap.add_argument("--queue-cap", type=int, default=64,
+                    help="router per-route queue cap (typed QueueFull "
+                         "beyond it)")
+    ap.add_argument("--max-inflight", type=int, default=256,
+                    help="router global in-flight request budget")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="deterministic seed for --chaos fault injection")
     ap.add_argument("--datapath", default="forward",
                     choices=["forward", "roundtrip", "conv", "solve"],
                     help="what one service request computes (conv uses a "
@@ -338,6 +520,10 @@ def main(argv=None):
     if args.mode == "lm":
         return serve_lm(args)
     if args.mode == "service":
+        if args.chaos:
+            return serve_chaos(args)
+        if args.jsonl:
+            return serve_jsonl_mode(args)
         return serve_service(args)
     return serve_radon(args)
 

@@ -39,6 +39,7 @@ from __future__ import annotations
 
 import asyncio
 import collections
+import threading
 import time
 from typing import Dict, Iterable, Optional, Sequence, Tuple
 
@@ -49,6 +50,8 @@ import numpy as np
 from repro import radon
 from repro.core.plan import plan_cache_entries, plan_cache_info
 from repro.kernels.tuning import nearest_warm_batch, warm_batch_sizes
+from repro.launch.errors import ServiceShutdown
+from repro.launch.faults import perturb
 
 __all__ = ["DPRTService", "latency_summary", "format_latency",
            "percentile"]
@@ -144,11 +147,12 @@ class DPRTService:
 
     def __init__(self, shape: Tuple[int, int], dtype=jnp.int32, *,
                  max_batch: int = 16, max_wait_us: float = 2000.0,
+                 warm_sizes: Optional[Sequence[int]] = None,
                  datapath: str = "forward", method: Optional[str] = None,
                  conv_kernel=None, solve_mask=None, solve_weight=None,
                  solver: str = "auto", solve_tol: float = 1e-6,
                  solve_maxiter: int = 50, aot_dir: Optional[str] = None,
-                 history: int = 65536, **knobs):
+                 fallback: bool = False, history: int = 65536, **knobs):
         shape = tuple(int(s) for s in shape)
         if len(shape) != 2:
             raise ValueError(f"service geometry must be (H, W), got {shape}")
@@ -164,10 +168,20 @@ class DPRTService:
         self.dtype = jnp.dtype(dtype)
         self.datapath = datapath
         self.max_wait_us = float(max_wait_us)
-        self.sizes = warm_batch_sizes(int(max_batch))
+        if warm_sizes is not None:   # routed keys trim the ladder
+            sizes = tuple(sorted({int(b) for b in warm_sizes}))
+            if not sizes or sizes[0] < 1:
+                raise ValueError(f"warm_sizes must be >= 1, got {warm_sizes}")
+            self.sizes = sizes
+        else:
+            self.sizes = warm_batch_sizes(int(max_batch))
         self.max_batch = self.sizes[-1]
+        #: stable identity at the fault seam and in typed rejections
+        self.fault_key = (f"{shape[0]}x{shape[1]}/{self.dtype.name}/"
+                          f"{datapath}")
         self.persistent = (radon.PersistentAOTCache(aot_dir)
                            if aot_dir else None)
+        self._want_fallback = bool(fallback)
 
         self._ops: Dict[int, tuple] = {}
         for b in self.sizes:
@@ -192,7 +206,12 @@ class DPRTService:
         self.request_dtype = jnp.dtype(first.dtype_in)
         self._exes: Dict[int, tuple] = {}
 
+        # -- degraded path -------------------------------------------------
+        self._fallback = None          # jitted staged/registry applier
+        self._fallback_traced = False
+
         # -- metrics ------------------------------------------------------
+        self._metrics_lock = threading.Lock()   # execute() runs on threads
         self._latencies = collections.deque(maxlen=int(history))
         self._batch_sizes = collections.Counter()  # admitted (pre-pad) size
         self._requests_done = 0
@@ -201,6 +220,8 @@ class DPRTService:
         self._occupancy_sum = 0.0
         self._queue_depth_max = 0
         self._failures = 0
+        self._fallback_uses = 0
+        self._rejected_shutdown = 0
         self._compute_s = 0.0
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
@@ -227,6 +248,8 @@ class DPRTService:
                 (self.persistent.get_or_compile(op) if self.persistent
                  else op.compile())
                 for op in stages)
+        if self._want_fallback:      # degraded path traces at warmup, so
+            self.prepare_fallback()  # an incident never pays its compile
         dt = time.perf_counter() - t0
         self._traces_after_warmup = radon.trace_count()
         info: Dict[str, object] = {
@@ -238,6 +261,106 @@ class DPRTService:
             info["persistent"] = self.persistent.stats()
         return info
 
+    @property
+    def warmed(self) -> bool:
+        """True once :meth:`warmup` has built the executables."""
+        return bool(self._exes)
+
+    def plans(self) -> set:
+        """Every :class:`RadonPlan` the operator stages reference.
+        Plans are SHARED across services of one geometry (forward and
+        roundtrip reuse the same cached plan), so the router's targeted
+        eviction discards only plans no surviving route still holds."""
+        out = set()
+        for stages in self._ops.values():
+            for op in stages:
+                plan = getattr(op, "plan", None)
+                if plan is not None:
+                    out.add(plan)
+        return out
+
+    # -- degraded path -----------------------------------------------------
+    def prepare_fallback(self) -> None:
+        """Build and trace the degraded-path applier: a fresh ``jax.jit``
+        of the registry (staged, for conv) composition -- the bit-exact
+        alternative :meth:`execute_fallback` serves when the primary AOT
+        executables fail.  Traced at the LARGEST warm size only (one
+        fallback trace per service, padding absorbs the rest).
+        Idempotent; ran from :meth:`warmup` when the service was built
+        with ``fallback=True``."""
+        if self._fallback is None:
+            self._fallback = self._build_fallback()
+        if not self._fallback_traced:
+            zeros = jnp.zeros((self.max_batch,) + self.request_shape,
+                              self.request_dtype)
+            np.asarray(self._fallback(zeros))
+            self._fallback_traced = True
+
+    def _build_fallback(self):
+        ops = self._ops[self.max_batch]
+        if self.datapath == "conv":
+            op = ops[0]
+            plan, kernel = op.plan, op.kernel
+            if not plan.geometry.native:
+                # non-native conv is already the staged folded
+                # composition; a fresh jit of it sidesteps a broken AOT
+                # executable all the same
+                return jax.jit(lambda x: op(x))
+            # native conv: the explicit STAGED three-launch composition
+            # (forward, exact 1-D conv, inverse) -- the registry path a
+            # fused-pipeline failure degrades to, replicating
+            # RadonPlan.pipeline's staged branch
+            from repro.core.conv import circ_conv1d_exact
+            from repro.core.plan import get_plan
+            p = plan.geometry.prime
+            kplan = get_plan((p, p), plan.dtype_name, plan.method,
+                             strip_rows=plan.strip_rows,
+                             m_block=plan.m_block, mesh=plan.mesh)
+
+            def staged(x):
+                rf = plan.forward(x)
+                rg = kplan.forward(kernel)
+                rc = circ_conv1d_exact(rf, rg)
+                return plan.inverse(rc.astype(rf.dtype))
+            return jax.jit(staged)
+        appliers = []
+        for op in ops:
+            kind = getattr(op, "kind", None)
+            plan = getattr(op, "plan", None)
+            if plan is not None and kind is not None \
+                    and hasattr(plan, kind):
+                appliers.append(getattr(plan, kind))  # raw registry path
+            else:                     # solve etc.: the operator itself
+                appliers.append(op)
+
+        def chain(x):
+            for fn in appliers:
+                x = fn(x)
+            return x
+        return jax.jit(chain)
+
+    def execute_fallback(self, stack: np.ndarray) -> np.ndarray:
+        """Run one admitted stack through the degraded path -- bit-exact
+        vs the primary executables, just slower (separate launches /
+        fresh compile).  Counted in ``fallback_uses``; a fallback that
+        was never prepared compiles here, mid-incident."""
+        self.prepare_fallback()
+        b = int(stack.shape[0])
+        if b > self.max_batch:
+            raise ValueError(f"fallback stack of {b} exceeds max_batch "
+                             f"{self.max_batch}")
+        if b < self.max_batch:
+            pad = np.zeros((self.max_batch - b,) + tuple(stack.shape[1:]),
+                           stack.dtype)
+            stack = np.concatenate([stack, pad])
+        perturb("fallback", key=self.fault_key)
+        out = np.asarray(self._fallback(jnp.asarray(stack)))
+        with self._metrics_lock:
+            self._fallback_uses += 1
+            self._requests_done += b
+            self._t_last = time.perf_counter()
+        return out[:b]
+
     # -- async entry points ------------------------------------------------
     async def start(self) -> None:
         """Create the queue + batcher task on the running event loop
@@ -245,6 +368,38 @@ class DPRTService:
         if self._queue is None:
             self._queue = asyncio.Queue()
             self._batcher = asyncio.create_task(self._run())
+            self._batcher.add_done_callback(self._on_batcher_done)
+
+    def _on_batcher_done(self, task: "asyncio.Task") -> None:
+        # a batcher that DIED (not: was cancelled by shutdown) can never
+        # deliver the queued futures -- fail them typed instead of
+        # leaving callers awaiting forever
+        if task.cancelled() or task.exception() is None:
+            return
+        self._reject_queued(self._queue, cause=task.exception())
+
+    def _reject_requests(self, requests,
+                         cause: Optional[BaseException] = None) -> None:
+        for r in requests:
+            if not r.future.done():
+                err = ServiceShutdown(
+                    f"DPRTService({self.fault_key}) stopped with the "
+                    f"request still queued")
+                if cause is not None:
+                    err.__cause__ = cause
+                r.future.set_exception(err)
+                self._rejected_shutdown += 1
+
+    def _reject_queued(self, queue, cause: Optional[BaseException] = None) \
+            -> None:
+        if queue is None:
+            return
+        while True:
+            try:
+                r = queue.get_nowait()
+            except asyncio.QueueEmpty:
+                return
+            self._reject_requests((r,), cause)
 
     def submit_nowait(self, img) -> asyncio.Future:
         """Enqueue one request without awaiting it; returns the future
@@ -259,6 +414,9 @@ class DPRTService:
         if self._queue is None:
             raise RuntimeError("DPRTService.start() must run on the "
                                "event loop before submit_nowait")
+        if self._batcher is not None and self._batcher.done():
+            raise ServiceShutdown(f"DPRTService({self.fault_key}) batcher "
+                                  "is no longer running")
         img = np.asarray(img)
         if img.shape != self.request_shape:
             raise ValueError(f"request shape {img.shape} != service "
@@ -292,42 +450,62 @@ class DPRTService:
             else:
                 await asyncio.sleep(0)
 
-    async def shutdown(self) -> None:
-        """Drain, then stop the batcher and detach from this event loop
-        (the service object stays warm for the next run)."""
-        await self.drain()
+    async def shutdown(self, drain: bool = True) -> None:
+        """Stop the batcher and detach from this event loop (the service
+        object stays warm for the next run).  With ``drain`` (default)
+        every queued request is dispatched first; without it -- and for
+        anything that raced in after the drain -- still-queued requests
+        are REJECTED with the typed :class:`ServiceShutdown`, because a
+        cancelled batcher can never deliver their futures."""
+        if drain:
+            await self.drain()
         if self._batcher is not None:
             self._batcher.cancel()
             try:
                 await self._batcher
             except asyncio.CancelledError:
                 pass
-        self._queue = None
+        queue, self._queue = self._queue, None
         self._batcher = None
+        self._reject_queued(queue)
+        if self._pending:   # in-flight dispatches still complete
+            await asyncio.gather(*list(self._pending),
+                                 return_exceptions=True)
 
     # -- the batcher -------------------------------------------------------
     async def _run(self) -> None:
         loop = asyncio.get_running_loop()
         while True:
             batch = [await self._queue.get()]
-            deadline = loop.time() + self.max_wait_us * 1e-6
-            while len(batch) < self.max_batch:
-                # drain already-queued requests synchronously first:
-                # wait_for costs a task + timer per call, which at small
-                # geometries would dwarf the kernel itself
-                try:
-                    batch.append(self._queue.get_nowait())
-                    continue
-                except asyncio.QueueEmpty:
-                    pass
-                remaining = deadline - loop.time()
-                if remaining <= 0:
-                    break
-                try:
-                    batch.append(await asyncio.wait_for(self._queue.get(),
-                                                        remaining))
-                except asyncio.TimeoutError:
-                    break
+            try:
+                deadline = loop.time() + self.max_wait_us * 1e-6
+                while len(batch) < self.max_batch:
+                    # drain already-queued requests synchronously first:
+                    # wait_for costs a task + timer per call, which at
+                    # small geometries would dwarf the kernel itself
+                    try:
+                        batch.append(self._queue.get_nowait())
+                        continue
+                    except asyncio.QueueEmpty:
+                        pass
+                    remaining = deadline - loop.time()
+                    if remaining <= 0:
+                        break
+                    try:
+                        batch.append(
+                            await asyncio.wait_for(self._queue.get(),
+                                                   remaining))
+                    except asyncio.TimeoutError:
+                        break
+            except asyncio.CancelledError:
+                # shutdown landed while this batch was still forming:
+                # its requests are no longer on the queue, so reject
+                # them here -- a future must ALWAYS resolve
+                self._reject_requests(batch)
+                raise
+            except Exception as e:    # batcher bug: don't strand the batch
+                self._reject_requests(batch, cause=e)
+                raise
             task = asyncio.create_task(self._dispatch(batch))
             self._pending.add(task)
             task.add_done_callback(self._pending.discard)
@@ -339,39 +517,57 @@ class DPRTService:
         x.block_until_ready()
         return x
 
-    async def _dispatch(self, batch: list) -> None:
-        b = len(batch)
+    def execute(self, stack: np.ndarray) -> np.ndarray:
+        """Synchronous batched dispatch: pad the validated ``(b, …)``
+        stack up to the nearest warm size, run the primary AOT
+        executable chain, return host results sliced back to ``b``.
+        This is the routed surface -- the in-process batcher and the
+        :class:`~repro.launch.router.ServiceRouter` both call it on
+        worker threads (batch counters are lock-guarded).  The fault
+        seam (:func:`repro.launch.faults.perturb` at site
+        ``"dispatch"``) fires before the kernel, so injected faults
+        surface exactly like kernel failures; the sequential oracle
+        (:meth:`run_sequential`) bypasses it."""
+        b = int(stack.shape[0])
         warm = nearest_warm_batch(b, self.sizes)
-        stack = np.stack([r.img for r in batch])
         if warm > b:   # pad up to the nearest warm executable shape
-            pad = np.zeros((warm - b,) + stack.shape[1:], stack.dtype)
+            pad = np.zeros((warm - b,) + tuple(stack.shape[1:]),
+                           stack.dtype)
             stack = np.concatenate([stack, pad])
         t0 = time.perf_counter()
+        perturb("dispatch", key=self.fault_key)
+        # one device-to-host transfer for the whole batch; per-request
+        # responses are zero-copy views (slicing the device array would
+        # dispatch one XLA gather per request instead)
+        out = np.asarray(self._compute(warm, stack))
+        now = time.perf_counter()
+        with self._metrics_lock:
+            self._compute_s += now - t0
+            self._t_last = now
+            self._batches += 1
+            self._batch_sizes[b] += 1
+            self._padded_slots += warm - b
+            self._occupancy_sum += b / warm
+            self._requests_done += b
+        return out[:b]
+
+    async def _dispatch(self, batch: list) -> None:
         try:
+            stack = np.stack([r.img for r in batch])
             # off-loop thread: collection of the NEXT batch overlaps the
             # kernel execution of this one
-            out = await asyncio.to_thread(self._compute, warm, stack)
+            out = await asyncio.to_thread(self.execute, stack)
         except Exception as e:
             self._failures += len(batch)
             for r in batch:
                 if not r.future.done():
                     r.future.set_exception(e)
             return
-        # one device-to-host transfer for the whole batch; per-request
-        # responses are zero-copy views (slicing the device array would
-        # dispatch one XLA gather per request instead)
-        out = np.asarray(out)
         now = time.perf_counter()
-        self._compute_s += now - t0
-        self._t_last = now
-        self._batches += 1
-        self._batch_sizes[b] += 1
-        self._padded_slots += warm - b
-        self._occupancy_sum += b / warm
         for i, r in enumerate(batch):
             self._latencies.append(now - r.t_enqueue)
-            r.future.set_result(out[i])
-        self._requests_done += len(batch)
+            if not r.future.done():
+                r.future.set_result(out[i])
 
     # -- synchronous driver ------------------------------------------------
     def run_requests(self, imgs: Sequence, arrival_us: float = 0.0,
@@ -449,6 +645,8 @@ class DPRTService:
         self._occupancy_sum = 0.0
         self._queue_depth_max = 0
         self._failures = 0
+        self._fallback_uses = 0
+        self._rejected_shutdown = 0
         self._compute_s = 0.0
         self._t_first = None
         self._t_last = None
@@ -469,6 +667,8 @@ class DPRTService:
             "max_wait_us": self.max_wait_us,
             "requests": self._requests_done,
             "failures": self._failures,
+            "fallback_uses": self._fallback_uses,
+            "rejected_shutdown": self._rejected_shutdown,
             "batches": self._batches,
             "batch_size_counts": dict(sorted(self._batch_sizes.items())),
             "mean_batch": (self._requests_done / self._batches
@@ -518,6 +718,8 @@ class DPRTService:
             f"method={s['method']} warm_sizes={s['warm_sizes']} "
             f"max_wait_us={s['max_wait_us']:.0f}",
             f"[healthz] requests={s['requests']} failures={s['failures']} "
+            f"fallback_uses={s['fallback_uses']} "
+            f"rejected_shutdown={s['rejected_shutdown']} "
             f"batches={s['batches']} "
             + (f"mean_batch={s['mean_batch']:.1f} "
                f"occupancy={s['batch_occupancy']:.2f} "
@@ -537,7 +739,8 @@ class DPRTService:
             p = s["persistent"]
             lines.append(
                 "[healthz] persistent_aot hits={hits} misses={misses} "
-                "errors={errors} dir={directory}".format(**p))
+                "errors={errors} degraded_compiles={degraded_compiles} "
+                "dir={directory}".format(**p))
         return "\n".join(lines)
 
     def __repr__(self) -> str:

@@ -48,8 +48,8 @@ as thin deprecation shims over this package.
 """
 from repro.core.plan import (Backend, RadonPlan, available_backends,
                              backend_capabilities, get_backend, get_plan,
-                             plan_cache_clear, plan_cache_entries,
-                             plan_cache_info,
+                             plan_cache_clear, plan_cache_discard,
+                             plan_cache_entries, plan_cache_info,
                              register_backend, select_backend,
                              set_plan_cache_maxsize)
 
@@ -84,7 +84,7 @@ __all__ = [
     "RetraceError",
     # plan layer
     "Backend", "RadonPlan", "available_backends", "backend_capabilities",
-    "get_backend", "get_plan", "plan_cache_clear", "plan_cache_entries",
-    "plan_cache_info",
+    "get_backend", "get_plan", "plan_cache_clear", "plan_cache_discard",
+    "plan_cache_entries", "plan_cache_info",
     "register_backend", "select_backend", "set_plan_cache_maxsize",
 ]

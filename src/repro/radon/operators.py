@@ -21,6 +21,7 @@ legacy-wrapper calls, or serve workers touch it.
 """
 from __future__ import annotations
 
+import threading
 from typing import Optional, Tuple
 
 import jax
@@ -51,6 +52,12 @@ _AOT_CACHE: dict = {}
 #: the life of the cache entry keeps the id from being recycled by the
 #: allocator, so a dead weights array can never alias a live key.
 _AOT_PINS: dict = {}
+
+#: cache_token -> threading.Lock serializing concurrent
+#: PersistentAOTCache.get_or_compile of the same executable (two
+#: services/routers sharing an aot_dir must not double-compile).
+#: Guarded by _CACHE_LOCK; never dropped -- a few dozen tokens of locks.
+_COMPILE_LOCKS: dict = {}
 
 
 def _drop_plan_executables(plan) -> None:
@@ -135,12 +142,25 @@ class PersistentAOTCache:
     first, then disk (fingerprint-checked), then compile-and-persist.
     Corrupt or stale blobs count as misses (``errors`` tallies them) and
     are overwritten; serialization failures degrade to plain in-memory
-    compilation, never to an outage.
+    compilation, never to an outage.  ``degraded_compiles`` counts the
+    restores that had a blob on disk but still had to cold-compile
+    (torn/rotten/stale blob) -- the number a restarted service surfaces
+    in ``healthz`` to say "I came up, but not warm".
+
+    Concurrent ``get_or_compile`` of the same token (two services, two
+    routers over one ``aot_dir``) is serialized per token through a
+    process-wide lock table, so a cold start under fan-out compiles each
+    executable once instead of stampeding XLA.
     """
 
     def __init__(self, directory: str):
         self.directory = str(directory)
         self.hits = self.misses = self.errors = 0
+        self.degraded_compiles = 0
+
+    def _compile_lock(self, key: str):
+        with _CACHE_LOCK:
+            return _COMPILE_LOCKS.setdefault(key, threading.Lock())
 
     def get_or_compile(self, op):
         """Return the executable for any operator exposing the AOT
@@ -151,34 +171,47 @@ class PersistentAOTCache:
         if exe is not None:
             return exe                      # in-memory: not a disk event
         key = op.cache_token()
-        data = None
-        try:
-            data, meta = load_blob(self.directory, key)
-        except ValueError:                  # torn/corrupt blob: overwrite
-            self.errors += 1
-        if data is not None and meta.get("fingerprint") == aot_fingerprint():
-            try:
-                exe = op.import_executable(data)
-                self.hits += 1
+        with self._compile_lock(key):
+            with _CACHE_LOCK:               # racer finished while we waited
+                exe = _AOT_CACHE.get(op._aot_key())
+            if exe is not None:
                 return exe
-            except Exception:               # undeserializable: recompile
+            data = None
+            had_blob = False
+            try:
+                data, meta = load_blob(self.directory, key)
+                had_blob = data is not None
+            except ValueError:              # torn/corrupt blob: overwrite
                 self.errors += 1
-        self.misses += 1
-        exe = op.compile()
-        try:
-            save_blob(self.directory, key, op.export_executable(),
-                      meta={"fingerprint": aot_fingerprint()})
-        except Exception:                   # read-only disk etc.: serve
-            self.errors += 1                # from memory, count it
-        return exe
+                had_blob = True
+            if data is not None \
+                    and meta.get("fingerprint") == aot_fingerprint():
+                try:
+                    exe = op.import_executable(data)
+                    self.hits += 1
+                    return exe
+                except Exception:           # undeserializable: recompile
+                    self.errors += 1
+            self.misses += 1
+            if had_blob:                    # blob existed but could not
+                self.degraded_compiles += 1  # restore: degraded cold start
+            exe = op.compile()
+            try:
+                save_blob(self.directory, key, op.export_executable(),
+                          meta={"fingerprint": aot_fingerprint()})
+            except Exception:               # read-only disk etc.: serve
+                self.errors += 1            # from memory, count it
+            return exe
 
     def stats(self) -> dict:
         return {"directory": self.directory, "hits": self.hits,
-                "misses": self.misses, "errors": self.errors}
+                "misses": self.misses, "errors": self.errors,
+                "degraded_compiles": self.degraded_compiles}
 
     def __repr__(self) -> str:
         return (f"PersistentAOTCache({self.directory!r}, hits={self.hits}, "
-                f"misses={self.misses}, errors={self.errors})")
+                f"misses={self.misses}, errors={self.errors}, "
+                f"degraded_compiles={self.degraded_compiles})")
 
 
 class RadonOperator:

@@ -1,0 +1,555 @@
+"""Fault-tolerant multi-geometry router: admission, deadlines,
+retry/degrade, eviction, fault injection, and the jsonl front-end.
+
+The contract under test (the chaos acceptance criteria): the router
+never deadlocks or drops a future; every response is bit-exact vs the
+sequential per-operator oracle or a typed rejection; and healthz
+accounts for every degradation.
+"""
+import asyncio
+import io
+import json
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import radon
+from repro.checkpoint.store import list_blobs
+from repro.kernels.tuning import (ROUTER_TRIM_N, router_warm_sizes,
+                                  warm_batch_sizes)
+from repro.launch import faults
+from repro.launch.errors import (DeadlineExceeded, QueueFull, ServiceError,
+                                 ServiceShutdown)
+from repro.launch.router import ServiceRouter, serve_jsonl
+from repro.launch.service import DPRTService
+
+N1, N2 = 13, 17
+
+
+def _imgs(n, count, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, 100, (n, n)).astype(np.int32)
+            for _ in range(count)]
+
+
+def _oracle(n, img):
+    return np.asarray(radon.DPRT((1, n, n), jnp.int32)(
+        jnp.asarray(np.asarray(img)[None])))[0]
+
+
+# ---------------------------------------------------------------------------
+# routing and exactness
+# ---------------------------------------------------------------------------
+def test_mixed_geometry_routing_bit_exact():
+    a, b = _imgs(N1, 4, 1), _imgs(N2, 4, 2)
+    want = [_oracle(N1, x) for x in a] + [_oracle(N2, x) for x in b]
+    router = ServiceRouter(max_batch=2, max_wait_us=500.0)
+    router.prefill([{"n": N1}, {"n": N2}])
+    reqs = [({"n": N1}, x) for x in a] + [({"n": N2}, x) for x in b]
+    outs = router.run_requests(reqs)
+    for out, ref in zip(outs, want):
+        np.testing.assert_array_equal(np.asarray(out), ref)
+    assert router.verdict() == "OK"
+    assert router.pending() == 0
+    assert router.delivered == len(reqs) == router.admitted
+    assert len(router.stats()["routes"]) == 2
+
+
+def test_specs_normalize_to_shared_route():
+    router = ServiceRouter(max_batch=2)
+    k1 = ServiceRouter.route_key({"n": N1})
+    k2 = ServiceRouter.route_key({"shape": (N1, N1), "dtype": "int32",
+                                  "datapath": "forward"})
+    assert k1 == k2 == ((N1, N1), "int32", "forward")
+    assert ServiceRouter.route_key({"n": N1, "datapath": "roundtrip"}) != k1
+    with pytest.raises(ValueError):
+        ServiceRouter._normalize({"dtype": "int32"})   # no geometry
+
+
+def test_router_warm_sizes_trim():
+    assert router_warm_sizes(N1, 16) == warm_batch_sizes(16)
+    assert router_warm_sizes(ROUTER_TRIM_N, 16) == (1, 16)
+    assert router_warm_sizes(ROUTER_TRIM_N + 2, 8) == (1, 8)
+    assert router_warm_sizes(ROUTER_TRIM_N, 1) == (1,)
+
+
+# ---------------------------------------------------------------------------
+# bounded admission: typed rejections
+# ---------------------------------------------------------------------------
+def test_queue_cap_rejects_typed():
+    imgs = _imgs(N1, 12, 3)
+    router = ServiceRouter(max_batch=2, queue_cap=4, max_wait_us=200.0)
+    router.prefill([{"n": N1}])
+    # burst admission: every submit lands before the batcher runs, so
+    # the 5th..12th hit the cap deterministically
+    outs = router.run_requests([({"n": N1}, x) for x in imgs])
+    full = [o for o in outs if isinstance(o, QueueFull)]
+    served = [o for o in outs if not isinstance(o, Exception)]
+    assert len(full) == len(imgs) - 4 and len(served) == 4
+    assert router.rejected_admission["queue_full"] == len(full)
+    assert router.verdict() == "WARN"      # rejections are a degradation
+    for i, o in enumerate(outs):
+        if not isinstance(o, Exception):
+            np.testing.assert_array_equal(np.asarray(o),
+                                          _oracle(N1, imgs[i]))
+
+
+def test_global_inflight_budget():
+    imgs = _imgs(N1, 6, 4)
+    router = ServiceRouter(max_batch=2, max_inflight=3, queue_cap=64)
+    router.prefill([{"n": N1}])
+    outs = router.run_requests([({"n": N1}, x) for x in imgs])
+    assert sum(isinstance(o, QueueFull) for o in outs) == 3
+    assert router.admitted == 3
+
+
+def test_deadline_rejections_typed():
+    imgs = _imgs(N1, 3, 5)
+    router = ServiceRouter(max_batch=2, max_wait_us=200.0)
+    router.prefill([{"n": N1}])
+    outs = router.run_requests([
+        ({"n": N1}, imgs[0], {}),
+        ({"n": N1}, imgs[1], {"deadline_s": -1.0}),  # dead at admission
+        ({"n": N1}, imgs[2], {"deadline_s": 1e-9}),  # expires in queue
+    ])
+    np.testing.assert_array_equal(np.asarray(outs[0]),
+                                  _oracle(N1, imgs[0]))
+    assert isinstance(outs[1], DeadlineExceeded)
+    assert isinstance(outs[2], DeadlineExceeded)
+    s = router.stats()
+    assert s["rejected"]["deadline_exceeded"] == 2
+    assert router.verdict() == "WARN"
+
+
+def test_deadline_flushes_batch_early():
+    # admission window is huge (30 s); the deadline must flush the
+    # group long before it.  On a loaded host the loop wakeup can slip
+    # past the flush margin, in which case the router's contract is a
+    # typed rejection at dispatch -- either way the deadline, not
+    # max_wait_us, bounded the wait.
+    img = _imgs(N1, 1, 6)[0]
+    router = ServiceRouter(max_batch=16, max_wait_us=30_000_000.0)
+    router.prefill([{"n": N1}])
+    import time as _t
+    t0 = _t.perf_counter()
+    outs = router.run_requests([({"n": N1}, img, {"deadline_s": 0.25})])
+    wall = _t.perf_counter() - t0
+    assert wall < 10.0, f"deadline did not flush the batch early ({wall=})"
+    if isinstance(outs[0], Exception):
+        assert isinstance(outs[0], DeadlineExceeded)
+        assert router.rejected_deadline == 1
+    else:
+        np.testing.assert_array_equal(np.asarray(outs[0]),
+                                      _oracle(N1, img))
+
+
+def test_priority_orders_the_queue():
+    imgs = _imgs(N1, 4, 7)
+    router = ServiceRouter(max_batch=2)
+    router.prefill([{"n": N1}])
+
+    async def run():
+        await router.start()
+        route = router._ensure_route({"n": N1})
+        futs = [router.submit_nowait({"n": N1}, img, priority=p)
+                for img, p in zip(imgs, (0, 5, 1, 5))]
+        # peek: dequeue order is priority-major, FIFO within a priority
+        items = []
+        while not route.queue.empty():
+            items.append(route.queue.get_nowait())
+        assert [it[2].priority for it in items] == [5, 5, 1, 0]
+        for it in items:          # put back and let them serve
+            route.queue.put_nowait(it)
+        outs = await asyncio.gather(*futs)
+        await router.shutdown()
+        return outs
+
+    outs = asyncio.run(run())
+    for img, out in zip(imgs, outs):
+        np.testing.assert_array_equal(np.asarray(out), _oracle(N1, img))
+
+
+# ---------------------------------------------------------------------------
+# retry / degrade
+# ---------------------------------------------------------------------------
+def test_injected_fault_retries_then_succeeds():
+    imgs = _imgs(N1, 2, 8)
+    router = ServiceRouter(max_batch=2, max_retries=2,
+                           retry_backoff_s=1e-3)
+    router.prefill([{"n": N1}])
+    with faults.FaultInjector(seed=0, error_count=1,
+                              sites=("dispatch",)) as inj:
+        outs = router.run_requests([({"n": N1}, x) for x in imgs])
+    for img, out in zip(imgs, outs):
+        np.testing.assert_array_equal(np.asarray(out), _oracle(N1, img))
+    assert inj.injected_errors == 1
+    assert router.retries == 1 and router.fallbacks == 0
+    assert router.verdict() == "WARN"
+
+
+def test_exhausted_retries_degrade_to_fallback_bit_exact():
+    imgs = _imgs(N1, 2, 9)
+    router = ServiceRouter(max_batch=2, max_retries=1,
+                           retry_backoff_s=1e-3)
+    router.prefill([{"n": N1}])
+    # every primary attempt of the single batch fails: 1 + retries
+    with faults.FaultInjector(seed=0, error_count=2, sites=("dispatch",)):
+        outs = router.run_requests([({"n": N1}, x) for x in imgs])
+    for img, out in zip(imgs, outs):
+        np.testing.assert_array_equal(np.asarray(out), _oracle(N1, img))
+    assert router.fallbacks == 1 and router.retries == 1
+    assert router.verdict() == "WARN"
+    assert router.stats()["fallback_uses"] == 1
+
+
+def test_fallback_failure_is_raw_and_verdict_fail():
+    img = _imgs(N1, 1, 10)[0]
+    router = ServiceRouter(max_batch=1, max_retries=0,
+                           retry_backoff_s=1e-3)
+    router.prefill([{"n": N1}])
+    with faults.FaultInjector(seed=0, error_count=10,
+                              sites=("dispatch", "fallback")):
+        outs = router.run_requests([({"n": N1}, img)])
+    assert isinstance(outs[0], faults.InjectedFault)
+    assert not isinstance(outs[0], ServiceError)
+    assert router.failed == 1 and router.pending() == 0
+    assert router.verdict() == "FAIL"
+
+
+def test_fault_injector_deterministic_and_scoped():
+    with faults.FaultInjector(seed=3, error_count=2, sites=("dispatch",),
+                              match="17x17") as inj:
+        faults.perturb("dispatch", key="13x13/int32/forward")  # no match
+        faults.perturb("fallback", key="17x17/int32/forward")  # wrong site
+        with pytest.raises(faults.InjectedFault):
+            faults.perturb("dispatch", key="17x17/int32/forward")
+        with pytest.raises(faults.InjectedFault):
+            faults.perturb("dispatch", key="17x17/int32/forward")
+        faults.perturb("dispatch", key="17x17/int32/forward")  # budget spent
+    assert inj.injected_errors == 2
+    faults.perturb("dispatch", key="17x17/int32/forward")  # exited: no-op
+    assert faults.active_injector() is None
+
+
+def test_service_warm_sizes_override():
+    svc = DPRTService((N1, N1), jnp.int32, max_batch=4,
+                      warm_sizes=(4, 2, 2))
+    assert svc.sizes == (2, 4)          # sorted, deduped
+    svc.warmup()
+    img = _imgs(N1, 1, 24)[0]
+    out = svc.execute(img[None])        # b=1 pads up to warm size 2
+    np.testing.assert_array_equal(out[0], _oracle(N1, img))
+    assert svc.stats()["padded_slots"] == 1
+
+
+def test_conv_fallback_matches_fused_pipeline():
+    kernel = np.ones((3, 3), np.int32)
+    svc = DPRTService((N1, N1), jnp.int32, max_batch=2, datapath="conv",
+                      conv_kernel=jnp.asarray(kernel), fallback=True)
+    svc.warmup()
+    imgs = np.stack(_imgs(N1, 2, 11))
+    primary = svc.execute(imgs.copy())
+    degraded = svc.execute_fallback(imgs.copy())
+    np.testing.assert_array_equal(primary, degraded)
+    assert svc.stats()["fallback_uses"] == 1
+
+
+# ---------------------------------------------------------------------------
+# bounded residency: LRU eviction in lockstep with the plan cache
+# ---------------------------------------------------------------------------
+def test_lru_eviction_discards_only_unshared_plans():
+    router = ServiceRouter(max_batch=2, max_services=2)
+    router.prefill([{"n": N1}, {"n": N1, "datapath": "roundtrip"}])
+    aot_before = radon.aot_cache_info()["currsize"]
+    evict_before = radon.plan_cache_info().evictions
+    # a third route forces the LRU ({"n": N1} forward) out
+    router.prefill([{"n": N2}])
+    assert router.evictions == 1
+    assert len(router.stats()["routes"]) == 2
+    labels = set(router.stats()["routes"])
+    assert f"{N1}x{N1}/int32/forward" not in labels
+    # the forward route's plans are SHARED with the surviving roundtrip
+    # route (same geometry) -- nothing may be discarded for them, so
+    # the plan cache saw no eviction and the roundtrip executables
+    # survived
+    assert radon.plan_cache_info().evictions == evict_before
+    assert radon.aot_cache_info()["currsize"] == aot_before
+    # retiring the remaining routes too (max_services drops to 1, so
+    # BOTH live routes go) drops the now-unshared plans and their
+    # executables in lockstep
+    router.max_services = 1
+    router.prefill([{"n": N2, "datapath": "roundtrip"}])
+    assert router.evictions == 3
+    assert radon.plan_cache_info().evictions > evict_before
+    assert radon.aot_cache_info()["currsize"] < aot_before
+    # the surviving route still serves, bit-exact
+    img = _imgs(N2, 1, 12)[0]
+    outs = router.run_requests([({"n": N2, "datapath": "roundtrip"}, img)])
+    np.testing.assert_array_equal(np.asarray(outs[0]), img)
+
+
+def test_eviction_refuses_when_every_route_busy():
+    router = ServiceRouter(max_batch=2, max_services=1)
+    router.prefill([{"n": N1}])
+
+    async def run():
+        await router.start()
+        # hold the single route busy with a queued request, then ask
+        # for a second route: bounded residency must refuse, typed
+        fut = router.submit_nowait({"n": N1}, _imgs(N1, 1, 13)[0])
+        with pytest.raises(QueueFull):
+            router._ensure_route({"n": N2})
+        out = await fut
+        await router.shutdown()
+        return out
+
+    out = asyncio.run(run())
+    np.testing.assert_array_equal(np.asarray(out),
+                                  _oracle(N1, _imgs(N1, 1, 13)[0]))
+
+
+# ---------------------------------------------------------------------------
+# warmup concurrency and shared blob stores
+# ---------------------------------------------------------------------------
+def test_concurrent_submit_during_warmup():
+    # no prefill: the route warms on the loop while traffic queues
+    imgs = _imgs(N1, 6, 14)
+    router = ServiceRouter(max_batch=2, max_wait_us=500.0)
+    outs = router.run_requests([({"n": N1}, x) for x in imgs])
+    for img, out in zip(imgs, outs):
+        np.testing.assert_array_equal(np.asarray(out), _oracle(N1, img))
+    assert router.verdict() == "OK"
+
+
+def test_two_routers_share_aot_dir_without_storms(tmp_path):
+    radon.aot_cache_clear()
+    routers = [ServiceRouter(max_batch=2, aot_dir=str(tmp_path))
+               for _ in range(2)]
+    errs = []
+
+    def boot(r):
+        try:
+            r.prefill([{"n": N1}, {"n": N2}])
+        except Exception as e:      # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=boot, args=(r,)) for r in routers]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    stats = [r.stats() for r in routers]
+    persistent = []
+    for r in routers:
+        for route in r._routes.values():
+            persistent.append(route.service.persistent)
+    total_misses = sum(p.misses for p in persistent)
+    total_errors = sum(p.errors for p in persistent)
+    # 2 routes x len(warm sizes) executables compiled ONCE across both
+    # routers (the per-token compile locks coalesce the storm); every
+    # blob intact on disk
+    executables = sum(len(route.service._exes)
+                      for route in routers[0]._routes.values())
+    per_route_exes = {route.key: sum(
+        len(stages) for stages in route.service._ops.values())
+        for route in routers[0]._routes.values()}
+    want_unique = sum(per_route_exes.values())
+    assert total_misses == want_unique
+    assert total_errors == 0
+    assert len(list_blobs(str(tmp_path))) == want_unique
+    # both routers serve, exact
+    img = _imgs(N1, 1, 15)[0]
+    for r in routers:
+        out = r.run_requests([({"n": N1}, img)])[0]
+        np.testing.assert_array_equal(np.asarray(out), _oracle(N1, img))
+
+
+# ---------------------------------------------------------------------------
+# shutdown semantics: a future ALWAYS resolves
+# ---------------------------------------------------------------------------
+def test_router_shutdown_rejects_queued_typed():
+    router = ServiceRouter(max_batch=2)   # cold route: requests queue
+    imgs = _imgs(N1, 3, 16)
+
+    async def run():
+        await router.start()
+        futs = [router.submit_nowait({"n": N1}, x) for x in imgs]
+        await router.shutdown()
+        return await asyncio.gather(*futs, return_exceptions=True)
+
+    outs = asyncio.wait_for(run(), timeout=120)
+    outs = asyncio.run(outs)
+    assert all(isinstance(o, ServiceShutdown) for o in outs)
+    assert router.rejected_shutdown == len(imgs)
+    assert router.pending() == 0
+    assert router.verdict() == "WARN"
+
+
+def test_service_shutdown_rejects_queued_regression():
+    # the PR-8 hang: shutdown(drain=False) used to cancel the batcher
+    # and leave queued futures pending forever
+    svc = DPRTService((N1, N1), jnp.int32, max_batch=2,
+                      max_wait_us=5_000_000.0)   # batcher waits ~forever
+    svc.warmup()
+    imgs = _imgs(N1, 3, 17)
+
+    async def run():
+        await svc.start()
+        futs = [svc.submit_nowait(x) for x in imgs]
+        # the batcher holds the first request in its forming batch; the
+        # rest sit queued.  A no-drain shutdown must reject the queued
+        # ones typed -- and resolve EVERY future within the timeout.
+        await asyncio.sleep(0.05)
+        await svc.shutdown(drain=False)
+        return await asyncio.wait_for(
+            asyncio.gather(*futs, return_exceptions=True), timeout=60)
+
+    outs = asyncio.run(run())
+    rejected = [o for o in outs if isinstance(o, ServiceShutdown)]
+    assert rejected, "no queued request was typed-rejected"
+    for o in outs:        # every future resolved: result or typed error
+        assert isinstance(o, (np.ndarray, ServiceShutdown))
+    assert svc.stats()["rejected_shutdown"] == len(rejected)
+
+
+def test_service_batcher_death_fails_fast_not_forever():
+    svc = DPRTService((N1, N1), jnp.int32, max_batch=2)
+    svc.warmup()
+
+    async def doomed(self):
+        raise RuntimeError("batcher bug")
+
+    svc._run = doomed.__get__(svc)
+
+    async def run():
+        await svc.start()
+        f1 = svc.submit_nowait(_imgs(N1, 1, 18)[0])
+        f2 = svc.submit_nowait(_imgs(N1, 1, 19)[0])
+        outs = await asyncio.wait_for(
+            asyncio.gather(f1, f2, return_exceptions=True), timeout=60)
+        # a dead batcher also refuses NEW work, typed
+        with pytest.raises(ServiceShutdown):
+            svc.submit_nowait(_imgs(N1, 1, 20)[0])
+        return outs
+
+    outs = asyncio.run(run())
+    # the done-callback flushed the queue: every future rejected typed,
+    # carrying the batcher's own error as the cause
+    assert all(isinstance(o, ServiceShutdown) for o in outs)
+    assert all(isinstance(o.__cause__, RuntimeError) for o in outs)
+    assert svc.stats()["rejected_shutdown"] == 2
+
+
+def test_service_batcher_exception_rejects_forming_batch():
+    # the in-hand batch (already off the queue) must be rejected typed
+    # when the product batcher loop itself raises
+    svc = DPRTService((N1, N1), jnp.int32, max_batch=4,
+                      max_wait_us=5_000_000.0)
+    svc.warmup()
+
+    async def run():
+        await svc.start()
+        f1 = svc.submit_nowait(_imgs(N1, 1, 22)[0])
+        await asyncio.sleep(0.05)     # batcher takes f1, awaits more
+        # poison the collect loop, one shot: the next straggler append
+        # explodes (later drains see the real queue again)
+        real, armed = svc._queue.get_nowait, [True]
+
+        def poisoned():
+            if armed:
+                armed.clear()
+                raise RuntimeError("collect bug")
+            return real()
+
+        svc._queue.get_nowait = poisoned
+        f2 = svc.submit_nowait(_imgs(N1, 1, 23)[0])
+        return await asyncio.wait_for(
+            asyncio.gather(f1, f2, return_exceptions=True), timeout=60)
+
+    outs = asyncio.run(run())
+    assert all(isinstance(o, ServiceShutdown) for o in outs)
+
+
+# ---------------------------------------------------------------------------
+# the jsonl transport front-end
+# ---------------------------------------------------------------------------
+def test_serve_jsonl_roundtrip_and_typed_errors():
+    img = _imgs(N1, 1, 21)[0]
+    want = _oracle(N1, img)
+    lines = [
+        {"op": "submit", "id": "a", "n": N1, "data": img.tolist()},
+        {"op": "submit", "id": "b", "n": N1,
+         "data": [[1, 2], [3, 4]]},                   # bad shape
+        {"op": "submit", "id": "c", "n": N1, "data": img.tolist(),
+         "deadline_ms": -5.0},                        # typed rejection
+        {"op": "healthz", "id": "h"},
+        {"op": "nope", "id": "x"},
+        {"op": "shutdown", "id": "z"},
+    ]
+    infile = io.StringIO("\n".join(json.dumps(m) for m in lines)
+                         + "\nnot json\n")
+    outfile = io.StringIO()
+    router = ServiceRouter(max_batch=2, max_wait_us=200.0)
+    router.prefill([{"n": N1}])
+    serve_jsonl(router, infile, outfile)
+    replies = {m.get("id"): m for m in
+               (json.loads(s) for s in
+                outfile.getvalue().strip().splitlines())}
+    np.testing.assert_array_equal(np.asarray(replies["a"]["data"],
+                                             np.int64), want)
+    assert replies["a"]["ok"] is True
+    assert replies["b"]["ok"] is False
+    assert replies["b"]["error"] == "bad_request"
+    assert replies["c"]["error"] == DeadlineExceeded.code
+    assert replies["h"]["verdict"] in ("OK", "WARN")
+    assert "[healthz]" in replies["h"]["healthz"]
+    assert replies["x"]["error"] == "bad_request"
+    assert replies["z"]["shutdown"] is True
+    assert router.pending() == 0
+
+
+# ---------------------------------------------------------------------------
+# chaos invariants (the in-process version of serve --chaos)
+# ---------------------------------------------------------------------------
+def test_chaos_burst_never_wrong_never_hangs(tmp_path):
+    radon.aot_cache_clear()
+    seeder = ServiceRouter(max_batch=2, aot_dir=str(tmp_path))
+    seeder.prefill([{"n": N1}, {"n": N2}])
+    radon.aot_cache_clear()
+    assert faults.corrupt_blobs(str(tmp_path), seed=0) > 0
+
+    router = ServiceRouter(max_batch=2, max_wait_us=300.0, queue_cap=6,
+                           max_retries=1, retry_backoff_s=1e-3,
+                           aot_dir=str(tmp_path))
+    router.prefill([{"n": N1}, {"n": N2}])
+    assert router.degraded_compiles() > 0
+
+    rng = np.random.default_rng(1)
+    traffic, oracles = [], []
+    for i in range(20):
+        n = (N1, N2)[i % 2]
+        img = rng.integers(0, 50, (n, n)).astype(np.int32)
+        kw = {"deadline_s": 1e-9} if i % 9 == 4 else {}
+        traffic.append(({"n": n}, img, kw))
+        oracles.append(None if kw else _oracle(n, img))
+    with faults.FaultInjector(seed=2, error_count=2, error_rate=0.1,
+                              delay_s=0.001, delay_rate=0.25,
+                              sites=("dispatch",)):
+        outs = router.run_requests(traffic)
+
+    for out, want in zip(outs, oracles):
+        if isinstance(out, BaseException):
+            assert isinstance(out, ServiceError), f"untyped: {out!r}"
+        elif want is not None:
+            np.testing.assert_array_equal(np.asarray(out), want)
+    assert router.pending() == 0
+    assert router.failed == 0
+    s = router.stats()
+    accounted = (s["delivered"] + s["failed"] + s["pending"]
+                 + router.rejected_deadline + router.rejected_shutdown)
+    assert s["admitted"] == accounted
+    assert router.verdict() == "WARN"
+    assert "degraded" in router.healthz()

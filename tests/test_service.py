@@ -272,15 +272,19 @@ def test_persistent_cache_corrupt_and_stale_blobs(tmp_path):
     first = radon.PersistentAOTCache(str(tmp_path))
     first.get_or_compile(op)
     assert first.stats() == {"directory": str(tmp_path), "hits": 0,
-                             "misses": 1, "errors": 0}
+                             "misses": 1, "errors": 0,
+                             "degraded_compiles": 0}
 
     # torn blob on disk: counted as an error, recompiled, re-persisted
+    # -- and surfaced as a DEGRADED compile (a blob existed, the
+    # restart still had to pay XLA)
     blob = next(tmp_path.glob("*.blob"))
     blob.write_bytes(b"\xff" * 32)
     radon.aot_cache_clear()
     torn = radon.PersistentAOTCache(str(tmp_path))
     torn.get_or_compile(op)
     assert torn.errors == 1 and torn.misses == 1 and torn.hits == 0
+    assert torn.degraded_compiles == 1
 
     # the recompile healed the blob: a clean restart now hits
     radon.aot_cache_clear()
@@ -296,6 +300,7 @@ def test_persistent_cache_corrupt_and_stale_blobs(tmp_path):
     stale = radon.PersistentAOTCache(str(tmp_path))
     stale.get_or_compile(op)
     assert stale.misses == 1 and stale.errors == 0 and stale.hits == 0
+    assert stale.degraded_compiles == 1   # blob present, restore cold
 
 
 def test_conv2d_aot_export_import_roundtrip():
