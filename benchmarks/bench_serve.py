@@ -17,6 +17,12 @@ Two claims gate here (``serve/*`` rows in ``BENCH_dprt.json``):
   the exact single-geometry traffic of ``serve/coalesced`` through the
   router, so their ratio isolates what admission, deadline tracking and
   the retry seam cost on the happy path.
+* **Process isolation.**  ``serve/pool_workers2`` serves the N=31
+  traffic through a :class:`repro.launch.supervisor.WorkerPool` of two
+  ``serve --jsonl`` subprocesses -- pricing the pipe transport, JSON
+  payload codec and supervision protocol against the in-process
+  ``serve/router_overhead`` row (on a single-core host the pool cannot
+  win; the row exists so regressions in the wire path are caught).
 * **Warm restarts.**  ``serve/aot_cold_compile`` times XLA compilation
   of a warm-size executable; ``serve/aot_warm_restore`` times
   restoring the same executable from its serialized blob
@@ -37,6 +43,7 @@ import subprocess
 import sys
 import tempfile
 import textwrap
+import time
 
 import jax.numpy as jnp
 import numpy as np
@@ -45,6 +52,7 @@ from repro import radon
 from repro.checkpoint.store import save_blob
 from repro.launch.router import ServiceRouter
 from repro.launch.service import DPRTService
+from repro.launch.supervisor import WorkerPool
 
 from .common import emit
 
@@ -117,12 +125,51 @@ def main() -> None:
          variant="router_overhead", method="auto", n=N, batch=MAX_BATCH,
          requests=REQUESTS, guard_tol=2.5)
 
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = {**os.environ, "PYTHONPATH": os.path.join(repo, "src")}
+
+    # the supervised multi-process pool: the same N=31 traffic served
+    # by two router subprocesses over pipes.  On a single-core host the
+    # pool cannot beat the in-process router (same silicon plus
+    # serialize/fork overhead) -- the row prices process isolation and
+    # the supervision protocol, it does not claim a speedup here.
+    with tempfile.TemporaryDirectory() as d:
+        pool = WorkerPool(2, aot_dir=d, manifest=[{"n": N}],
+                          max_batch=MAX_BATCH,
+                          pending_cap=4 * REQUESTS, env=env)
+        try:
+            pool.start()
+            if not pool.wait_ready(600.0):
+                raise TimeoutError("pool workers never became ready")
+            futs = [pool.submit({"n": N}, img) for img in imgs]
+            for fut, want in zip(futs, ref):          # bit-exact first
+                np.testing.assert_array_equal(
+                    np.asarray(fut.result(timeout=300)),
+                    np.asarray(want))
+            pool_walls = []
+            for _ in range(3):
+                t0 = time.perf_counter()
+                futs = [pool.submit({"n": N}, img) for img in imgs]
+                for fut in futs:
+                    fut.result(timeout=300)
+                pool_walls.append(time.perf_counter() - t0)
+            ppool = min(pool_walls) / REQUESTS
+            assert pool.verdict() == "OK", pool.healthz()
+            emit(f"serve/pool_workers2/N{N}/b{MAX_BATCH}", 1e6 * ppool,
+                 f"x_vs_router={ppool / rover:.2f} workers=2 "
+                 f"imgs_per_s={1 / ppool:.0f}", kind="serve",
+                 variant="pool_workers2", method="auto", n=N,
+                 batch=MAX_BATCH, requests=REQUESTS, guard_tol=3.0)
+        except Exception as e:
+            print(f"# serve/pool_workers2: skipped: {e}",
+                  file=sys.stderr)
+        finally:
+            pool.drain()
+
     # persistent AOT: cold start vs warm restart, each in a FRESH
     # process -- in-process re-compiles hit jax's lowering caches and
     # would flatter the "cold" number.  The warm child also asserts the
     # compile counters: a restore must take ZERO traces.
-    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    env = {**os.environ, "PYTHONPATH": os.path.join(repo, "src")}
     with tempfile.TemporaryDirectory() as d:
         op = radon.DPRT((MAX_BATCH, N, N), jnp.int32)
         save_blob(d, op.cache_token(), op.export_executable(),

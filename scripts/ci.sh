@@ -15,19 +15,22 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="${PYTHONPATH:+$PYTHONPATH:}$PWD/src"
 
-echo "== [1/5] quick-tier tests =="
+echo "== [1/6] quick-tier tests =="
 python -m pytest -x -q -m "not slow" tests
 
-echo "== [2/5] repro.radon.selfcheck =="
+echo "== [2/6] repro.radon.selfcheck =="
 python -m repro.radon.selfcheck
 
-echo "== [3/5] router chaos smoke (fault injection, degrade-not-drop) =="
+echo "== [3/6] router chaos smoke (fault injection, degrade-not-drop) =="
 python -m repro.launch.serve --mode service --chaos --smoke
 
-echo "== [4/5] serve perf guard (vs committed BENCH_dprt.json) =="
+echo "== [4/6] pool chaos smoke (SIGKILL a worker mid-burst, stale locks) =="
+python -m repro.launch.serve --mode pool --chaos --smoke --workers 2
+
+echo "== [5/6] serve perf guard (vs committed BENCH_dprt.json) =="
 python -m benchmarks.run --check --only serve
 
-echo "== [5/5] recon perf guard (vs committed BENCH_dprt.json) =="
+echo "== [6/6] recon perf guard (vs committed BENCH_dprt.json) =="
 python -m benchmarks.run --check --only recon
 
 echo "== ci.sh: all gates passed =="

@@ -8,6 +8,7 @@ never corrupts the latest checkpoint.  Restore places leaves with the
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import re
@@ -21,7 +22,8 @@ import numpy as np
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
            "AsyncCheckpointer", "gc_checkpoints",
-           "save_blob", "load_blob", "list_blobs", "delete_blob"]
+           "save_blob", "load_blob", "list_blobs", "delete_blob",
+           "blob_lock", "LockTimeout"]
 
 _SEP = "::"
 
@@ -224,6 +226,119 @@ def delete_blob(directory: str, key: str) -> bool:
         return True
     except FileNotFoundError:
         return False
+
+
+# ---------------------------------------------------------------------------
+# cross-process per-key advisory locks
+#
+# N worker processes cold-starting against one blob directory must not
+# each pay (and each publish) the same expensive compile.  A lock here
+# is an O_CREAT|O_EXCL sidecar file -- the only primitive that is
+# atomic on every local filesystem -- holding JSON {pid, time} so a
+# waiter can tell "held by live work" from "left behind by a SIGKILLed
+# worker" and steal the latter.
+# ---------------------------------------------------------------------------
+_LOCK_SUFFIX = ".lock"
+
+
+class LockTimeout(TimeoutError):
+    """A :func:`blob_lock` waiter gave up: the lock stayed held (by a
+    live process) past ``timeout_s``."""
+
+
+def _lock_path(directory: str, key: str) -> str:
+    return _blob_path(directory, key) + _LOCK_SUFFIX
+
+
+def _pid_alive(pid: int) -> bool:
+    try:
+        os.kill(pid, 0)
+    except ProcessLookupError:
+        return False
+    except PermissionError:        # exists, owned by someone else
+        return True
+    except OSError:
+        return True                # unknowable: assume alive (don't steal)
+    return True
+
+
+def _read_lock(path: str):
+    """Raw bytes of the lock file, or None if it vanished."""
+    try:
+        with open(path, "rb") as f:
+            return f.read()
+    except OSError:
+        return None
+
+
+def _lock_is_stale(raw: bytes, path: str, stale_s: float) -> bool:
+    """True when the lock content ``raw`` (read from ``path``) belongs
+    to a dead process or has outlived ``stale_s``.  Unreadable/partial
+    content only counts as stale once the file's mtime is old -- a
+    peer may be mid-write."""
+    try:
+        info = json.loads(raw.decode())
+        pid = int(info["pid"])
+        born = float(info.get("time", 0.0))
+    except (ValueError, KeyError, TypeError, UnicodeDecodeError):
+        try:
+            return time.time() - os.path.getmtime(path) > max(stale_s, 1.0)
+        except OSError:
+            return False           # vanished: next acquire attempt decides
+    if not _pid_alive(pid):
+        return True
+    return time.time() - born > stale_s
+
+
+@contextlib.contextmanager
+def blob_lock(directory: str, key: str, *, stale_s: float = 120.0,
+              poll_s: float = 0.05, timeout_s: float = 600.0):
+    """Hold the cross-process advisory lock for ``key``.
+
+    Yields a small stats dict: ``waited_s`` (how long acquisition
+    blocked) and ``steals`` (stale locks reclaimed on the way in) --
+    the AOT cache surfaces both.  Raises :class:`LockTimeout` if a
+    *live* holder keeps the lock past ``timeout_s``.
+
+    Stealing re-reads the lock file immediately before unlinking and
+    skips the unlink if its content changed -- the window where waiter
+    A decides "stale" while waiter B already stole and re-acquired is
+    real, and unlinking B's fresh lock would let two processes inside.
+    """
+    os.makedirs(directory, exist_ok=True)
+    path = _lock_path(directory, key)
+    start = time.monotonic()
+    steals = 0
+    while True:
+        try:
+            fd = os.open(path, os.O_CREAT | os.O_EXCL | os.O_WRONLY)
+        except FileExistsError:
+            raw = _read_lock(path)
+            if raw is None:
+                continue                       # vanished: retry acquire
+            if _lock_is_stale(raw, path, stale_s):
+                if _read_lock(path) == raw:    # unchanged since judged
+                    with contextlib.suppress(OSError):
+                        os.unlink(path)
+                    steals += 1
+                continue                       # immediate retry, no sleep
+            if time.monotonic() - start > timeout_s:
+                raise LockTimeout(
+                    f"lock for key {key!r} at {path} held past "
+                    f"{timeout_s}s by a live process")
+            time.sleep(poll_s)
+            continue
+        break
+    try:
+        os.write(fd, json.dumps({"pid": os.getpid(), "key": key,
+                                 "time": time.time()}).encode())
+    finally:
+        os.close(fd)
+    try:
+        yield {"waited_s": time.monotonic() - start, "steals": steals}
+    finally:
+        with contextlib.suppress(OSError):
+            os.unlink(path)
 
 
 class AsyncCheckpointer:

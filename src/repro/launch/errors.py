@@ -8,19 +8,32 @@ every response is either bit-exact output or one of these.
 
 This module sits below both :mod:`repro.launch.service` and
 :mod:`repro.launch.router` (the router imports the service, so the
-shared vocabulary cannot live in either).
+shared vocabulary cannot live in either), and below the multi-process
+:mod:`repro.launch.supervisor` (worker loss is a typed event too).
 """
 from __future__ import annotations
 
+from typing import Optional
+
 __all__ = ["ServiceError", "DeadlineExceeded", "QueueFull",
-           "ServiceShutdown"]
+           "ServiceShutdown", "WorkerLost", "error_for_code"]
 
 
 class ServiceError(RuntimeError):
     """Base of every typed serving rejection; ``code`` is the stable
-    wire identifier."""
+    wire identifier.  ``retry_after_s``, when set, is the backpressure
+    hint: how long the client should wait before retrying (derived from
+    queue depth x the route's execution-time EWMA -- an estimate of when
+    the congestion that caused this rejection will have drained, not a
+    promise of admission)."""
 
     code = "service_error"
+    retry_after_s: Optional[float] = None
+
+    def __init__(self, *args, retry_after_s: Optional[float] = None):
+        super().__init__(*args)
+        if retry_after_s is not None:
+            self.retry_after_s = float(retry_after_s)
 
 
 class DeadlineExceeded(ServiceError):
@@ -31,8 +44,10 @@ class DeadlineExceeded(ServiceError):
 
 
 class QueueFull(ServiceError):
-    """Bounded admission refused the request: the per-key queue cap or
-    the router's global in-flight budget is exhausted."""
+    """Bounded admission refused the request: the per-key queue cap, the
+    router's global in-flight budget, or the worker pool's pending
+    budget is exhausted.  Carries ``retry_after_s`` when the rejecting
+    tier can estimate its own drain time."""
 
     code = "queue_full"
 
@@ -42,3 +57,32 @@ class ServiceShutdown(ServiceError):
     rather than left as a forever-pending future."""
 
     code = "shutdown"
+
+
+class WorkerLost(ServiceError):
+    """A worker *process* died with this request in flight and the
+    one-shot replay could not deliver it (no healthy worker, or the
+    request already used its replay).  The typed, recoverable form of
+    "the machine serving you crashed" -- never a silent drop."""
+
+    code = "worker_lost"
+
+
+#: wire code -> exception class; the supervisor rehydrates typed worker
+#: rejections through this so a pool client sees the same exception
+#: types an in-process router caller would.
+_CODE_MAP = {cls.code: cls for cls in
+             (ServiceError, DeadlineExceeded, QueueFull, ServiceShutdown,
+              WorkerLost)}
+
+
+def error_for_code(code: str, msg: str,
+                   retry_after_s: Optional[float] = None) -> ServiceError:
+    """Rebuild the typed exception a remote worker serialized as
+    ``{"error": code, "msg": …}``; unknown codes come back as the base
+    :class:`ServiceError` (still typed, still not a raw failure)."""
+    cls = _CODE_MAP.get(code, ServiceError)
+    err = cls(msg)
+    if retry_after_s is not None:
+        err.retry_after_s = float(retry_after_s)
+    return err

@@ -30,7 +30,11 @@ from typing import Dict, Optional, Sequence
 import numpy as np
 
 __all__ = ["InjectedFault", "FaultInjector", "perturb", "active_injector",
-           "corrupt_blobs"]
+           "corrupt_blobs", "install_from_env", "FAULTS_ENV_VAR"]
+
+#: the env var subprocess workers read at startup to arm deterministic
+#: chaos; the supervisor sets it, the worker echoes it in healthz.
+FAULTS_ENV_VAR = "REPRO_FAULTS"
 
 
 class InjectedFault(RuntimeError):
@@ -93,11 +97,50 @@ class FaultInjector:
         self.error_rate = float(error_rate)
         self.delay_s = float(delay_s)
         self.delay_rate = float(delay_rate)
+        self.spec: Optional[str] = None   # set when built via from_spec
         self._rng = np.random.default_rng(self.seed)
         self._lock = threading.Lock()
         self.calls = 0
         self.injected_errors = 0
         self.injected_delays = 0
+
+    # -- env-var activation (chaos across a process boundary) -------------
+    @classmethod
+    def from_spec(cls, spec: str) -> "FaultInjector":
+        """Build an injector from a compact ``key=value`` spec string,
+        e.g. ``"sites=dispatch|fallback;error_count=2;seed=7"``.
+
+        The spec is how deterministic chaos crosses a fork/exec
+        boundary: the supervisor can't hand a live object to a
+        subprocess worker, but it can put this string in the
+        environment.  Pairs are ``;``-separated; ``sites`` values are
+        ``|``-separated; unknown keys raise (a typo'd chaos spec that
+        silently arms nothing would invalidate the whole run).
+        """
+        kwargs: Dict[str, object] = {}
+        for pair in spec.split(";"):
+            pair = pair.strip()
+            if not pair:
+                continue
+            if "=" not in pair:
+                raise ValueError(f"bad fault spec fragment {pair!r} "
+                                 f"(want key=value) in {spec!r}")
+            key, val = (s.strip() for s in pair.split("=", 1))
+            if key == "sites":
+                kwargs[key] = tuple(s for s in val.split("|") if s)
+            elif key == "match":
+                kwargs[key] = val
+            elif key in ("seed", "error_count"):
+                kwargs[key] = int(val)
+            elif key in ("error_rate", "delay_s", "delay_rate"):
+                kwargs[key] = float(val)
+            else:
+                raise ValueError(f"unknown fault spec key {key!r} "
+                                 f"in {spec!r}")
+        seed = int(kwargs.pop("seed", 0))
+        inj = cls(seed, **kwargs)      # type: ignore[arg-type]
+        inj.spec = spec
+        return inj
 
     # -- context management ------------------------------------------------
     def __enter__(self) -> "FaultInjector":
@@ -140,7 +183,8 @@ class FaultInjector:
     def stats(self) -> Dict[str, object]:
         with self._lock:
             return {"seed": self.seed, "sites": self.sites,
-                    "match": self.match, "calls": self.calls,
+                    "match": self.match, "spec": self.spec,
+                    "calls": self.calls,
                     "injected_errors": self.injected_errors,
                     "injected_delays": self.injected_delays}
 
@@ -149,6 +193,24 @@ class FaultInjector:
         return (f"FaultInjector(seed={s['seed']}, sites={s['sites']}, "
                 f"errors={s['injected_errors']}, "
                 f"delays={s['injected_delays']})")
+
+
+def install_from_env(env_var: str = FAULTS_ENV_VAR
+                     ) -> Optional[FaultInjector]:
+    """Arm a :class:`FaultInjector` from the environment, if set.
+
+    Called once at worker startup (``serve --jsonl``).  The injector is
+    *entered* (pushed on the active stack) and returned so the worker
+    can echo its spec in healthz; it stays armed for the process
+    lifetime -- chaos workers die, they don't gracefully unwind.
+    Returns ``None`` when the variable is unset or empty.
+    """
+    spec = os.environ.get(env_var, "").strip()
+    if not spec:
+        return None
+    inj = FaultInjector.from_spec(spec)
+    inj.__enter__()
+    return inj
 
 
 def corrupt_blobs(directory: str, *, seed: int = 0) -> int:

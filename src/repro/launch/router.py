@@ -48,6 +48,9 @@ from __future__ import annotations
 import asyncio
 import collections
 import json
+import os
+import signal
+import threading
 import time
 from typing import Dict, Optional, Sequence, Tuple
 
@@ -210,6 +213,29 @@ class ServiceRouter:
             self._open_route(route)
         return route
 
+    # -- backpressure ------------------------------------------------------
+    #: fallback execution-time estimate for a route whose EWMA is cold
+    _RETRY_AFTER_COLD_S = 0.05
+
+    def _retry_after_s(self, route: Optional[_Route] = None) -> float:
+        """The hint a :class:`QueueFull` rejection carries: estimated
+        seconds until the congestion that refused this request drains
+        -- queue depth in batches x the route's smoothed execution
+        time.  With no route (router-wide budget exhausted), the
+        worst live route stands in."""
+        if route is not None:
+            depth = route.inflight
+            if route.queue is not None:
+                depth += route.queue.qsize()
+            per = route.exec_s or self._RETRY_AFTER_COLD_S
+        else:
+            depth = self._inflight
+            per = max((r.exec_s for r in self._routes.values()
+                       if r.exec_s is not None),
+                      default=self._RETRY_AFTER_COLD_S)
+        batches = depth // max(1, self.max_batch) + 1
+        return round(batches * per, 6)
+
     # -- bounded residency -------------------------------------------------
     def _evict_for_capacity(self) -> None:
         while len(self._routes) >= self.max_services:
@@ -219,7 +245,8 @@ class ServiceRouter:
                 self.rejected_admission["queue_full"] += 1
                 raise QueueFull(
                     f"router at max_services={self.max_services} with "
-                    "every route busy")
+                    "every route busy",
+                    retry_after_s=self._retry_after_s())
             self._retire(victim)
 
     def _retire(self, route: _Route) -> None:
@@ -238,7 +265,7 @@ class ServiceRouter:
         self._retired["fallback_uses"] += svc._fallback_uses
         if svc.persistent is not None:
             p = svc.persistent.stats()
-            for k in ("hits", "misses", "errors", "degraded_compiles"):
+            for k in self._PERSISTENT_KEYS:
                 self._retired[f"persistent_{k}"] += p[k]
         live: set = set()
         for other in self._routes.values():
@@ -365,11 +392,13 @@ class ServiceRouter:
         if self._inflight >= self.max_inflight:
             self.rejected_admission["queue_full"] += 1
             raise QueueFull(f"global in-flight budget "
-                            f"{self.max_inflight} exhausted")
+                            f"{self.max_inflight} exhausted",
+                            retry_after_s=self._retry_after_s())
         if route.queue.qsize() >= self.queue_cap:
             self.rejected_admission["queue_full"] += 1
             raise QueueFull(f"queue for {route.label} at cap "
-                            f"{self.queue_cap}")
+                            f"{self.queue_cap}",
+                            retry_after_s=self._retry_after_s(route))
         loop = asyncio.get_running_loop()
         now = loop.time()
         deadline = None
@@ -592,6 +621,25 @@ class ServiceRouter:
                 total += route.service.persistent.degraded_compiles
         return total
 
+    _PERSISTENT_KEYS = ("hits", "misses", "errors", "degraded_compiles",
+                        "lock_steals", "lock_degraded")
+
+    def persistent_stats(self) -> Dict[str, int]:
+        """Aggregated persistent-AOT-cache counters across every route
+        (live and retired) -- what a pool worker reports in its healthz
+        reply, and what the cross-process coalescing assertion sums:
+        total ``misses`` over all workers must equal the number of
+        distinct blobs on disk."""
+        out = {k: int(self._retired[f"persistent_{k}"])
+               for k in self._PERSISTENT_KEYS}
+        for route in self._routes.values():
+            p = route.service.persistent
+            if p is not None:
+                s = p.stats()
+                for k in self._PERSISTENT_KEYS:
+                    out[k] += int(s[k])
+        return out
+
     def stats(self) -> Dict[str, object]:
         rejected = {
             "deadline_exceeded": self.rejected_deadline
@@ -691,89 +739,174 @@ class ServiceRouter:
 # ---------------------------------------------------------------------------
 # stdin-jsonl transport front-end
 # ---------------------------------------------------------------------------
-def serve_jsonl(router: ServiceRouter, infile, outfile) -> None:
+def serve_jsonl(router: ServiceRouter, infile, outfile, *,
+                framed: bool = False, sigterm_drain: bool = False) -> None:
     """Newline-delimited JSON worker over ``router.submit()``.
 
     Requests: ``{"op": "submit", "id": …, "n"/"shape": …, ["dtype": …,]
     ["datapath": …,] "data": nested-list, ["deadline_ms": …,]
     ["priority": …]}`` -- plus ``{"op": "healthz"}`` and
     ``{"op": "shutdown"}``.  Responses carry ``"ok": true`` with
-    ``"data"``, or ``"ok": false`` with the typed ``"error"`` code --
-    a malformed line is answered, never fatal.  EOF drains and shuts
-    the router down (queued work rejected typed, like any shutdown).
+    ``"data"``, or ``"ok": false`` with the typed ``"error"`` code (and
+    its ``retry_after_s`` backpressure hint when set) -- a malformed
+    line is answered, never fatal.  EOF drains and shuts the router
+    down (queued work rejected typed, like any shutdown).
+
+    ``framed=True`` switches both directions to the length-prefixed
+    frames of :mod:`repro.launch.pool` -- the supervisor's wire format,
+    where a SIGKILL mid-write must read as truncation, not as a mangled
+    message.  ``sigterm_drain=True`` installs a SIGTERM handler that
+    drains instead of dying mid-batch: stop reading stdin, flush every
+    in-flight request, emit one final unsolicited healthz frame
+    (``"id": "__drain__"``), then return.
     """
+    from repro.launch.pool import read_frame, write_frame
 
     def reply(obj: dict) -> None:
-        outfile.write(json.dumps(obj) + "\n")
-        outfile.flush()
+        if framed:
+            write_frame(outfile, obj)
+        else:
+            outfile.write(json.dumps(obj) + "\n")
+            outfile.flush()
+
+    def error_payload(rid, e: ServiceError) -> dict:
+        obj = {"id": rid, "ok": False, "error": e.code, "msg": str(e)}
+        if e.retry_after_s is not None:
+            obj["retry_after_s"] = e.retry_after_s
+        return obj
+
+    def healthz_payload(rid, trace_baseline: int, *,
+                        final: bool = False) -> dict:
+        from repro.radon import trace_count
+        s = router.stats()
+        obj = {"id": rid, "ok": True, "verdict": s["verdict"],
+               "pid": os.getpid(),
+               "stats": {"admitted": s["admitted"],
+                         "delivered": s["delivered"],
+                         "failed": s["failed"],
+                         "rejected": sum(s["rejected"].values()),
+                         "pending": s["pending"]},
+               # steady-state retrace count: traces SINCE the worker
+               # finished its prefill (warmup itself legitimately
+               # traces) -- the pool's "warm, zero retraces" assertion
+               "retraces_since_start": trace_count() - trace_baseline,
+               "persistent": router.persistent_stats(),
+               "faults_env": os.environ.get("REPRO_FAULTS") or None,
+               "healthz": router.healthz()}
+        if final:
+            obj["final"] = True
+        return obj
 
     async def answer(rid, fut) -> None:
         try:
             out = await fut
             reply({"id": rid, "ok": True, "data": np.asarray(out).tolist()})
         except ServiceError as e:
-            reply({"id": rid, "ok": False, "error": e.code, "msg": str(e)})
+            reply(error_payload(rid, e))
         except Exception as e:                    # raw failure: surfaced
             reply({"id": rid, "ok": False, "error": "internal",
                    "msg": str(e)})
 
     async def main() -> None:
+        from repro.radon import trace_count
         await router.start()
+        trace_baseline = trace_count()
         answers: set = set()
-        while True:
-            line = await asyncio.to_thread(infile.readline)
-            if not line:
-                break
-            line = line.strip()
-            if not line:
-                continue
+        loop = asyncio.get_running_loop()
+        inq: asyncio.Queue = asyncio.Queue()
+        drained_by_sigterm = False
+
+        def pump() -> None:
+            # a daemon thread owns the blocking reads: asyncio.run
+            # would join a to_thread readline forever on drain, and a
+            # signal can't interrupt it -- a daemon thread it simply
+            # abandons.  The sentinel None is EOF (or torn frame).
             try:
-                msg = json.loads(line)
-            except ValueError:
-                reply({"ok": False, "error": "bad_json"})
-                continue
-            rid = msg.get("id")
-            op = msg.get("op", "submit")
-            if op == "healthz":
-                reply({"id": rid, "ok": True,
-                       "verdict": router.verdict(),
-                       "healthz": router.healthz()})
-            elif op == "shutdown":
-                reply({"id": rid, "ok": True, "shutdown": True})
-                break
-            elif op == "submit":
-                try:
-                    spec = {k: msg[k] for k in
-                            ("n", "shape", "dtype", "datapath")
-                            if k in msg}
-                    # the per-request dtype contract is the ROUTE's
-                    # (inverse/solve consume accumulator-dtype
-                    # projections, not images)
-                    route = router._ensure_route(spec)
-                    payload = np.asarray(
-                        msg["data"],
-                        dtype=route.service.request_dtype.name)
-                    deadline_ms = msg.get("deadline_ms")
-                    fut = router.submit_nowait(
-                        spec, payload,
-                        deadline_s=(None if deadline_ms is None
-                                    else float(deadline_ms) * 1e-3),
-                        priority=int(msg.get("priority", 0)))
-                except ServiceError as e:
-                    reply({"id": rid, "ok": False, "error": e.code,
-                           "msg": str(e)})
-                except (KeyError, TypeError, ValueError) as e:
-                    reply({"id": rid, "ok": False, "error": "bad_request",
-                           "msg": str(e)})
+                while True:
+                    if framed:
+                        msg = read_frame(infile)
+                        if msg is None:
+                            break
+                    else:
+                        line = infile.readline()
+                        if not line:
+                            break
+                        line = line.strip()
+                        if not line:
+                            continue
+                        try:
+                            msg = json.loads(line)
+                        except ValueError:
+                            msg = {"op": "__bad_json__"}
+                    loop.call_soon_threadsafe(inq.put_nowait, msg)
+            except Exception:
+                pass                   # corrupt stream reads as EOF
+            try:
+                loop.call_soon_threadsafe(inq.put_nowait, None)
+            except RuntimeError:
+                pass                   # loop already gone
+
+        def on_sigterm() -> None:
+            nonlocal drained_by_sigterm
+            drained_by_sigterm = True
+            inq.put_nowait(None)       # stop consuming stdin, drain
+
+        if sigterm_drain:
+            loop.add_signal_handler(signal.SIGTERM, on_sigterm)
+        reader = threading.Thread(target=pump, daemon=True)
+        reader.start()
+        try:
+            while True:
+                msg = await inq.get()
+                if msg is None:
+                    break
+                rid = msg.get("id")
+                op = msg.get("op", "submit")
+                if op == "__bad_json__":
+                    reply({"ok": False, "error": "bad_json"})
+                elif op == "healthz":
+                    reply(healthz_payload(rid, trace_baseline))
+                elif op == "shutdown":
+                    reply({"id": rid, "ok": True, "shutdown": True})
+                    break
+                elif op == "submit":
+                    try:
+                        spec = {k: msg[k] for k in
+                                ("n", "shape", "dtype", "datapath")
+                                if k in msg}
+                        # the per-request dtype contract is the ROUTE's
+                        # (inverse/solve consume accumulator-dtype
+                        # projections, not images)
+                        route = router._ensure_route(spec)
+                        payload = np.asarray(
+                            msg["data"],
+                            dtype=route.service.request_dtype.name)
+                        deadline_ms = msg.get("deadline_ms")
+                        fut = router.submit_nowait(
+                            spec, payload,
+                            deadline_s=(None if deadline_ms is None
+                                        else float(deadline_ms) * 1e-3),
+                            priority=int(msg.get("priority", 0)))
+                    except ServiceError as e:
+                        reply(error_payload(rid, e))
+                    except (KeyError, TypeError, ValueError) as e:
+                        reply({"id": rid, "ok": False,
+                               "error": "bad_request", "msg": str(e)})
+                    else:
+                        t = asyncio.create_task(answer(rid, fut))
+                        answers.add(t)
+                        t.add_done_callback(answers.discard)
                 else:
-                    t = asyncio.create_task(answer(rid, fut))
-                    answers.add(t)
-                    t.add_done_callback(answers.discard)
-            else:
-                reply({"id": rid, "ok": False, "error": "bad_request",
-                       "msg": f"unknown op {op!r}"})
-        if answers:
-            await asyncio.gather(*answers, return_exceptions=True)
-        await router.shutdown()
+                    reply({"id": rid, "ok": False, "error": "bad_request",
+                           "msg": f"unknown op {op!r}"})
+            if answers:
+                await asyncio.gather(*answers, return_exceptions=True)
+            await router.shutdown()
+            if drained_by_sigterm:
+                reply(healthz_payload("__drain__", trace_baseline,
+                                      final=True))
+        finally:
+            if sigterm_drain:
+                loop.remove_signal_handler(signal.SIGTERM)
 
     asyncio.run(main())

@@ -269,14 +269,19 @@ def serve_service(args):
     return results
 
 
-def _load_manifest(path):
+def _load_manifest(spec):
     """A geometry manifest: a JSON list of route specs
-    (``[{"n": 13}, {"n": 17, "datapath": "roundtrip"}, …]``)."""
-    with open(path) as f:
-        data = json.load(f)
+    (``[{"n": 13}, {"n": 17, "datapath": "roundtrip"}, …]``) -- either
+    a file path or the JSON itself (how the pool supervisor hands a
+    manifest to its worker subprocesses without temp files)."""
+    if spec.lstrip().startswith("["):
+        data = json.loads(spec)
+    else:
+        with open(spec) as f:
+            data = json.load(f)
     if not isinstance(data, list) or not all(isinstance(e, dict)
                                              for e in data):
-        raise SystemExit(f"--manifest {path} must be a JSON list of "
+        raise SystemExit(f"--manifest {spec!r} must be a JSON list of "
                          "route-spec objects")
     return data
 
@@ -284,8 +289,17 @@ def _load_manifest(path):
 def serve_jsonl_mode(args):
     """The transport worker: a prefilled ServiceRouter behind the
     newline-delimited-JSON protocol on stdin/stdout (healthz to stderr
-    at exit -- stdout belongs to the protocol)."""
+    at exit -- stdout belongs to the protocol).  ``--framed`` switches
+    to the supervisor's length-prefixed frames; ``--sigterm-drain``
+    makes SIGTERM drain (flush in-flight, final healthz) instead of
+    killing the worker mid-batch.  A ``REPRO_FAULTS`` spec in the
+    environment arms deterministic chaos inside this process."""
+    from repro.launch import faults
     from repro.launch.router import ServiceRouter, serve_jsonl
+    inj = faults.install_from_env()
+    if inj is not None:
+        print(f"[serve-jsonl] faults armed from {faults.FAULTS_ENV_VAR}: "
+              f"{inj.spec}", file=sys.stderr)
     router = ServiceRouter(
         max_batch=args.batch, max_wait_us=args.max_wait_us,
         max_services=args.max_services, queue_cap=args.queue_cap,
@@ -294,7 +308,8 @@ def serve_jsonl_mode(args):
         infos = router.prefill(_load_manifest(args.manifest))
         print(f"[serve-jsonl] prefilled {len(infos)} routes",
               file=sys.stderr)
-    serve_jsonl(router, sys.stdin, sys.stdout)
+    serve_jsonl(router, sys.stdin, sys.stdout, framed=args.framed,
+                sigterm_drain=args.sigterm_drain)
     print(router.healthz(), file=sys.stderr)
     return router
 
@@ -413,6 +428,219 @@ def serve_chaos(args):
     return outs
 
 
+def serve_pool(args):
+    """The supervised multi-process tier: spawn ``--workers`` framed
+    jsonl router subprocesses over one shared ``--aot-dir``, serve a
+    burst through the pool, verify bit-exactness against the local
+    oracle, and print the aggregated pool healthz."""
+    from repro.launch.supervisor import WorkerPool
+    rcfg = radon_smoke() if args.smoke else radon_config()
+    n = args.n or rcfg.n
+    manifest = (_load_manifest(args.manifest) if args.manifest
+                else [{"n": n}])
+    requests_n = args.requests or (16 if args.smoke else 64)
+    aot_dir = args.aot_dir or tempfile.mkdtemp(prefix="repro_pool_aot_")
+
+    rng = np.random.default_rng(0)
+    imgs = [rng.integers(0, 100, (n, n)).astype(np.int32)
+            for _ in range(requests_n)]
+    oracle_op = radon.DPRT((1, n, n), jnp.int32)
+    expected = [np.asarray(oracle_op(jnp.asarray(im[None])))[0]
+                for im in imgs]
+
+    pool = WorkerPool(args.workers, aot_dir=aot_dir, manifest=manifest,
+                      max_batch=args.batch, pending_cap=args.max_inflight)
+    with pool:
+        t_boot = time.perf_counter()
+        assert pool.wait_ready(600.0), "pool workers never became ready"
+        boot_s = time.perf_counter() - t_boot
+        t0 = time.perf_counter()
+        futs = [pool.submit({"n": n}, im) for im in imgs]
+        outs = [f.result(timeout=300) for f in futs]
+        dt = time.perf_counter() - t0
+        report = pool.healthz(probe=True)
+        print(pool.healthz_text(report))
+    exact = all(np.array_equal(np.asarray(o), e)
+                for o, e in zip(outs, expected))
+    print(f"[serve-pool] workers={args.workers} N={n} "
+          f"requests={requests_n}: {requests_n / dt:.1f} req/s "
+          f"(boot {boot_s:.1f}s), exact={exact}")
+    assert exact, "pool responses must match the local oracle"
+    return outs
+
+
+def serve_pool_chaos(args):
+    """Process-level chaos: ≥2 workers over one ``aot_dir``, one
+    SIGKILLed mid-burst, stale compile locks torn in (dead-PID lock
+    files seeded under the restarting worker), a pool flood, and
+    env-armed in-worker fault injection.  Asserts the pool invariant:
+    every admitted request delivered bit-exact against the local
+    oracle or rejected typed, pool accounting closes, verdict WARN
+    (never FAIL), and the killed worker is back -- warm, zero
+    retraces, its stolen locks cleaned up -- before the run ends."""
+    import os
+    import subprocess
+
+    from repro.checkpoint.store import _blob_path, list_blobs
+    from repro.launch.errors import QueueFull, ServiceError
+    from repro.launch.supervisor import WorkerPool
+
+    seed = args.chaos_seed
+    ns = (13,) if args.smoke else (13, 17)
+    max_batch = 4
+    manifest = [{"n": n} for n in ns]
+    requests_n = 24 if args.smoke else 48
+    workers = max(2, args.workers)
+    pending_cap = requests_n + 16
+    aot_dir = args.aot_dir or tempfile.mkdtemp(prefix="repro_poolchaos_")
+
+    # deterministic chaos INSIDE each worker, armed across the process
+    # boundary via the env seam: the first dispatch in every worker
+    # raises (the router's retry absorbs it), spec echoed in healthz
+    fault_spec = f"sites=dispatch;error_count=1;seed={seed}"
+    env = dict(os.environ, REPRO_FAULTS=fault_spec)
+
+    rng = np.random.default_rng(seed)
+
+    def oracle(n, img):
+        return np.asarray(radon.DPRT((1, n, n), jnp.int32)(
+            jnp.asarray(img[None])))[0]
+
+    traffic = []
+    for i in range(requests_n):
+        n = ns[i % len(ns)]
+        img = rng.integers(0, 100, (n, n)).astype(np.int32)
+        traffic.append((n, img, oracle(n, img)))
+    flood_img = np.zeros((ns[0], ns[0]), np.int32)
+    flood_want = oracle(ns[0], flood_img)
+
+    pool = WorkerPool(workers, aot_dir=aot_dir, manifest=manifest,
+                      max_batch=max_batch, pending_cap=pending_cap,
+                      probe_interval_s=0.5, restart_backoff_s=0.25,
+                      env=env)
+    with pool:
+        assert pool.wait_ready(600.0), "pool workers never became ready"
+
+        # -- cross-process compile coalescing: N cold workers, one
+        # shared aot_dir -> exactly one compile per unique executable,
+        # i.e. the pool-wide miss total equals the distinct blob count
+        blobs = list_blobs(aot_dir)
+        cold = pool.healthz(probe=True)
+        miss_total = sum((w["persistent"] or {}).get("misses", 0)
+                         for w in cold["workers"])
+        hit_total = sum((w["persistent"] or {}).get("hits", 0)
+                        for w in cold["workers"])
+        print(f"[pool-chaos] cold start: {len(blobs)} blobs, "
+              f"pool misses={miss_total} hits={hit_total}")
+        assert miss_total == len(blobs), \
+            (f"cross-process coalescing broken: {miss_total} compiles "
+             f"for {len(blobs)} unique executables")
+        for w in cold["workers"]:
+            assert w["faults_env"] == fault_spec, \
+                f"worker healthz must echo the fault spec, got {w}"
+
+        # -- the burst, with worker 0 SIGKILLed while it has requests
+        # in flight
+        futs = [pool.submit({"n": n}, img) for n, img, _ in traffic]
+        time.sleep(0.05)
+        killed = pool.kill_worker(0)
+        assert killed, "chaos kill found no live worker process"
+        print(f"[pool-chaos] SIGKILLed worker 0 mid-burst "
+              f"({pool.pending()} pending)")
+
+        # tear stale compile locks in under the worker that is about to
+        # restart: dead-PID lock files next to every blob -- its warm
+        # re-prefill must steal them, not deadlock on them
+        corpse = subprocess.Popen(["sleep", "0"])
+        corpse.wait()
+        for key in blobs:
+            with open(_blob_path(aot_dir, key) + ".lock", "w") as f:
+                json.dump({"pid": corpse.pid, "key": key,
+                           "time": time.time() - 3600.0}, f)
+        print(f"[pool-chaos] seeded {len(blobs)} stale dead-PID locks")
+
+        # -- flood the pool past its pending budget: typed QueueFull
+        # with a retry_after_s hint, never unbounded queueing
+        flood_futs, flood_rejects, hints = [], 0, []
+        for _ in range(pending_cap + 32):
+            try:
+                flood_futs.append(pool.submit({"n": ns[0]}, flood_img))
+            except QueueFull as e:
+                flood_rejects += 1
+                hints.append(e.retry_after_s)
+
+        exact = typed = raw = wrong = 0
+        want_list = [w for _n, _i, w in traffic] + \
+            [flood_want] * len(flood_futs)
+        for fut, want in zip(futs + flood_futs, want_list):
+            try:
+                out = fut.result(timeout=300)
+            except ServiceError:
+                typed += 1
+                continue
+            except Exception:
+                raw += 1
+                continue
+            if np.array_equal(np.asarray(out), want):
+                exact += 1
+            else:
+                wrong += 1
+        print(f"[pool-chaos] responses: exact={exact} typed={typed} "
+              f"raw={raw} wrong={wrong}; flood rejected "
+              f"{flood_rejects} with hints={hints[:3]}...")
+
+        # -- the killed worker must come back and serve, warm
+        deadline = time.monotonic() + 600.0
+        while time.monotonic() < deadline:
+            if pool.wait_ready(10.0) and \
+                    all(w.alive for w in pool._workers):
+                break
+            time.sleep(0.25)
+        final = pool.healthz(probe=True)
+        w0 = final["workers"][0]
+        assert w0["alive"] and w0["restarts"] >= 1, \
+            f"killed worker was not restarted: {w0}"
+        p0 = w0["persistent"] or {}
+        assert p0.get("misses", 0) == 0 and p0.get("hits", 0) > 0, \
+            f"restarted worker must come back warm from blobs: {p0}"
+        assert p0.get("lock_steals", 0) >= len(blobs), \
+            f"stale dead-PID locks were not stolen: {p0}"
+        locks_left = [f for f in os.listdir(aot_dir)
+                      if f.endswith(".lock")]
+        assert not locks_left, f"stolen locks not cleaned: {locks_left}"
+        # serving again, zero retraces pool-wide (every geometry warm)
+        post = [pool.submit({"n": ns[0]},
+                            rng.integers(0, 100, (ns[0], ns[0]))
+                            .astype(np.int32))
+                for _ in range(2 * workers)]
+        for f in post:
+            f.result(timeout=300)
+        final = pool.healthz(probe=True)
+        for w in final["workers"]:
+            assert w["retraces_since_start"] == 0, \
+                f"worker retraced in steady state: {w}"
+        print(pool.healthz_text(final))
+
+    # -- the invariant --------------------------------------------------
+    assert wrong == 0, "a pool response was NOT bit-exact"
+    assert raw == 0, "a worker failure escaped untyped"
+    assert pool.failed == 0, "raw failures booked in the pool ledger"
+    assert pool.pending() == 0, "the pool dropped a future"
+    assert pool.identity_ok(), "pool accounting identity does not close"
+    assert pool.workers_lost >= 1 and pool.worker_restarts >= 1, \
+        "the chaos kill did not register as a worker loss + restart"
+    assert pool.replays > 0, \
+        "killing a loaded worker must replay its in-flight requests"
+    assert flood_rejects > 0, "the flood produced no typed backpressure"
+    assert all(h is not None and h > 0 for h in hints), \
+        f"QueueFull must carry a positive retry_after_s hint: {hints[:5]}"
+    assert pool.verdict() == "WARN", \
+        f"pool chaos must degrade to WARN, got {pool.verdict()}"
+    print(f"[pool-chaos] PASS: worker lost+replayed+restarted warm, "
+          f"{exact} exact / {typed} typed, identity closed, verdict WARN")
+    return final
+
+
 def list_backends():
     cols = ("name", "priority", "batched_native", "needs_strip_rows",
             "takes_m_block", "stream", "mesh_aware", "pipeline", "dtypes",
@@ -426,7 +654,7 @@ def main(argv=None):
     # backends additionally need --mesh-shape)
     methods = ["auto"] + list(available_backends())
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", choices=["lm", "radon", "service"],
+    ap.add_argument("--mode", choices=["lm", "radon", "service", "pool"],
                     default="radon")
     ap.add_argument("--arch", default="tinyllama-1.1b")
     ap.add_argument("--smoke", action="store_true")
@@ -485,6 +713,19 @@ def main(argv=None):
                     help="--mode service: run the stdin-jsonl router "
                          "worker instead of the benchmark loop (submit/"
                          "healthz/shutdown ops; typed error codes)")
+    ap.add_argument("--framed", action="store_true",
+                    help="--jsonl: speak the supervisor's length-"
+                         "prefixed frame protocol instead of bare "
+                         "newline JSON (SIGKILL mid-write reads as "
+                         "truncation, never as a mangled message)")
+    ap.add_argument("--sigterm-drain", action="store_true",
+                    help="--jsonl: install a SIGTERM handler that "
+                         "drains (stop reading stdin, flush in-flight, "
+                         "emit a final healthz) instead of dying "
+                         "mid-batch")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="--mode pool: number of supervised router "
+                         "worker subprocesses")
     ap.add_argument("--chaos", action="store_true",
                     help="--mode service: run the fault-injection chaos "
                          "smoke (mixed geometries, injected faults, "
@@ -519,6 +760,10 @@ def main(argv=None):
         return list_backends()
     if args.mode == "lm":
         return serve_lm(args)
+    if args.mode == "pool":
+        if args.chaos:
+            return serve_pool_chaos(args)
+        return serve_pool(args)
     if args.mode == "service":
         if args.chaos:
             return serve_chaos(args)

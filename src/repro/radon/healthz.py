@@ -20,6 +20,8 @@ __all__ = ["snapshot", "report", "main"]
 
 def snapshot() -> dict:
     """The raw counter dict behind :func:`report`."""
+    import os
+
     from . import (aot_cache_info, aot_fingerprint, plan_cache_entries,
                    plan_cache_info, trace_count, trace_counts)
     # distinct plans (different knobs/mesh) can share a (shape, dtype,
@@ -36,6 +38,9 @@ def snapshot() -> dict:
         "traces_total": trace_count(),
         "traces": dict(sorted(traces.items())),
         "aot_cache": aot_cache_info(),
+        # armed chaos spec, if any (REPRO_FAULTS): echoed so "why is
+        # this worker misbehaving" is answerable from its healthz alone
+        "faults_env": os.environ.get("REPRO_FAULTS") or None,
     }
 
 
@@ -58,6 +63,8 @@ def report() -> str:
     lines.append(f"[healthz] aot_executables currsize={aot['currsize']}")
     for key in aot["keys"]:
         lines.append(f"[healthz]   aot {key}")
+    if s.get("faults_env"):
+        lines.append(f"[healthz] faults_env {s['faults_env']}")
     return "\n".join(lines)
 
 

@@ -147,16 +147,29 @@ class PersistentAOTCache:
     (torn/rotten/stale blob) -- the number a restarted service surfaces
     in ``healthz`` to say "I came up, but not warm".
 
-    Concurrent ``get_or_compile`` of the same token (two services, two
-    routers over one ``aot_dir``) is serialized per token through a
-    process-wide lock table, so a cold start under fan-out compiles each
-    executable once instead of stampeding XLA.
+    Concurrent ``get_or_compile`` of the same token is serialized at two
+    scopes: a process-wide lock table (two services, two routers in one
+    process) and a cross-process :func:`~repro.checkpoint.store.blob_lock`
+    file lock (N worker *processes* cold-starting over one ``aot_dir``).
+    A waiter re-reads the blob once it holds the file lock, so whichever
+    process compiled first publishes and everyone else restores -- one
+    compile per unique executable across the whole pool.  Lock files
+    left by SIGKILLed workers carry the holder PID and are stolen once
+    the PID is dead (``lock_steals`` counts these); a filesystem that
+    cannot do O_EXCL degrades to unlocked operation (``lock_degraded``)
+    rather than refusing to serve.
     """
 
-    def __init__(self, directory: str):
+    def __init__(self, directory: str, *, lock_stale_s: float = 120.0,
+                 lock_timeout_s: float = 600.0):
         self.directory = str(directory)
+        self.lock_stale_s = float(lock_stale_s)
+        self.lock_timeout_s = float(lock_timeout_s)
         self.hits = self.misses = self.errors = 0
         self.degraded_compiles = 0
+        self.lock_steals = 0
+        self.lock_degraded = 0
+        self.lock_wait_s = 0.0
 
     def _compile_lock(self, key: str):
         with _CACHE_LOCK:
@@ -165,7 +178,7 @@ class PersistentAOTCache:
     def get_or_compile(self, op):
         """Return the executable for any operator exposing the AOT
         surface (``RadonOperator`` and ``Conv2D`` both do)."""
-        from repro.checkpoint.store import load_blob, save_blob
+        from repro.checkpoint.store import blob_lock
         with _CACHE_LOCK:
             exe = _AOT_CACHE.get(op._aot_key())
         if exe is not None:
@@ -176,37 +189,57 @@ class PersistentAOTCache:
                 exe = _AOT_CACHE.get(op._aot_key())
             if exe is not None:
                 return exe
-            data = None
-            had_blob = False
             try:
-                data, meta = load_blob(self.directory, key)
-                had_blob = data is not None
-            except ValueError:              # torn/corrupt blob: overwrite
+                with blob_lock(self.directory, key,
+                               stale_s=self.lock_stale_s,
+                               timeout_s=self.lock_timeout_s) as lk:
+                    self.lock_steals += lk["steals"]
+                    self.lock_wait_s += lk["waited_s"]
+                    return self._restore_or_compile(op, key)
+            except OSError:                 # O_EXCL unsupported / RO dir:
+                self.lock_degraded += 1     # unlocked is worse, outage is
+                return self._restore_or_compile(op, key)   # worse still
+
+    def _restore_or_compile(self, op, key: str):
+        """Disk-restore-else-compile for ``key``; caller holds both the
+        in-process token lock and (normally) the cross-process file
+        lock, so the load here observes any blob a peer process
+        published while we waited."""
+        from repro.checkpoint.store import load_blob, save_blob
+        data = None
+        had_blob = False
+        try:
+            data, meta = load_blob(self.directory, key)
+            had_blob = data is not None
+        except ValueError:              # torn/corrupt blob: overwrite
+            self.errors += 1
+            had_blob = True
+        if data is not None \
+                and meta.get("fingerprint") == aot_fingerprint():
+            try:
+                exe = op.import_executable(data)
+                self.hits += 1
+                return exe
+            except Exception:           # undeserializable: recompile
                 self.errors += 1
-                had_blob = True
-            if data is not None \
-                    and meta.get("fingerprint") == aot_fingerprint():
-                try:
-                    exe = op.import_executable(data)
-                    self.hits += 1
-                    return exe
-                except Exception:           # undeserializable: recompile
-                    self.errors += 1
-            self.misses += 1
-            if had_blob:                    # blob existed but could not
-                self.degraded_compiles += 1  # restore: degraded cold start
-            exe = op.compile()
-            try:
-                save_blob(self.directory, key, op.export_executable(),
-                          meta={"fingerprint": aot_fingerprint()})
-            except Exception:               # read-only disk etc.: serve
-                self.errors += 1            # from memory, count it
-            return exe
+        self.misses += 1
+        if had_blob:                    # blob existed but could not
+            self.degraded_compiles += 1  # restore: degraded cold start
+        exe = op.compile()
+        try:
+            save_blob(self.directory, key, op.export_executable(),
+                      meta={"fingerprint": aot_fingerprint()})
+        except Exception:               # read-only disk etc.: serve
+            self.errors += 1            # from memory, count it
+        return exe
 
     def stats(self) -> dict:
         return {"directory": self.directory, "hits": self.hits,
                 "misses": self.misses, "errors": self.errors,
-                "degraded_compiles": self.degraded_compiles}
+                "degraded_compiles": self.degraded_compiles,
+                "lock_steals": self.lock_steals,
+                "lock_degraded": self.lock_degraded,
+                "lock_wait_s": round(self.lock_wait_s, 6)}
 
     def __repr__(self) -> str:
         return (f"PersistentAOTCache({self.directory!r}, hits={self.hits}, "

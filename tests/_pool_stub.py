@@ -1,0 +1,117 @@
+"""A jax-free framed-jsonl worker stub for WorkerPool tests.
+
+The supervisor never interprets request payloads, so an echo worker is
+enough to exercise every pool behavior (dispatch, replay, probes,
+crash, drain) without paying a ~10s jax import per subprocess on the
+single-core CI host.  The framing here is implemented independently of
+:mod:`repro.launch.pool` on purpose: the protocol has two ends, and a
+stub that imported the library would only ever test it against itself.
+
+Semantics:
+* ``submit`` replies with every payload element doubled (so tests can
+  check the answer actually went through the worker);
+* ``healthz`` replies with a healthz-shaped frame;
+* ``shutdown`` acks and exits 0.
+
+Chaos knobs (env vars):
+* ``STUB_DELAY_S``      -- sleep before answering each submit (keeps
+                           requests in flight for kill/replay tests);
+* ``STUB_EXIT_AFTER``   -- hard-exit (simulated crash) after N submit
+                           replies;
+* ``STUB_MUTE_AFTER``   -- after N replies of any kind, keep reading
+                           but stop answering (a hung worker, for the
+                           probe suspect-kill path).
+
+A submit whose message carries ``stub_error`` replies that typed error
+code instead of data (plus ``retry_after_s`` if present) -- the
+passthrough seam for typed-rejection tests.
+"""
+import json
+import os
+import sys
+import time
+
+
+def write_frame(fp, obj):
+    payload = json.dumps(obj, separators=(",", ":"))
+    fp.write(f"{len(payload)}\n{payload}\n")
+    fp.flush()
+
+
+def read_frame(fp):
+    while True:
+        header = fp.readline()
+        if not header:
+            return None
+        header = header.strip()
+        if not header:
+            continue
+        try:
+            n = int(header)
+        except ValueError:
+            continue
+        payload = fp.read(n)
+        if payload is None or len(payload) < n:
+            return None
+        fp.readline()
+        return json.loads(payload)
+
+
+def main():
+    delay_s = float(os.environ.get("STUB_DELAY_S", "0"))
+    exit_after = int(os.environ.get("STUB_EXIT_AFTER", "0"))
+    mute_after = int(os.environ.get("STUB_MUTE_AFTER", "0"))
+    replies = submits = 0
+    muted = False
+
+    def reply(obj):
+        nonlocal replies, muted
+        if mute_after and replies >= mute_after:
+            muted = True
+            return
+        write_frame(sys.stdout, obj)
+        replies += 1
+
+    while True:
+        msg = read_frame(sys.stdin)
+        if msg is None:
+            return 0
+        rid = msg.get("id")
+        op = msg.get("op", "submit")
+        if op == "healthz":
+            reply({"id": rid, "ok": True, "verdict": "OK",
+                   "pid": os.getpid(),
+                   "stats": {"admitted": submits, "delivered": submits,
+                             "failed": 0, "rejected": 0, "pending": 0},
+                   "retraces_since_start": 0,
+                   "persistent": {"hits": 0, "misses": 0, "errors": 0,
+                                  "degraded_compiles": 0,
+                                  "lock_steals": 0, "lock_degraded": 0},
+                   "faults_env": os.environ.get("REPRO_FAULTS") or None})
+        elif op == "shutdown":
+            reply({"id": rid, "ok": True, "shutdown": True})
+            return 0
+        elif op == "submit":
+            if delay_s:
+                time.sleep(delay_s)
+            if "stub_error" in msg:
+                err = {"id": rid, "ok": False,
+                       "error": msg["stub_error"],
+                       "msg": "stub-injected typed error"}
+                if "retry_after_s" in msg:
+                    err["retry_after_s"] = msg["retry_after_s"]
+                reply(err)
+            else:
+                data = msg.get("data", [])
+                doubled = [[2 * x for x in row] for row in data]
+                reply({"id": rid, "ok": True, "data": doubled})
+                submits += 1
+                if exit_after and submits >= exit_after:
+                    os._exit(17)       # simulated crash: no drain, no ack
+        else:
+            reply({"id": rid, "ok": False, "error": "bad_request",
+                   "msg": f"unknown op {op!r}"})
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -553,3 +553,62 @@ def test_chaos_burst_never_wrong_never_hangs(tmp_path):
     assert s["admitted"] == accounted
     assert router.verdict() == "WARN"
     assert "degraded" in router.healthz()
+
+
+# ---------------------------------------------------------------------------
+# backpressure hints and the framed transport (PR 10)
+# ---------------------------------------------------------------------------
+def test_queue_full_carries_retry_after_hint():
+    imgs = _imgs(N1, 12, 23)
+    router = ServiceRouter(max_batch=2, queue_cap=4, max_wait_us=200.0)
+    router.prefill([{"n": N1}])
+    outs = router.run_requests([({"n": N1}, x) for x in imgs])
+    full = [o for o in outs if isinstance(o, QueueFull)]
+    assert full
+    for e in full:       # every rejection tells the client when to retry
+        assert e.retry_after_s is not None and e.retry_after_s > 0
+    # the hint scales with queue depth: a full queue quotes at least
+    # one batch's worth of service time
+    assert max(e.retry_after_s for e in full) >= min(
+        e.retry_after_s for e in full)
+
+
+def test_serve_jsonl_framed_mode_and_healthz_payload():
+    from repro.launch.pool import read_frame, write_frame
+
+    img = _imgs(N1, 1, 24)[0]
+    want = _oracle(N1, img)
+    infile = io.StringIO()
+    for m in [{"op": "submit", "id": "a", "n": N1, "data": img.tolist()},
+              {"op": "submit", "id": "c", "n": N1, "data": img.tolist(),
+               "deadline_ms": -5.0},
+              {"op": "healthz", "id": "h"},
+              {"op": "shutdown", "id": "z"}]:
+        write_frame(infile, m)
+    infile.seek(0)
+    outfile = io.StringIO()
+    router = ServiceRouter(max_batch=2, max_wait_us=200.0)
+    router.prefill([{"n": N1}])
+    serve_jsonl(router, infile, outfile, framed=True)
+    outfile.seek(0)
+    replies = {}
+    while True:
+        msg = read_frame(outfile)
+        if msg is None:
+            break
+        replies[msg.get("id")] = msg
+    np.testing.assert_array_equal(np.asarray(replies["a"]["data"],
+                                             np.int64), want)
+    assert replies["c"]["error"] == DeadlineExceeded.code
+    h = replies["h"]
+    # the supervisor-facing healthz: a machine-readable stats block.
+    # It answers inline, while the submits may still be in flight, so
+    # only admission-time counters are deterministic here.
+    assert h["pid"] > 0
+    assert h["stats"]["admitted"] >= 1
+    assert h["stats"]["failed"] == 0
+    assert h["retraces_since_start"] == 0
+    assert set(h["persistent"]) >= {"hits", "misses", "lock_steals",
+                                    "lock_degraded"}
+    assert h["faults_env"] is None
+    assert replies["z"]["shutdown"] is True

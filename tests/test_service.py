@@ -271,9 +271,12 @@ def test_persistent_cache_corrupt_and_stale_blobs(tmp_path):
     op = radon.DPRT((2, N, N), jnp.int32)
     first = radon.PersistentAOTCache(str(tmp_path))
     first.get_or_compile(op)
-    assert first.stats() == {"directory": str(tmp_path), "hits": 0,
-                             "misses": 1, "errors": 0,
-                             "degraded_compiles": 0}
+    s = first.stats()
+    assert s["directory"] == str(tmp_path)
+    assert (s["hits"], s["misses"], s["errors"]) == (0, 1, 0)
+    assert s["degraded_compiles"] == 0
+    # uncontended cold compile: the cross-process lock engaged cleanly
+    assert s["lock_steals"] == 0 and s["lock_degraded"] == 0
 
     # torn blob on disk: counted as an error, recompiled, re-persisted
     # -- and surfaced as a DEGRADED compile (a blob existed, the
